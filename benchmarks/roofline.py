@@ -1,0 +1,77 @@
+"""Aggregate the dry-run JSON records into the §Roofline table
+(EXPERIMENTS.md). Reads experiments/dryrun/*.json produced by
+``python -m repro.launch.dryrun``."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+HBM_PER_CHIP = 16 * 1024 ** 3  # v5e
+
+
+def load_records(path="experiments/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_row(r):
+    if r["status"] == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | "
+                f"skipped: {r['reason'][:40]} | — | — |")
+    rf = r["roofline"]
+    mem = r["memory"]["peak_bytes"] / 2 ** 30
+    fits = "✅" if r["memory"]["peak_bytes"] <= HBM_PER_CHIP else "❌"
+    tag = r.get("tag") or "base"
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']*1e3:.1f} | {rf['memory_s']*1e3:.1f} "
+            f"| {rf['collective_s']*1e3:.1f} | {rf['dominant'].replace('_s','')} "
+            f"| {mem:.1f} GiB {fits} "
+            f"| {rf['useful_flops_ratio'] and round(rf['useful_flops_ratio'],3)} "
+            f"| {tag} |")
+
+
+def markdown_table(recs):
+    hdr = ("| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "
+           "| dominant | peak/chip | MODEL/HLO | variant |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr] + [fmt_row(r) for r in recs]
+    return "\n".join(lines)
+
+
+def run(csv=False, path="experiments/dryrun"):
+    recs = load_records(path)
+    out = []
+    if not recs:
+        if not csv:
+            print(f"(no dry-run records under {path}; run "
+                  f"`python -m repro.launch.dryrun` first)")
+        return [("roofline_records", 0.0, "none")]
+    if not csv:
+        print(markdown_table(recs))
+        doms = defaultdict(int)
+        for r in recs:
+            if r["status"] == "ok":
+                doms[r["roofline"]["dominant"]] += 1
+        print("\ndominant-term histogram:", dict(doms))
+    for r in recs:
+        if r["status"] != "ok":
+            out.append((f"dryrun_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0,
+                        "skipped"))
+            continue
+        rf = r["roofline"]
+        out.append((
+            f"dryrun_{r['arch']}_{r['shape']}_{r['mesh']}"
+            + (f"_{r['tag']}" if r.get("tag") else ""),
+            rf["step_time_lower_bound_s"] * 1e6,
+            f"dom={rf['dominant']};useful={rf['useful_flops_ratio']}",
+        ))
+    return out
+
+
+if __name__ == "__main__":
+    run()

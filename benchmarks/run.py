@@ -1,0 +1,59 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness (deliverable d):
+
+  bench_table1      — paper Table I (memory / round time / convergence)
+  bench_scheduling  — §V scheduling comparison (ours/FIFO/WF/optimal)
+  bench_kernels     — Pallas kernel wrappers + arithmetic-intensity deltas
+  bench_fig2        — Fig. 2 accuracy/F1-vs-time curves (real reduced run)
+  roofline          — §Roofline aggregation of the dry-run records
+
+Run all: ``PYTHONPATH=src python -m benchmarks.run``
+Skip the slow real-training bench: ``--fast``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip bench_fig2 (real federated training)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_ablations, bench_fig2, bench_kernels,
+                            bench_scheduling, bench_table1, roofline)
+    benches = [
+        ("table1", bench_table1.run),
+        ("scheduling", bench_scheduling.run),
+        ("kernels", bench_kernels.run),
+        ("roofline", roofline.run),
+    ]
+    if not args.fast:
+        benches.insert(3, ("fig2", bench_fig2.run))
+        benches.insert(4, ("ablations", bench_ablations.run))
+    if args.only:
+        benches = [(n, f) for n, f in benches if n == args.only]
+
+    rows = []
+    for name, fn in benches:
+        t0 = time.time()
+        print(f"== {name} ==", file=sys.stderr)
+        try:
+            rows.extend(fn(csv=True))
+        except Exception as e:  # report, keep going
+            rows.append((f"{name}_FAILED", 0.0, repr(e)[:120]))
+            import traceback
+            traceback.print_exc()
+        print(f"== {name} done in {time.time()-t0:.1f}s ==", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

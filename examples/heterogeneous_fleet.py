@@ -1,0 +1,46 @@
+"""Fleet-planning example: capacity-based layer partitioning (§III setup),
+Alg. 2 scheduling decisions, and the analytical memory/time reports for the
+paper's exact §V configuration — no training, instant.
+
+    PYTHONPATH=src python examples/heterogeneous_fleet.py
+"""
+from repro.configs import REGISTRY
+from repro.core.cost_model import client_step_times, makespan
+from repro.core.memory_model import client_memory, server_memory
+from repro.core.partition import assign_cuts
+from repro.core.scheduling import resolve_order
+from repro.fed.devices import LINK, PAPER_CLIENTS, PAPER_CUTS, SERVER
+
+cfg = REGISTRY["bert-base"]
+B, S = 16, 128
+
+print(f"model: {cfg.name} ({cfg.param_count()/1e6:.0f}M params)")
+print(f"{'device':22s} {'TFLOPS':>7s} {'mem':>6s} {'auto-cut':>8s} "
+      f"{'paper':>6s} {'client MB':>10s}")
+auto = assign_cuts(cfg, PAPER_CLIENTS, B, S, max_cut=4)
+for dev, a, p in zip(PAPER_CLIENTS, auto, PAPER_CUTS):
+    cm = client_memory(cfg, p, B, S) / 2 ** 20
+    print(f"{dev.name:22s} {dev.tflops:7.3f} {dev.mem_gb:5.0f}G {a:8d} "
+          f"{p:6d} {cm:10.1f}")
+
+times = [client_step_times(cfg, c, d, SERVER, LINK, B, S)
+         for c, d in zip(PAPER_CUTS, PAPER_CLIENTS)]
+print("\nper-client Eq.10 terms (ms):")
+print(f"{'device':22s} {'T^f':>8s} {'T^fc':>8s} {'T^s':>8s} {'T^bc':>8s} {'T^b':>8s}")
+for dev, t in zip(PAPER_CLIENTS, times):
+    print(f"{dev.name:22s} {t.t_f*1e3:8.2f} {t.t_fc*1e3:8.2f} "
+          f"{t.t_s*1e3:8.2f} {t.t_bc*1e3:8.2f} {t.t_b*1e3:8.2f}")
+
+print("\nscheduling (server order + step makespan):")
+for pol in ("ours", "fifo", "wf", "optimal"):
+    order = resolve_order(pol, times, PAPER_CUTS,
+                          [d.tflops for d in PAPER_CLIENTS])
+    span, _, waits = makespan(times, order)
+    names = " -> ".join(PAPER_CLIENTS[u].name.split("-")[0] for u in order)
+    print(f"  {pol:8s} {span*1e3:9.2f} ms  [{names}]")
+
+print("\nserver memory (Table I):")
+for scheme in ("sl", "sfl", "ours"):
+    r = server_memory(cfg, scheme, list(PAPER_CUTS), B, S)
+    print(f"  {scheme:5s} {r.total_mb:9.1f} MB  (params {r.params/2**20:7.1f}, "
+          f"acts {r.activations/2**20:7.1f}, adapters {r.adapters_and_opt/2**20:5.1f})")

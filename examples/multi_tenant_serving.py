@@ -1,0 +1,52 @@
+"""Multi-tenant adapter-switching serving (examples, deliverable b):
+
+Six "clients" fine-tuned their own LoRA adapters via the SFL framework; the
+edge server now SERVES all six from ONE resident base model, switching
+adapters per tenant batch — the inference-time dual of the paper's training
+memory story.
+
+    PYTHONPATH=src python examples/multi_tenant_serving.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import REGISTRY, reduced
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+cfg = reduced(REGISTRY["gemma-2b"], n_layers=2, d_model=256)
+model = build_model(cfg)
+rng = jax.random.PRNGKey(0)
+params = model.init_params(rng)
+
+# one adapter set per tenant (here: freshly randomized stand-ins for the
+# per-client adapters the SFL loop produces)
+tenants = [f"client-{i}" for i in range(6)]
+adapters = {}
+for i, t in enumerate(tenants):
+    lo = model.init_lora(jax.random.PRNGKey(100 + i))
+    adapters[t] = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(200 + i), x.shape) * 0.05,
+        lo)
+
+engine = ServingEngine(cfg, params, adapters, slots=4, cache_len=64)
+gen = np.random.default_rng(0)
+for uid in range(18):
+    engine.submit(Request(
+        uid=uid, tenant=tenants[uid % 6],
+        prompt=gen.integers(2, cfg.vocab_size, size=8).astype(np.int32),
+        max_new_tokens=12))
+
+t0 = time.time()
+done = engine.run()
+dt = time.time() - t0
+tok = sum(len(r.output) for r in done)
+print(f"served {len(done)} requests / {tok} tokens across {len(tenants)} "
+      f"tenants in {dt:.1f}s")
+print(f"decode steps: {engine.stats['decode_steps']}, "
+      f"adapter switches: {engine.stats['adapter_switches']} "
+      f"(one resident base model, zero recompiles)")
+for r in done[:3]:
+    print(f"  req {r.uid} [{r.tenant}]: {r.output.tolist()}")

@@ -1,0 +1,37 @@
+"""Quickstart: the paper's memory-efficient SFL loop in ~60 lines.
+
+Six heterogeneous simulated devices LoRA-fine-tune a (reduced) BERT on a
+CARER-like emotion task; the server holds ONE full model and switches
+per-client adapters sequentially; adapters are aggregated and re-split
+every I rounds (Eqs. 5-9); Alg. 2 orders the server queue.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs import REGISTRY, reduced
+from repro.data import make_emotion_dataset
+from repro.fed import FedRunConfig, PAPER_CLIENTS, Simulator
+
+# 1. a reduced BERT (2 layers, d=256) so the demo runs in ~a minute on CPU
+cfg = reduced(REGISTRY["bert-base"], n_layers=4, d_model=256)
+cfg = cfg.with_(vocab_size=4096, max_position=64, dtype="float32")
+
+# 2. synthetic CARER-shaped corpus, non-IID across 6 clients (Dirichlet)
+train = make_emotion_dataset(2000, seq_len=32, vocab_size=cfg.vocab_size, seed=0)
+test = make_emotion_dataset(400, seq_len=32, vocab_size=cfg.vocab_size, seed=1)
+
+# 3. the paper's §V setup: 6 devices, cuts per device capacity, Alg. 2 order
+run = FedRunConfig(scheme="ours", scheduler="ours", rounds=12, agg_interval=4,
+                   batch_size=16, seq_len=32, lr=3e-3, eval_every=4)
+sim = Simulator(cfg, PAPER_CLIENTS, cuts=[1, 1, 2, 2, 3, 3],
+                train=train, test=test, run=run)
+
+# 4. train; wall-clock on the fleet comes from the §IV analytical model
+sim.run_training(verbose=True)
+
+acc, f1 = sim.evaluate()
+mem = sim.server_memory_report()
+print(f"\nfinal: acc={acc:.4f} f1={f1:.4f}")
+print(f"simulated fleet time: {sim.sim_clock:.1f}s")
+print(f"server memory ({mem.scheme}): {mem.total_mb:.1f} MB "
+      f"(params {mem.params/2**20:.0f} + acts {mem.activations/2**20:.0f} "
+      f"+ adapters/opt {mem.adapters_and_opt/2**20:.0f})")

@@ -1,0 +1,28 @@
+"""Serving example (deliverable b): batched autoregressive decoding with the
+KV/recurrent cache across three architecture families — dense GQA (gemma),
+attention-free RWKV6, and the Mamba2+shared-attention hybrid (zamba2).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+sys.argv = [sys.argv[0]]  # run serve.main() with defaults per arch below
+
+from repro.launch import serve
+
+
+class A:
+    reduced = True
+    layers = 2
+    d_model = 256
+    batch = 4
+    prompt_len = 12
+    new_tokens = 24
+    temperature = 0.8
+    seed = 0
+
+
+for arch in ("gemma-2b", "rwkv6-3b", "zamba2-7b"):
+    args = A()
+    args.arch = arch
+    serve.run(args)

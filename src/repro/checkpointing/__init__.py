@@ -1,0 +1,4 @@
+from repro.checkpointing.checkpoint import load, save
+from repro.checkpointing.manager import CheckpointManager
+
+__all__ = ["CheckpointManager", "load", "save"]

@@ -1,0 +1,80 @@
+"""Pytree checkpointing: leaves -> zstd-compressed msgpack of raw ndarray
+buffers, structure -> path-keyed (no pickle; robust across sessions)."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+PyTree = Any
+_SEP = "\x1f"   # unit separator: never appears in our dict keys
+
+
+def _flatten(tree: PyTree):
+    flat = {}
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            for k in sorted(node.keys()):
+                walk(node[k], path + [str(k)])
+        elif isinstance(node, (list, tuple)):
+            tag = "T" if isinstance(node, tuple) else "L"
+            for i, v in enumerate(node):
+                walk(v, path + [f"{tag}{i}"])
+        else:
+            flat[_SEP.join(path)] = np.asarray(node)
+
+    walk(tree, [])
+    return flat
+
+
+def _unflatten(flat: dict) -> PyTree:
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def rebuild(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node.keys())
+        if keys and all(k[0] in "TL" and k[1:].isdigit() for k in keys):
+            seq = [rebuild(node[k]) for k in sorted(keys, key=lambda s: int(s[1:]))]
+            return tuple(seq) if keys[0][0] == "T" else seq
+        return {k: rebuild(v) for k, v in node.items()}
+
+    return rebuild(root)
+
+
+def save(path: str, tree: PyTree, level: int = 3) -> None:
+    flat = _flatten(jax.device_get(tree))
+    payload = {
+        k: {"dtype": str(v.dtype), "shape": list(v.shape), "data": v.tobytes()}
+        for k, v in flat.items()
+    }
+    raw = msgpack.packb(payload, use_bin_type=True)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(zstandard.ZstdCompressor(level=level).compress(raw))
+    os.replace(tmp, path)
+
+
+def load(path: str, as_jax: bool = True) -> PyTree:
+    with open(path, "rb") as f:
+        raw = zstandard.ZstdDecompressor().decompress(f.read())
+    payload = msgpack.unpackb(raw, raw=False)
+    flat = {}
+    for k, rec in payload.items():
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))
+        arr = arr.reshape(rec["shape"])
+        flat[k] = jnp.asarray(arr) if as_jax else arr
+    return _unflatten(flat)

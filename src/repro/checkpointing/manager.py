@@ -1,0 +1,83 @@
+"""Checkpoint manager: rotation, best-metric retention, resume.
+
+Used by the federated simulator (whole-fleet adapter/optimizer state) and
+the central trainer. Files are the zstd-msgpack pytrees of checkpoint.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Callable, Optional
+
+from repro.checkpointing.checkpoint import load, save
+
+PyTree = Any
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep_last: int = 3,
+                 keep_best: int = 1, metric_mode: str = "max"):
+        self.dir = directory
+        self.keep_last = keep_last
+        self.keep_best = keep_best
+        self.metric_mode = metric_mode
+        os.makedirs(directory, exist_ok=True)
+        self._index_path = os.path.join(directory, "index.json")
+        self._index = {"steps": {}, "best": []}
+        if os.path.exists(self._index_path):
+            with open(self._index_path) as f:
+                self._index = json.load(f)
+
+    # ------------------------------------------------------------------ io
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}.ckpt")
+
+    def _flush_index(self):
+        tmp = self._index_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self._index, f)
+        os.replace(tmp, self._index_path)
+
+    def save(self, step: int, state: PyTree,
+             metric: Optional[float] = None) -> str:
+        path = self._path(step)
+        save(path, state)
+        self._index["steps"][str(step)] = {"path": path, "metric": metric}
+        self._rotate(metric, step)
+        self._flush_index()
+        return path
+
+    def _rotate(self, metric: Optional[float], step: int):
+        # best list
+        if metric is not None:
+            best = self._index["best"]
+            best.append([metric, step])
+            rev = self.metric_mode == "max"
+            best.sort(key=lambda x: x[0], reverse=rev)
+            self._index["best"] = best[: self.keep_best]
+        protected = {s for _, s in self._index["best"]}
+        steps = sorted(int(s) for s in self._index["steps"])
+        to_keep = set(steps[-self.keep_last:]) | protected
+        for s in steps:
+            if s not in to_keep:
+                rec = self._index["steps"].pop(str(s))
+                if os.path.exists(rec["path"]):
+                    os.remove(rec["path"])
+
+    # ------------------------------------------------------------------ read
+    def latest_step(self) -> Optional[int]:
+        steps = [int(s) for s in self._index["steps"]]
+        return max(steps) if steps else None
+
+    def best_step(self) -> Optional[int]:
+        return self._index["best"][0][1] if self._index["best"] else None
+
+    def restore(self, step: Optional[int] = None) -> PyTree:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        return load(self._index["steps"][str(step)]["path"])
+
+    def all_steps(self):
+        return sorted(int(s) for s in self._index["steps"])

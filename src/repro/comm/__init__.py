@@ -1,0 +1,5 @@
+from repro.comm.quantization import (Quantized, dequantize, quantize,
+                                     quantize_with_feedback, transport_bytes)
+
+__all__ = ["Quantized", "dequantize", "quantize", "quantize_with_feedback",
+           "transport_bytes"]

@@ -1,0 +1,44 @@
+"""Config registry: the 10 assigned architectures + the paper's BERT-base."""
+from __future__ import annotations
+
+from repro.configs.base import LoRAConfig, ModelConfig, MoEConfig, SSMConfig, reduced
+from repro.configs.shapes import ASSIGNED_SHAPES, SHAPES, InputShape, get_shape
+
+from repro.configs import (  # noqa: E402
+    bert_base,
+    gemma_2b,
+    granite_3_2b,
+    granite_20b,
+    grok_1_314b,
+    internvl2_26b,
+    qwen1_5_4b,
+    qwen3_moe_30b_a3b,
+    rwkv6_3b,
+    whisper_large_v3,
+    zamba2_7b,
+)
+
+REGISTRY: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        granite_20b, gemma_2b, granite_3_2b, grok_1_314b, whisper_large_v3,
+        qwen1_5_4b, internvl2_26b, rwkv6_3b, qwen3_moe_30b_a3b, zamba2_7b,
+        bert_base,
+    )
+}
+
+ASSIGNED_ARCHS = tuple(n for n in REGISTRY if n != "bert-base")
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}") from None
+
+
+__all__ = [
+    "ASSIGNED_ARCHS", "ASSIGNED_SHAPES", "InputShape", "LoRAConfig",
+    "ModelConfig", "MoEConfig", "REGISTRY", "SHAPES", "SSMConfig",
+    "get_config", "get_shape", "reduced",
+]

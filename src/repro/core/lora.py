@@ -1,0 +1,140 @@
+"""LoRA adapter management for the split-federated framework.
+
+The paper's notation (§II):  R = {A, B} per targeted module;
+R_f^u = {R_c^u, R_s^u} is the depth-ordered full adapter list of client u
+(Eq. 5).  Our adapters live in *stacked* pytrees whose leading axis is the
+layer index, so the split at a cut point (Eq. 9) is a slice along axis 0 and
+re-assembly is a concat — exact and loss-free for heterogeneous cuts.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+# keys (per model family) holding layer-stacked, cut-splittable adapters
+STACKED_KEYS = ("layers", "enc_layers")
+# keys holding server-resident, non-splittable adapters
+SERVER_ONLY_KEYS = ("shared", "dec_layers")
+
+
+def split_lora(lora: PyTree, cut: int) -> Tuple[PyTree, PyTree]:
+    """Eq. 9: R_i -> (R_c [layers < cut], R_s [layers >= cut]).
+
+    The client part contains only the stacked prefix; the server part keeps
+    the full structure (server-only subtrees stay with the server).
+    """
+    client, server = {}, {}
+    for key, sub in lora.items():
+        if key in STACKED_KEYS:
+            client[key] = jax.tree.map(lambda a: a[:cut], sub)
+            server[key] = jax.tree.map(lambda a: a[cut:], sub)
+        else:
+            server[key] = sub
+    return client, server
+
+
+def assemble_full(client: PyTree, server: PyTree, cut: int) -> PyTree:
+    """Eq. 5: R_f^u = {R_c^u, R_s^u} — concat stacked parts at the cut."""
+    full = {}
+    for key, sub in server.items():
+        if key in STACKED_KEYS:
+            full[key] = jax.tree.map(
+                lambda c, s: jnp.concatenate([c, s], axis=0), client[key], sub)
+        else:
+            full[key] = sub
+    return full
+
+
+def embed_in_full_shape(part: PyTree, full_spec: PyTree, cut: int,
+                        side: str) -> PyTree:
+    """Place a split part back into a full-length zero tree (the execution
+    engine always indexes adapters by absolute layer id)."""
+    out = {}
+    for key, spec_sub in full_spec.items():
+        if key in STACKED_KEYS:
+            def place(spec_leaf, key=key):
+                return jnp.zeros(spec_leaf.shape, spec_leaf.dtype)
+            zeros = jax.tree.map(place, spec_sub)
+            if key in part:
+                if side == "client":
+                    out[key] = jax.tree.map(
+                        lambda z, p: jax.lax.dynamic_update_slice_in_dim(z, p.astype(z.dtype), 0, 0)
+                        if p.shape[0] else z, zeros, part[key])
+                else:
+                    out[key] = jax.tree.map(
+                        lambda z, p: jax.lax.dynamic_update_slice_in_dim(z, p.astype(z.dtype), cut, 0)
+                        if p.shape[0] else z, zeros, part[key])
+            else:
+                out[key] = zeros
+        else:
+            if key in part:
+                out[key] = part[key]
+            else:
+                out[key] = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec_sub)
+    return out
+
+
+def adapter_list(lora: PyTree):
+    """Depth-ordered flat list of (path, A, B) pairs — the paper's
+    {A_1,B_1,...,A_N,B_N} view. N = len(result)."""
+    out = []
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            if set(node.keys()) == {"a", "b"}:
+                out.append(("/".join(path), node["a"], node["b"]))
+            else:
+                for k in sorted(node.keys()):
+                    walk(node[k], path + [k])
+
+    walk(lora, [])
+    return out
+
+
+def count_adapters(lora: PyTree) -> int:
+    n = 0
+    for _, a, b in adapter_list(lora):
+        lead = a.shape[0] if a.ndim == 3 else 1   # stacked (L, r, in)
+        n += lead
+    return n
+
+
+def adapter_bytes(lora: PyTree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(lora))
+
+
+def merge_lora(params: PyTree, lora: PyTree, scale: float) -> PyTree:
+    """W' = W + scale * B A for every adapted weight (Eq. 1) — used for
+    export / merged-inference equivalence tests."""
+    def merge_into(pnode, lnode):
+        if not isinstance(lnode, dict):
+            return pnode
+        out = dict(pnode)
+        for key, lsub in lnode.items():
+            if key not in pnode:
+                continue
+            if isinstance(lsub, dict) and set(lsub.keys()) == {"a", "b"}:
+                w = pnode[key]
+                a, b = lsub["a"], lsub["b"]
+                if a.ndim == 3:   # stacked (L, r, in) x (L, out, r)
+                    delta = jnp.einsum("lor,lri->lio", b, a)
+                else:
+                    delta = jnp.einsum("or,ri->io", b, a)
+                out[key] = (w.astype(jnp.float32) + scale * delta).astype(w.dtype)
+            elif isinstance(lsub, dict):
+                out[key] = merge_into(pnode[key], lsub)
+        return out
+
+    return merge_into(params, lora)
+
+
+def zeros_like_lora(lora: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, lora)
+
+
+def slice_stack(tree: PyTree, lo: int, hi: int) -> PyTree:
+    return jax.tree.map(lambda a: a[lo:hi], tree)

@@ -1,0 +1,53 @@
+"""Capacity-based model splitting (§III setup phase).
+
+Before training, every client reports (memory, compute); the server
+replicates a client-side submodel per client — the largest prefix of blocks
+that fits the device's memory budget and keeps the client's per-step compute
+below a latency envelope — and records the cut points.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core.cost_model import DeviceProfile, layer_fwd_flops_per_token
+from repro.core.memory_model import client_memory
+
+
+def max_cut_for_memory(cfg: ModelConfig, device: DeviceProfile, batch: int,
+                       seq_len: int, mem_fraction: float = 0.5,
+                       dtype_bytes: int = 4) -> int:
+    """Largest N_c^u whose client-side footprint fits mem_fraction of RAM."""
+    budget = device.mem_gb * (1024 ** 3) * mem_fraction
+    best = 0
+    for cut in range(1, cfg.n_layers + 1):
+        if client_memory(cfg, cut, batch, seq_len, dtype_bytes) <= budget:
+            best = cut
+        else:
+            break
+    return best
+
+
+def max_cut_for_compute(cfg: ModelConfig, device: DeviceProfile, batch: int,
+                        seq_len: int, latency_budget_s: float = 30.0) -> int:
+    """Largest N_c^u whose fwd+bwd stays within the latency envelope."""
+    tokens = float(batch) * seq_len
+    per_layer = 3.0 * tokens * layer_fwd_flops_per_token(cfg, seq_len) \
+        / (device.tflops * 1e12 * device.utilization)
+    if per_layer <= 0:
+        return cfg.n_layers
+    return max(0, min(cfg.n_layers, int(latency_budget_s / per_layer)))
+
+
+def assign_cuts(cfg: ModelConfig, devices: Sequence[DeviceProfile], batch: int,
+                seq_len: int, *, min_cut: int = 1, max_cut: int | None = None,
+                mem_fraction: float = 0.5,
+                latency_budget_s: float = 30.0) -> List[int]:
+    """Per-device cut points: min(memory-feasible, compute-feasible), clamped."""
+    max_cut = max_cut if max_cut is not None else cfg.n_layers - 1
+    cuts = []
+    for dev in devices:
+        c = min(max_cut_for_memory(cfg, dev, batch, seq_len, mem_fraction),
+                max_cut_for_compute(cfg, dev, batch, seq_len, latency_budget_s))
+        cuts.append(int(min(max(c, min_cut), max_cut)))
+    return cuts

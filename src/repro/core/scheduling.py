@@ -1,0 +1,62 @@
+"""§IV training-order scheduling.
+
+Alg. 2 (ours): serve clients in descending N_c^u / C_u — the clients whose
+*client-side backward* will take longest get their activation gradients
+first, hiding client compute + downlink under the server's sequential work.
+
+Baselines (paper §V): FIFO (by activation arrival) and Workload-First
+(largest server-side workload first), plus a brute-force optimal for tests.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import List, Sequence
+
+from repro.core.cost_model import StepTimes, makespan
+
+
+def schedule_ours(n_client_layers: Sequence[int], compute: Sequence[float]) -> List[int]:
+    """Alg. 2: sort u by N_c^u / C_u descending."""
+    ratio = [n / c for n, c in zip(n_client_layers, compute)]
+    return sorted(range(len(ratio)), key=lambda u: (-ratio[u], u))
+
+
+def schedule_fifo(times: Sequence[StepTimes]) -> List[int]:
+    """First-in-first-out on activation arrival time T^f + T^fc."""
+    return sorted(range(len(times)), key=lambda u: (times[u].ready, u))
+
+
+def schedule_workload_first(times: Sequence[StepTimes]) -> List[int]:
+    """Largest server-side workload (T^s) first."""
+    return sorted(range(len(times)), key=lambda u: (-times[u].t_s, u))
+
+
+def schedule_optimal(times: Sequence[StepTimes], limit: int = 8) -> List[int]:
+    """Exhaustive min-makespan (tests / small U only)."""
+    n = len(times)
+    if n > limit:
+        raise ValueError(f"brute force capped at U={limit}")
+    best, best_order = float("inf"), list(range(n))
+    for perm in itertools.permutations(range(n)):
+        span, _, _ = makespan(times, perm)
+        if span < best - 1e-12:
+            best, best_order = span, list(perm)
+    return best_order
+
+
+SCHEDULERS = {
+    "ours": None,        # needs (n_layers, compute); see resolve_order
+    "fifo": schedule_fifo,
+    "wf": schedule_workload_first,
+    "optimal": schedule_optimal,
+}
+
+
+def resolve_order(policy: str, times: Sequence[StepTimes],
+                  n_client_layers: Sequence[int],
+                  compute: Sequence[float]) -> List[int]:
+    if policy == "ours":
+        return schedule_ours(n_client_layers, compute)
+    if policy not in SCHEDULERS:
+        raise KeyError(f"unknown scheduling policy {policy!r}")
+    return SCHEDULERS[policy](times)

@@ -1,0 +1,149 @@
+"""Algorithm 1 — the memory-efficient SFL training step, as pure JAX.
+
+The three computational pieces of one round:
+
+  client_forward   (Alg.1 l.4, Eq. 3): v_u = f(W_u, R_c^u; x_u)
+  server_step      (Alg.1 l.9-11, Eq. 4): resume at the cut on the ONE full
+                   model, update R_s^u, emit activation gradients
+  client_backward  (Alg.1 l.15): update R_c^u from the activation gradients
+
+Two execution paths, identical semantics (tested against each other):
+  * path="sliced": static cut, python loop over owned layers only — what the
+    federated simulator runs on CPU;
+  * path="scan":   masked lax.scan with a *traced* cut — the production
+    form: one compiled executable serves every client (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.optim.adamw import AdamW
+
+PyTree = Any
+
+
+def client_forward(model, params_c: PyTree, lora_c: PyTree, batch: dict,
+                   cut: int, *, path: str = "sliced"):
+    """Eq. 3. ``params_c``/``lora_c`` hold only the client's prefix when
+    path='sliced' (their stacked leaves have leading dim == cut)."""
+    v, _ = model.forward_hidden(params_c, lora_c, batch, cut=cut,
+                                side="client", path=path)
+    return v
+
+
+def client_forward_with_vjp(model, params_c: PyTree, lora_c: PyTree,
+                            batch: dict, cut: int, *, path: str = "sliced"):
+    """Returns (v, vjp_fn) where vjp_fn(dv) -> grads w.r.t. lora_c."""
+    def f(lc):
+        return client_forward(model, params_c, lc, batch, cut, path=path)
+
+    v, vjp = jax.vjp(f, lora_c)
+    return v, lambda dv: vjp(dv)[0]
+
+
+def server_loss(model, params: PyTree, lora_s: PyTree, v: jax.Array,
+                batch: dict, cut, *, path: str = "sliced"):
+    """Eq. 4 + loss: resume the full model at the cut with R_s^u."""
+    loss, logits = model.loss(params, lora_s, batch, cut=cut, side="server",
+                              path=path, x0=v)
+    return loss, logits
+
+
+def make_server_step(model, opt: AdamW, *, path: str = "sliced",
+                     static_cut: Optional[int] = None, donate: bool = True):
+    """Build the jitted server step.
+
+    signature: (params, lora_s, opt_state, v, batch, cut) ->
+               (loss, new_lora_s, new_opt_state, dv)
+
+    With path='scan' the cut is a traced int32 scalar: ONE executable per
+    (arch, batch shape) serves every client — LoRA switching is argument
+    swapping, never a recompile (the paper's server-side memory story).
+    """
+    def step(params, lora_s, opt_state, v, batch, cut):
+        def loss_fn(lo, vv):
+            loss, _ = server_loss(model, params, lo, vv, batch, cut, path=path)
+            return loss
+
+        loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1))(lora_s, v)
+        g_lora, g_v = grads
+        new_lora, new_opt = opt.update(g_lora, opt_state, lora_s)
+        return loss, new_lora, new_opt, g_v
+
+    if static_cut is not None:
+        step = functools.partial(step, cut=static_cut)
+        return jax.jit(step, donate_argnums=(1, 2) if donate else ())
+    return jax.jit(step, donate_argnums=(1, 2) if donate else ())
+
+
+def make_server_step_cls(model, opt: AdamW, *, path: str = "sliced",
+                         static_cut: Optional[int] = None):
+    """Server step for classification fine-tuning: the (new, randomly
+    initialized) classifier head trains alongside the server-side adapters.
+
+    signature: (params, lora_s, head, opt_state, v, batch[, cut]) ->
+               (loss, new_lora_s, new_head, new_opt_state, dv)
+    where opt_state is over the pytree {"lora": ..., "head": ...}.
+    """
+    def step(params, lora_s, head, opt_state, v, batch, cut):
+        def loss_fn(trainable, vv):
+            pp = dict(params)
+            pp["cls_head"] = trainable["head"]
+            loss, _ = server_loss(model, pp, trainable["lora"], vv, batch,
+                                  cut, path=path)
+            return loss
+
+        trainable = {"lora": lora_s, "head": head}
+        loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1))(trainable, v)
+        g_tr, g_v = grads
+        new_tr, new_opt = opt.update(g_tr, opt_state, trainable)
+        return loss, new_tr["lora"], new_tr["head"], new_opt, g_v
+
+    if static_cut is not None:
+        step = functools.partial(step, cut=static_cut)
+    return jax.jit(step)
+
+
+def make_client_step(model, opt: AdamW, cut: int, *, path: str = "sliced"):
+    """Build the jitted client fwd+bwd pair for a fixed (static) cut.
+
+    forward:  (params_c, lora_c, batch)              -> v
+    backward: (params_c, lora_c, opt_state, batch, dv) -> (new_lora_c, new_opt)
+    """
+    @jax.jit
+    def fwd(params_c, lora_c, batch):
+        return client_forward(model, params_c, lora_c, batch, cut, path=path)
+
+    @jax.jit
+    def bwd(params_c, lora_c, opt_state, batch, dv):
+        _, vjp_fn = client_forward_with_vjp(model, params_c, lora_c, batch,
+                                            cut, path=path)
+        g = vjp_fn(dv)
+        new_lora, new_opt = opt.update(g, opt_state, lora_c)
+        return new_lora, new_opt
+
+    return fwd, bwd
+
+
+def make_full_train_step(model, opt: AdamW, *, remat: bool = False,
+                         path: str = "scan", donate: bool = True):
+    """Centralized LoRA fine-tuning step (cut=0 oracle + production step).
+
+    signature: (params, lora, opt_state, batch) -> (loss, lora, opt_state)
+    """
+    def step(params, lora, opt_state, batch):
+        def loss_fn(lo):
+            loss, _ = model.loss(params, lo, batch, cut=0, side="full",
+                                 path=path, remat=remat)
+            return loss
+
+        loss, g = jax.value_and_grad(loss_fn)(lora)
+        new_lora, new_opt = opt.update(g, opt_state, lora)
+        return loss, new_lora, new_opt
+
+    return jax.jit(step, donate_argnums=(1, 2) if donate else ())

@@ -1,0 +1,8 @@
+from repro.data.loader import ClassificationLoader
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.synthetic import (CLASS_NAMES, N_CLASSES, EmotionDataset,
+                                  lm_batches, lm_stream, make_emotion_dataset)
+
+__all__ = ["CLASS_NAMES", "ClassificationLoader", "EmotionDataset",
+           "N_CLASSES", "dirichlet_partition", "iid_partition", "lm_batches",
+           "lm_stream", "make_emotion_dataset"]

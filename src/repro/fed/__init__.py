@@ -1,0 +1,6 @@
+from repro.fed.devices import (LINK, PAPER_CLIENTS, PAPER_CUTS, SERVER,
+                               TPU_V5E)
+from repro.fed.simulator import FedRunConfig, RoundRecord, Simulator
+
+__all__ = ["FedRunConfig", "LINK", "PAPER_CLIENTS", "PAPER_CUTS",
+           "RoundRecord", "SERVER", "Simulator", "TPU_V5E"]

@@ -1,0 +1,41 @@
+"""Classification metrics for the CARER-style evaluation (accuracy, macro-F1)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def accuracy(pred: np.ndarray, gold: np.ndarray) -> float:
+    return float((pred == gold).mean())
+
+
+def macro_f1(pred: np.ndarray, gold: np.ndarray, n_classes: int | None = None) -> float:
+    n_classes = n_classes or int(max(pred.max(), gold.max())) + 1
+    f1s = []
+    for c in range(n_classes):
+        tp = float(np.sum((pred == c) & (gold == c)))
+        fp = float(np.sum((pred == c) & (gold != c)))
+        fn = float(np.sum((pred != c) & (gold == c)))
+        if tp + fp + fn == 0:
+            continue
+        prec = tp / (tp + fp) if tp + fp else 0.0
+        rec = tp / (tp + fn) if tp + fn else 0.0
+        f1s.append(2 * prec * rec / (prec + rec) if prec + rec else 0.0)
+    return float(np.mean(f1s)) if f1s else 0.0
+
+
+def weighted_f1(pred: np.ndarray, gold: np.ndarray, n_classes: int | None = None) -> float:
+    n_classes = n_classes or int(max(pred.max(), gold.max())) + 1
+    total, acc = 0, 0.0
+    for c in range(n_classes):
+        support = int(np.sum(gold == c))
+        if not support:
+            continue
+        tp = float(np.sum((pred == c) & (gold == c)))
+        fp = float(np.sum((pred == c) & (gold != c)))
+        fn = float(np.sum((pred != c) & (gold == c)))
+        prec = tp / (tp + fp) if tp + fp else 0.0
+        rec = tp / (tp + fn) if tp + fn else 0.0
+        f1 = 2 * prec * rec / (prec + rec) if prec + rec else 0.0
+        acc += support * f1
+        total += support
+    return acc / total if total else 0.0

@@ -1,0 +1,389 @@
+"""End-to-end federated simulation of the paper's three schemes (§V):
+
+  ours : memory-efficient SFL — parallel clients, ONE full server model,
+         sequential per-client server LoRA updates, Alg. 2 scheduling,
+         Eq. 5-9 aggregation every I rounds.
+  sfl  : FedBERT-style SFL — U parallel server-side submodels.  The
+         *updates* are identical to ours (the paper reports identical
+         accuracy/rounds); what differs is server memory and round time.
+  sl   : split learning — one traveling adapter set, strictly sequential
+         clients, no aggregation.
+
+Model math runs for real in JAX (client forward, server resume-at-cut,
+activation-gradient backprop, LoRA/Adam updates, FedAvg aggregation);
+wall-clock and memory come from the §IV/§V analytical models (DESIGN.md §10).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import aggregation as agg_lib
+from repro.core import lora as lora_lib
+from repro.core import memory_model, splitfl
+from repro.core.cost_model import (DeviceProfile, LinkProfile, StepTimes,
+                                   client_step_times, lora_upload_bytes,
+                                   makespan)
+from repro.core.scheduling import resolve_order
+from repro.data import ClassificationLoader, EmotionDataset, dirichlet_partition
+from repro.fed import metrics as M
+from repro.fed.devices import LINK, SERVER
+from repro.models import build_model
+from repro.optim import AdamW
+
+SFL_FRAGMENTATION = 1.04   # multi-model GPU contention overhead (paper §V-B)
+
+
+@dataclasses.dataclass
+class FedRunConfig:
+    scheme: str = "ours"            # ours | sfl | sl
+    scheduler: str = "ours"         # ours | fifo | wf | optimal
+    rounds: int = 50
+    agg_interval: int = 5           # the paper's I
+    batch_size: int = 16
+    seq_len: int = 128
+    lr: float = 1e-5
+    alpha: float = 0.5              # dirichlet non-IID concentration
+    seed: int = 0
+    eval_every: int = 5
+    target_accuracy: Optional[float] = None   # early-stop => convergence round
+    # -- beyond-paper system knobs (EXPERIMENTS.md §Perf / ablations) --------
+    quantize_activations: bool = False   # int8+EF on the wireless links
+    participation: float = 1.0           # fraction of clients sampled per round
+    straggler_prob: float = 0.0          # per-client chance of a slow round
+    straggler_slowdown: float = 3.0      # compute slowdown when straggling
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    sim_time_s: float
+    mean_loss: float
+    accuracy: Optional[float] = None
+    f1: Optional[float] = None
+
+
+class Simulator:
+    def __init__(self, cfg: ModelConfig, devices: Sequence[DeviceProfile],
+                 cuts: Sequence[int], train: EmotionDataset,
+                 test: EmotionDataset, run: FedRunConfig,
+                 link: LinkProfile = LINK, server: DeviceProfile = SERVER):
+        assert len(devices) == len(cuts)
+        self.cfg, self.run = cfg, run
+        self.devices, self.cuts = list(devices), [int(c) for c in cuts]
+        self.link, self.server_dev = link, server
+        self.u = len(devices)
+        self.model = build_model(cfg)
+        rng = jax.random.PRNGKey(run.seed)
+        self.params = self.model.init_params(rng)
+        self.lora_spec = jax.eval_shape(self.model.init_lora, rng)
+
+        # non-IID data
+        parts = dirichlet_partition(train.labels, self.u, run.alpha, run.seed)
+        self.data_sizes = [len(p) for p in parts]
+        self.loaders = [ClassificationLoader(train.subset(p), run.batch_size,
+                                             seed=run.seed + i)
+                        for i, p in enumerate(parts)]
+        self.test = test
+
+        # per-client state
+        base_lora = self.model.init_lora(jax.random.PRNGKey(run.seed + 1))
+        self.opt = AdamW(run.lr)
+        self.client_params = []
+        self.client_lora: List = []
+        self.server_lora: List = []
+        self.heads: List = []
+        self.client_opt: List = []
+        self.server_opt: List = []
+        head0 = self.params.get("cls_head")
+        for i, cut in enumerate(self.cuts):
+            pc = dict(self.params)
+            pc["layers"] = lora_lib.slice_stack(self.params["layers"], 0, cut)
+            self.client_params.append(pc)
+            c, s = lora_lib.split_lora(base_lora, cut)
+            full_shape = lora_lib.embed_in_full_shape(s, self.lora_spec, cut, "server")
+            self.client_lora.append(c)
+            self.server_lora.append(full_shape)
+            self.heads.append(head0)
+            self.client_opt.append(self.opt.init(c))
+            self.server_opt.append(self.opt.init({"lora": full_shape, "head": head0}))
+
+        # jitted steps per distinct cut
+        self._srv_steps = {}
+        self._cli_steps = {}
+        for cut in sorted(set(self.cuts)):
+            self._srv_steps[cut] = splitfl.make_server_step_cls(
+                self.model, self.opt, path="sliced", static_cut=cut)
+            self._cli_steps[cut] = splitfl.make_client_step(
+                self.model, self.opt, cut, path="sliced")
+
+        # analytic per-step Eq.10 terms (fixed per client)
+        self.times: List[StepTimes] = [
+            client_step_times(cfg, cut, dev, server, link,
+                              run.batch_size, run.seq_len)
+            for cut, dev in zip(self.cuts, self.devices)]
+        self.history: List[RoundRecord] = []
+        self.sim_clock = 0.0
+        # beyond-paper transport/participation state
+        self._round_rng = np.random.default_rng(run.seed + 7777)
+        self._ef_residual = [None] * self.u      # uplink error feedback
+        self._active: List[int] = list(range(self.u))
+
+    # ------------------------------------------------------------------ time
+    def _adjusted_times(self) -> List[StepTimes]:
+        """Per-round Eq.10 terms: stragglers slow client compute; int8+EF
+        transport shrinks both wireless transfers ~4x."""
+        run = self.run
+        out = []
+        for u, st in enumerate(self.times):
+            t_f, t_b, t_fc, t_bc = st.t_f, st.t_b, st.t_fc, st.t_bc
+            if run.straggler_prob > 0 and \
+                    self._round_rng.random() < run.straggler_prob:
+                t_f *= run.straggler_slowdown
+                t_b *= run.straggler_slowdown
+            if run.quantize_activations:
+                from repro.comm import transport_bytes
+                shape = (run.batch_size, run.seq_len, self.cfg.d_model)
+                ratio = transport_bytes(shape, True) / transport_bytes(shape, False)
+                t_fc *= ratio
+                t_bc *= ratio
+            out.append(dataclasses.replace(st, t_f=t_f, t_b=t_b,
+                                           t_fc=t_fc, t_bc=t_bc))
+        return out
+
+    def _round_time(self, order: Sequence[int]) -> float:
+        t = self._times_this_round
+        if self.run.scheme == "ours":
+            span, _, _ = makespan(t, order)
+            return span
+        if self.run.scheme == "sfl":
+            # all participating server submodels train concurrently on one
+            # GPU: fair-share finish at max(arrival) + contended total work
+            active = [t[u] for u in self._active]
+            start = max(st.ready for st in active)
+            busy = sum(st.t_s for st in active) * SFL_FRAGMENTATION
+            return start + busy + max(st.t_bc + st.t_b for st in active)
+        if self.run.scheme == "sl":
+            # strictly sequential + client-side model handoff between clients
+            total = 0.0
+            mb = memory_model.model_bytes(self.cfg)
+            for u, st in enumerate(t):
+                handoff = self.link.transfer_s(
+                    mb.embed + self.cuts[u] * mb.per_layer)
+                total += st.ready + st.t_s + st.t_bc + st.t_b + handoff
+            return total
+        raise KeyError(self.run.scheme)
+
+    # ------------------------------------------------------------------ round
+    def run_round(self, rnd: int) -> RoundRecord:
+        run = self.run
+        self._times_this_round = self._adjusted_times()
+        # partial participation: sample the round's client cohort
+        if run.participation < 1.0 and run.scheme != "sl":
+            k = max(1, int(round(run.participation * self.u)))
+            self._active = sorted(self._round_rng.choice(
+                self.u, size=k, replace=False).tolist())
+        else:
+            self._active = list(range(self.u))
+        if run.scheme == "sl":
+            losses, order = self._round_sl()
+        else:
+            losses, order = self._round_parallel()
+        self.sim_clock += self._round_time(order)
+
+        # aggregation phase (not for SL)
+        if run.scheme in ("ours", "sfl") and (rnd + 1) % run.agg_interval == 0:
+            servers_split = [lora_lib.split_lora(self.server_lora[u], self.cuts[u])[1]
+                             for u in range(self.u)]
+            new_c, new_s, _ = agg_lib.aggregation_round(
+                self.client_lora, servers_split, self.cuts, self.data_sizes)
+            self.client_lora = new_c
+            self.server_lora = [
+                lora_lib.embed_in_full_shape(s, self.lora_spec, cut, "server")
+                for s, cut in zip(new_s, self.cuts)]
+            # heads: dataset-weighted FedAvg
+            w = np.array(self.data_sizes, np.float64)
+            w /= w.sum()
+            self.heads = [jax.tree.map(
+                lambda *hs: sum(float(wi) * h for wi, h in zip(w, hs)),
+                *self.heads)] * self.u
+            # aggregation upload/download time
+            up = max(self.link.transfer_s(lora_upload_bytes(self.cfg, cut))
+                     for cut in self.cuts)
+            self.sim_clock += 2 * up
+            # optimizer states reset to match redistributed adapters
+            self.client_opt = [self.opt.init(c) for c in self.client_lora]
+            self.server_opt = [self.opt.init({"lora": s, "head": self.heads[u]})
+                               for u, s in enumerate(self.server_lora)]
+
+        rec = RoundRecord(rnd, self.sim_clock, float(np.mean(losses)))
+        self.history.append(rec)
+        return rec
+
+    # -- round bodies ----------------------------------------------------------
+    def _round_parallel(self):
+        """ours / sfl: parallel client forwards, then (scheduled) sequential
+        per-client server updates on the single full model."""
+        run = self.run
+        batches, acts = {}, {}
+        for u in self._active:
+            batch = {k: jnp.asarray(v) for k, v in self.loaders[u].next_batch().items()}
+            batches[u] = batch
+            fwd, _ = self._cli_steps[self.cuts[u]]
+            v = fwd(self.client_params[u], self.client_lora[u], batch)
+            if run.quantize_activations:
+                # int8 + error-feedback uplink (repro/comm)
+                from repro.comm import dequantize, quantize_with_feedback
+                qx, self._ef_residual[u] = quantize_with_feedback(
+                    v, self._ef_residual[u])
+                v = dequantize(qx, v.dtype)
+            acts[u] = v
+
+        order = resolve_order(run.scheduler, self._times_this_round, self.cuts,
+                              [d.tflops for d in self.devices])
+        order = [u for u in order if u in acts]
+        losses = []
+        for u in order:
+            cut = self.cuts[u]
+            loss, new_lora, new_head, new_opt, dv = self._srv_steps[cut](
+                self.params, self.server_lora[u], self.heads[u],
+                self.server_opt[u], acts[u], batches[u])
+            self.server_lora[u] = new_lora
+            self.heads[u] = new_head
+            self.server_opt[u] = new_opt
+            losses.append(float(loss))
+            if run.quantize_activations:
+                from repro.comm import dequantize, quantize
+                dv = dequantize(quantize(dv), dv.dtype)   # downlink int8
+            _, bwd = self._cli_steps[cut]
+            self.client_lora[u], self.client_opt[u] = bwd(
+                self.client_params[u], self.client_lora[u],
+                self.client_opt[u], batches[u], dv)
+        return losses, order
+
+    def _round_sl(self):
+        """SL baseline: ONE traveling full adapter set (kept in slot 0 as a
+        full-shape tree); clients run strictly sequentially, each re-splits
+        the traveling adapters at its own cut, trains, and folds back."""
+        order = list(range(self.u))
+        losses = []
+        for u in order:
+            cut = self.cuts[u]
+            batch = {k: jnp.asarray(v) for k, v in self.loaders[u].next_batch().items()}
+            # hand-off: client receives the traveling client-side adapters
+            cli_lo, _ = lora_lib.split_lora(self.server_lora[0], cut)
+            fwd, bwd = self._cli_steps[cut]
+            v = fwd(self.client_params[u], cli_lo, batch)
+            loss, new_lora, new_head, new_opt, dv = self._srv_steps[cut](
+                self.params, self.server_lora[0], self.heads[0],
+                self.server_opt[0], v, batch)
+            self.server_lora[0] = new_lora
+            self.heads[0] = new_head
+            self.server_opt[0] = new_opt
+            losses.append(float(loss))
+            new_cli, _ = bwd(self.client_params[u], cli_lo,
+                             self.opt.init(cli_lo), batch, dv)
+            self._sl_fold_back(new_cli, cut)
+        return losses, order
+
+    def _sl_fold_back(self, client_part, cut: int):
+        """Write the client's updated prefix back into the traveling set."""
+        full = self.server_lora[0]
+        merged = {}
+        for key, sub in full.items():
+            if key in lora_lib.STACKED_KEYS and key in client_part:
+                merged[key] = jax.tree.map(
+                    lambda f, c: jnp.concatenate([c.astype(f.dtype), f[cut:]], axis=0),
+                    sub, client_part[key])
+            else:
+                merged[key] = sub
+        self.server_lora[0] = merged
+
+    # ------------------------------------------------------------------ eval
+    def evaluate(self, max_batches: int = 32):
+        """Global model = aggregate of current full adapters (ours/sfl) or the
+        traveling set (sl); evaluated centrally on the held-out set."""
+        if self.run.scheme == "sl":
+            full = self.server_lora[0]
+            head = self.heads[0]
+        else:
+            fulls = [lora_lib.assemble_full(self.client_lora[u],
+                                            lora_lib.split_lora(self.server_lora[u], self.cuts[u])[1],
+                                            self.cuts[u])
+                     for u in range(self.u)]
+            full = agg_lib.aggregate_full(fulls, self.data_sizes)
+            w = np.array(self.data_sizes, np.float64)
+            w /= w.sum()
+            head = jax.tree.map(lambda *hs: sum(float(wi) * h for wi, h in zip(w, hs)),
+                                *self.heads)
+        params = dict(self.params)
+        params["cls_head"] = head
+
+        preds, golds = [], []
+        loader = ClassificationLoader(self.test, self.run.batch_size, seed=0)
+        fn = jax.jit(lambda p, lo, b: self.model.loss(p, lo, b, path="scan")[1])
+        for i, batch in enumerate(loader.all_batches()):
+            if i >= max_batches:
+                break
+            logits = fn(params, full, {k: jnp.asarray(v) for k, v in batch.items()})
+            preds.append(np.argmax(np.asarray(logits), -1))
+            golds.append(batch["label"])
+        pred = np.concatenate(preds)
+        gold = np.concatenate(golds)
+        return M.accuracy(pred, gold), M.macro_f1(pred, gold)
+
+    # ------------------------------------------------------------------ driver
+    def run_training(self, verbose: bool = False):
+        run = self.run
+        for rnd in range(run.rounds):
+            rec = self.run_round(rnd)
+            if (rnd + 1) % run.eval_every == 0 or rnd == run.rounds - 1:
+                rec.accuracy, rec.f1 = self.evaluate()
+                if verbose:
+                    print(f"[{run.scheme}/{run.scheduler}] round {rnd+1:4d} "
+                          f"t={rec.sim_time_s:9.1f}s loss={rec.mean_loss:.4f} "
+                          f"acc={rec.accuracy:.4f} f1={rec.f1:.4f}")
+                if (run.target_accuracy is not None
+                        and rec.accuracy >= run.target_accuracy):
+                    break
+        return self.history
+
+    # ------------------------------------------------------------------ state
+    def state_dict(self) -> dict:
+        """Whole-fleet training state (adapters, heads, optimizers, clock)
+        for CheckpointManager.save / resume."""
+        return {
+            "round": np.int64(len(self.history)),
+            "sim_clock": np.float64(self.sim_clock),
+            "client_lora": self.client_lora,
+            "server_lora": self.server_lora,
+            "heads": self.heads,
+            "client_opt": [tuple(o) for o in self.client_opt],
+            "server_opt": [tuple(o) for o in self.server_opt],
+            "loader_state": np.asarray([ld.state() for ld in self.loaders],
+                                       np.int64),
+        }
+
+    def load_state_dict(self, st: dict) -> int:
+        from repro.optim import AdamWState
+        self.sim_clock = float(st["sim_clock"])
+        self.client_lora = list(st["client_lora"])
+        self.server_lora = list(st["server_lora"])
+        self.heads = list(st["heads"])
+        self.client_opt = [AdamWState(*o) for o in st["client_opt"]]
+        self.server_opt = [AdamWState(*o) for o in st["server_opt"]]
+        if "loader_state" in st:
+            for ld, s in zip(self.loaders, np.asarray(st["loader_state"])):
+                ld.restore(s)
+        return int(st["round"])
+
+    # ------------------------------------------------------------------ memory
+    def server_memory_report(self):
+        return memory_model.server_memory(
+            self.cfg, self.run.scheme, self.cuts,
+            self.run.batch_size, self.run.seq_len)

@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the compute hot-spots, each with a jit'd wrapper
+# (ops.py) and a pure-jnp oracle (ref.py), validated in interpret mode:
+#   lora_matmul     — fused base+LoRA projection (the paper's inner loop)
+#   flash_attention — online-softmax attention, probs stay in VMEM
+#   rwkv6_scan      — chunked WKV recurrence, state stays in VMEM
+#   quant           — per-row int8 activation quantization (uplink comm)
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

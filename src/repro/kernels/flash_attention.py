@@ -1,0 +1,101 @@
+"""Flash attention Pallas TPU kernel (§Perf: the dominant roofline term of
+every attention architecture at train_4k/prefill_32k is HBM traffic on the
+materialized (B,H,S,T) probability tensor — this kernel keeps score/prob
+tiles in VMEM so HBM traffic is just Q, K, V, O).
+
+Standard online-softmax blocking: grid (BH, S/bq, T/bk), KV innermost;
+running max m, normalizer l, and the output accumulator live in VMEM
+scratch across the KV sweep. Causal/sliding-window masking happens on
+position tiles so the same kernel serves train, prefill and the SWA
+long-context variant.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window, bq: int, bk: int,
+            nk: int, t_real: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    i = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                   # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                   # (bk, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < t_real
+    if causal:
+        mask = mask & (q_pos >= k_pos)
+    if window is not None:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                # (bq, 1)
+    m_new = jnp.maximum(m_prev[:, 0], s.max(axis=1))[:, None]
+    p = jnp.exp(s - m_new)                             # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)                     # (bq, 1)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)[:, None]
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "t_real", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window=None,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    t_real=None, interpret: bool = False) -> jax.Array:
+    """q: (BH, S, D); k/v: (BH, T, D) (kv already expanded to query heads).
+
+    S % bq == 0 and T % bk == 0 (callers pad; see ops.py). ``t_real`` masks
+    out padded key positions. Returns (BH, S, D) in q.dtype.
+    """
+    bh, s, d = q.shape
+    t = k.shape[1]
+    assert s % bq == 0 and t % bk == 0, (s, t, bq, bk)
+    t_real = t if t_real is None else t_real
+    scale = 1.0 / math.sqrt(d)
+    nk = t // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          bq=bq, bk=bk, nk=nk, t_real=t_real),
+        grid=(bh, s // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),   # q
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),   # k
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),   # v
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # normalizer
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

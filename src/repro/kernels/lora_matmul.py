@@ -1,0 +1,78 @@
+"""Fused base+LoRA matmul Pallas kernel — the inner loop of the paper's
+technique (every adapted projection, every layer, every client step).
+
+    y = x @ W + scale * (x @ A^T) @ B^T
+
+One pass over x in VMEM: the rank-r adapter matmuls ride along with the
+K-loop of the base matmul, so x is read from HBM once instead of twice and
+the (M, r) intermediate never round-trips to HBM.
+
+TPU mapping: grid (M/bm, N/bn, K/bk), K innermost; f32 accumulators in VMEM
+scratch; 128-aligned tiles feed the MXU; r (<=128) is zero-padded to the
+lane width by Mosaic automatically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, xa_ref, *,
+            scale: float, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xa_ref[...] = jnp.zeros_like(xa_ref)
+
+    xblk = x_ref[...]
+    acc_ref[...] += jnp.dot(xblk, w_ref[...], preferred_element_type=jnp.float32)
+    # adapter down-projection rides along the same K sweep
+    xa_ref[...] += jnp.dot(xblk, a_ref[...].T, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        up = jnp.dot(xa_ref[...], b_ref[...].T, preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + scale * up).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "bk", "interpret"))
+def lora_matmul(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array, *,
+                scale: float, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                bk: int = DEFAULT_BK, interpret: bool = False) -> jax.Array:
+    """x: (M, K); w: (K, N); a: (r, K); b: (N, r) -> (M, N).
+
+    M, N, K must be divisible by the block sizes (callers pad; see ops.py).
+    """
+    m, kdim = x.shape
+    _, n = w.shape
+    r = a.shape[0]
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (m, n, kdim)
+    nk = kdim // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),       # x
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),       # w
+            pl.BlockSpec((r, bk), lambda i, j, k: (0, k)),        # a
+            pl.BlockSpec((bn, r), lambda i, j, k: (j, 0)),        # b
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),    # base accumulator
+            pltpu.VMEM((bm, r), jnp.float32),     # x @ A^T accumulator
+        ],
+        interpret=interpret,
+    )(x, w, a, b)

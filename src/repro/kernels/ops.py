@@ -1,0 +1,114 @@
+"""Jit'd public wrappers around the Pallas kernels: shape normalization,
+padding to block multiples, CPU interpret-mode fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.lora_matmul import lora_matmul
+from repro.kernels.rwkv6_scan import wkv6
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "bk", "interpret"))
+def fused_lora_matmul(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
+                      *, scale: float, bm: int = 128, bn: int = 128,
+                      bk: int = 128, interpret: bool | None = None) -> jax.Array:
+    """y = x @ w + scale*(x@a.T)@b.T for x of shape (..., K).
+
+    Pads every dim to the block multiple, runs the fused kernel, unpads.
+    ``interpret=None`` auto-selects interpret mode off-TPU.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    *lead, kdim = x.shape
+    n = w.shape[1]
+    x2 = x.reshape(-1, kdim)
+    m = x2.shape[0]
+
+    x2 = _pad_to(_pad_to(x2, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    ap = _pad_to(a, 1, bk)
+    bp = _pad_to(b, 0, bn)
+    y = lora_matmul(x2, wp, ap, bp, scale=scale, bm=bm, bn=bn, bk=bk,
+                    interpret=interpret)
+    return y[:m, :n].reshape(*lead, n)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_apply(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array, *, chunk: int = 64,
+               interpret: bool | None = None):
+    """Model-layout wrapper. r/k/v/w: (B, S, H, D); u: (H, D).
+
+    Returns (out (B,S,H,D), final state (B,H,D,D) f32).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    bsz, s, h, d = r.shape
+
+    def to_bh(x):   # (B,S,H,D) -> (B*H, S, D)
+        return jnp.moveaxis(x, 2, 1).reshape(bsz * h, s, d)
+
+    rs, ks, vs = (_pad_to(to_bh(t), 1, chunk) for t in (r, k, v))
+    # decay must pad with ONES so padded steps leave the state untouched
+    ws = 1.0 - _pad_to(1.0 - to_bh(w), 1, chunk)
+    ub = jnp.broadcast_to(u[None], (bsz, h, d)).reshape(bsz * h, d)
+    out, sfin = wkv6(rs, ks, vs, ws, ub, chunk=chunk, interpret=interpret)
+    out = out[:, :s].reshape(bsz, h, s, d)
+    return jnp.moveaxis(out, 1, 2), sfin.reshape(bsz, h, d, d)
+
+
+# re-exported oracles (tests use these as the source of truth)
+lora_matmul_ref = ref.lora_matmul_ref
+wkv6_ref = ref.wkv6_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention_apply(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          causal: bool = True, window=None, bq: int = 128,
+                          bk: int = 128, interpret: bool | None = None):
+    """Model-layout wrapper. q: (B,S,H,D); k/v: (B,T,K,D) (GQA: K|H).
+
+    Expands KV heads to query heads, pads S/T to block multiples, runs the
+    kernel, unpads. Returns (B, S, H*D).
+    """
+    from repro.kernels.flash_attention import flash_attention
+    if interpret is None:
+        interpret = _on_cpu()
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, s, d)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * h, t, d)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * h, t, d)
+    qf = _pad_to(qf, 1, bq)
+    kf = _pad_to(kf, 1, bk)
+    vf = _pad_to(vf, 1, bk)
+    out = flash_attention(qf, kf, vf, causal=causal, window=window, bq=bq,
+                          bk=bk, t_real=t, interpret=interpret)
+    out = out[:, :s].reshape(b, h, s, d)
+    return jnp.moveaxis(out, 1, 2).reshape(b, s, h * d)
+
+
+flash_attention_ref = ref.flash_attention_ref

@@ -1,0 +1,42 @@
+"""Per-row int8 quantization as a Pallas TPU kernel — the hot loop of the
+activation-transport compression (repro/comm): every client step quantizes
+(B, S, d) activations before the uplink and the server quantizes gradients
+for the downlink. One pass over x in VMEM produces both the int8 payload
+and the f32 scales (the jnp reference makes two passes: absmax, then scale).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                 # (rows, d)
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def quantize_rows(x: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                  interpret: bool = False):
+    """x: (N, d) -> (q int8 (N, d), scale f32 (N,)). N % block_rows == 0
+    (callers pad; see ops wrapper in repro/comm)."""
+    n, d = x.shape
+    assert n % block_rows == 0, (n, block_rows)
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+                   pl.BlockSpec((block_rows,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n, d), jnp.int8),
+                   jax.ShapeDtypeStruct((n,), jnp.float32)],
+        interpret=interpret,
+    )(x)

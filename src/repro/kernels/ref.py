@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
+                    scale: float) -> jax.Array:
+    """y = x @ w + scale * (x @ a.T) @ b.T.
+
+    x: (M, K); w: (K, N); a: (r, K); b: (N, r).  f32 accumulation.
+    """
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    lo = jnp.dot(x.astype(jnp.float32), a.astype(jnp.float32).T)
+    y = y + scale * jnp.dot(lo, b.astype(jnp.float32).T)
+    return y.astype(x.dtype)
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, state: jax.Array):
+    """RWKV6 WKV recurrence oracle (time-major scan, f32).
+
+    r/k/v/w: (B, S, H, D); u: (H, D); state: (B, H, D, D).
+      out_t = r_t . (S_{t-1} + u*k_t (x) v_t)
+      S_t   = diag(w_t) S_{t-1} + k_t (x) v_t
+    Returns (out (B,S,H,D), final state).
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32) for t in (r, k, v, w))
+    s, outs = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 1), s
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window=None) -> jax.Array:
+    """Oracle for the flash kernel. q/k/v: (BH, S|T, D)."""
+    bh, s, d = q.shape
+    t = k.shape[1]
+    scores = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(d))
+    rel = jnp.arange(s)[:, None] - jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask = mask & (rel >= 0)
+    if window is not None:
+        mask = mask & (rel < window)
+    scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bst,btd->bsd", probs.astype(v.dtype), v).astype(q.dtype)

@@ -1,0 +1,83 @@
+"""RWKV6 WKV recurrence as a chunked Pallas TPU kernel.
+
+The recurrence (per batch b, head h, with state S in R^{D x D}):
+
+    out_t = r_t . (S_{t-1} + u * k_t (x) v_t)
+    S_t   = diag(w_t) S_{t-1} + k_t (x) v_t
+
+TPU adaptation (DESIGN.md §5): the GPU reference implementation keeps S in
+registers per thread; here the state lives in a VMEM scratch tile (D x D,
+f32) that persists across the time-chunk grid dimension, so HBM traffic is
+one read of (r,k,v,w) and one write of out per token — the roofline minimum.
+The time axis is chunked (grid minor dim); within a chunk a fori_loop
+performs the strictly sequential update on VMEM-resident data.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, sfin_ref, s_ref, *,
+            chunk: int, nt: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    u = u_ref[0, :]                                    # (D,)
+
+    def body(i, _):
+        rt = r_ref[0, i, :].astype(jnp.float32)        # (D,)
+        kt = k_ref[0, i, :].astype(jnp.float32)
+        vt = v_ref[0, i, :].astype(jnp.float32)
+        wt = w_ref[0, i, :].astype(jnp.float32)
+        s = s_ref[...]
+        kv = kt[:, None] * vt[None, :]                 # (D, D) outer product
+        out = jnp.sum((s + u[:, None] * kv) * rt[:, None], axis=0)
+        o_ref[0, i, :] = out.astype(o_ref.dtype)
+        s_ref[...] = wt[:, None] * s + kv
+        return 0
+
+    jax.lax.fori_loop(0, chunk, body, 0)
+
+    @pl.when(t == nt - 1)
+    def _emit_state():
+        sfin_ref[0, ...] = s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, *, chunk: int = DEFAULT_CHUNK,
+         interpret: bool = False):
+    """r/k/v/w: (BH, T, D) time-major per (batch*head); u: (BH, D).
+
+    Returns (out (BH, T, D) in r.dtype, final state (BH, D, D) f32).
+    T must be divisible by chunk (callers pad; see ops.py).
+    """
+    bh, t, d = r.shape
+    assert t % chunk == 0, (t, chunk)
+    nt = t // chunk
+
+    grid = (bh, nt)
+    seq_spec = pl.BlockSpec((1, chunk, d), lambda b, tt: (b, tt, 0))
+    out, sfin = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, nt=nt),
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, d), lambda b, tt: (b, 0))],
+        out_specs=[seq_spec,
+                   pl.BlockSpec((1, d, d), lambda b, tt: (b, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((bh, t, d), r.dtype),
+                   jax.ShapeDtypeStruct((bh, d, d), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return out, sfin

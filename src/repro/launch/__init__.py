@@ -1,0 +1,9 @@
+# Launch layer: production mesh, sharding policy, step builders, dry-run.
+# NOTE: importing this package must never touch jax device state; only
+# dryrun.py (run as __main__) forces the 512 placeholder host devices.
+from repro.launch.mesh import (dp_axes, dp_size, make_debug_mesh,
+                               make_production_mesh, model_axis_size)
+from repro.launch.sharding import ShardingPolicy
+
+__all__ = ["ShardingPolicy", "dp_axes", "dp_size", "make_debug_mesh",
+           "make_production_mesh", "model_axis_size"]

@@ -1,0 +1,249 @@
+"""Post-SPMD HLO cost extraction for the roofline analysis.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified in this
+container), which would undercount every layer-scan by ~L x.  This module
+re-derives the three roofline inputs from ``compiled.as_text()``:
+
+  * FLOPs        — every ``dot`` op: 2 * prod(result) * contracted size,
+                   scaled by the product of enclosing loop trip counts
+                   (read from XLA's ``known_trip_count`` backend config);
+  * HBM bytes    — operand+result bytes of every op at fusion boundaries
+                   (insides of fusions stay in registers/VMEM), same scaling;
+  * collective bytes — per-device wire traffic of all-gather / all-reduce /
+                   reduce-scatter / all-to-all / collective-permute with the
+                   standard ring formulas over the participant group size.
+
+All quantities are PER DEVICE (the HLO is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+"
+                     r"([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_PARAM_RE = re.compile(r"([\w.\-]+):\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]))")
+_TRIP_RE = re.compile(r'known_trip_count"?\s*:\s*\{"?n"?\s*:\s*"?(\d+)')
+_GROUPS_NEW_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# boundary opcodes whose operands/results count as HBM traffic
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "bitcast-convert", "after-all", "partition-id",
+                   "replica-id", "iota"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    opcode: str
+    result_type: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    param_types: Dict[str, str]
+    ops: List[OpInfo]
+    is_fusion: bool
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for rawline in text.splitlines():
+        line = rawline.strip()
+        if not line or line.startswith("//") or line.startswith("HloModule"):
+            continue
+        if line.endswith("{") and ("->" in line):
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                name, params = m.group(1), m.group(2)
+                ptypes = {pm.group(1): pm.group(2)
+                          for pm in _PARAM_RE.finditer(params)}
+                current = Computation(
+                    name=name, param_types=ptypes, ops=[],
+                    is_fusion=name.startswith("fused_") or ".fused" in name
+                    or name.startswith("wrapped_"))
+                comps[name] = current
+            continue
+        if line == "}" or line.startswith("}"):
+            continue
+        if current is None:
+            continue
+        m = _DEF_RE.match(line)
+        if m:
+            name, rtype, opcode, rest = m.groups()
+            operands = re.findall(r"%([\w.\-]+)", rest.split(", metadata")[0])
+            current.ops.append(OpInfo(name=name, opcode=opcode,
+                                      result_type=rtype.strip(),
+                                      operands=operands, line=line))
+    return comps
+
+
+def _symbol_table(comp: Computation) -> Dict[str, str]:
+    table = dict(comp.param_types)
+    for op in comp.ops:
+        table[op.name] = op.result_type
+    return table
+
+
+def _multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """Propagate loop trip counts through the call graph from ENTRY."""
+    entry = None
+    for name, c in comps.items():
+        if name.startswith("main") or ".main" in name or name.endswith("_spmd") \
+                and entry is None:
+            pass
+    # ENTRY is whichever computation is not referenced by any other
+    referenced = set()
+    calls: Dict[str, List[tuple]] = defaultdict(list)  # parent -> (child, mult)
+    for name, c in comps.items():
+        for op in c.ops:
+            line = op.line
+            for kw in ("body=", "condition=", "calls=", "to_apply=",
+                       "branch_computations={", "true_computation=",
+                       "false_computation="):
+                for m in re.finditer(re.escape(kw) + r"[{]?%([\w.\-]+)", line):
+                    child = m.group(1)
+                    referenced.add(child)
+                    mult = 1.0
+                    if kw in ("body=", "condition="):
+                        tm = _TRIP_RE.search(line)
+                        mult = float(tm.group(1)) if tm else 1.0
+                    calls[name].append((child, mult))
+    roots = [n for n in comps if n not in referenced]
+    mults = {n: 0.0 for n in comps}
+
+    def visit(name, m):
+        if name not in comps:
+            return
+        mults[name] += m
+        for child, cm in calls.get(name, []):
+            visit(child, m * cm)
+
+    for r in roots:
+        visit(r, 1.0)
+    return mults
+
+
+def _dot_flops(op: OpInfo, table: Dict[str, str]) -> float:
+    result_dims = _shape_dims(op.result_type)
+    if result_dims is None:
+        return 0.0
+    out = math.prod(result_dims) if result_dims else 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    lhs_type = table.get(op.operands[0]) if op.operands else None
+    if not m or lhs_type is None:
+        return 2.0 * out  # degenerate
+    lhs_dims = _shape_dims(lhs_type) or []
+    contract = 1
+    for idx in (int(i) for i in m.group(1).split(",") if i):
+        if idx < len(lhs_dims):
+            contract *= lhs_dims[idx]
+    return 2.0 * out * contract
+
+
+def _collective_bytes(op: OpInfo, table: Dict[str, str]) -> float:
+    """Per-device wire bytes with ring formulas."""
+    gsz = None
+    m = _GROUPS_NEW_RE.search(op.line)
+    if m:
+        gsz = int(m.group(2))
+    else:
+        m = _GROUPS_OLD_RE.search(op.line)
+        if m:
+            gsz = len(m.group(1).split(","))
+    if not gsz or gsz <= 1:
+        gsz = 2  # conservative
+    frac = (gsz - 1) / gsz
+    out_b = _shape_bytes(op.result_type)
+    in_b = sum(_shape_bytes(table.get(o, "")) for o in op.operands)
+    if op.opcode == "all-gather":
+        return out_b * frac
+    if op.opcode == "all-reduce":
+        return 2.0 * out_b * frac
+    if op.opcode == "reduce-scatter":
+        return in_b * frac
+    if op.opcode == "all-to-all":
+        return out_b * frac
+    if op.opcode == "collective-permute":
+        return out_b
+    return 0.0
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float               # per device
+    bytes_accessed: float      # per device, fusion-boundary traffic
+    collective_bytes: float    # per device wire bytes
+    collective_breakdown: Dict[str, float]
+    n_collectives: int
+
+
+def analyze(text: str) -> HloCosts:
+    comps = parse_hlo(text)
+    mults = _multipliers(comps)
+    flops = 0.0
+    bytes_acc = 0.0
+    coll = 0.0
+    breakdown: Dict[str, float] = defaultdict(float)
+    ncoll = 0
+    for name, comp in comps.items():
+        mult = mults.get(name, 1.0)
+        if mult == 0.0:
+            mult = 1.0  # unreachable safety
+        table = _symbol_table(comp)
+        for op in comp.ops:
+            if op.opcode in ("dot", "convolution"):
+                flops += mult * _dot_flops(op, table)
+            if op.opcode in COLLECTIVE_OPS:
+                b = mult * _collective_bytes(op, table)
+                coll += b
+                breakdown[op.opcode] += b
+                ncoll += 1
+            if not comp.is_fusion and op.opcode not in _SKIP_BYTES_OPS:
+                out_b = _shape_bytes(op.result_type)
+                in_b = sum(_shape_bytes(table.get(o, "")) for o in op.operands)
+                bytes_acc += mult * (out_b + in_b)
+    return HloCosts(flops=flops, bytes_accessed=bytes_acc,
+                    collective_bytes=coll,
+                    collective_breakdown=dict(breakdown), n_collectives=ncoll)

@@ -1,0 +1,174 @@
+"""GSPMD sharding policy: megatron-style tensor parallelism over "model",
+batch over ("pod","data"), optional FSDP weight sharding and sequence
+sharding (the §Perf knobs).
+
+All rules are path-pattern driven over the parameter pytrees produced by
+``repro.models``; dimensions index from the END of each leaf shape so the
+same rule covers stacked (L, ...) and unstacked leaves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import dp_axes
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    fsdp: bool = False            # additionally shard weights over "data"
+    seq_shard: bool = False       # shard the seq dim of hidden states over "model"
+    shard_vocab_embed: bool = True
+    shard_lora: bool = False      # adapters are tiny; replicate by default
+    moe_shard_map: bool = False   # shard_map MoE: local dispatch + combine-then-reduce
+    microbatch: int = 1           # gradient-accumulation steps (peak-memory /k)
+
+
+# (pattern, kind) — kind: "col" (shard last dim), "row" (shard dim -2),
+# "vocab" (embedding), "rep" (replicate). First match wins.
+_RULES = [
+    ("*/cm/wk", "col"), ("*/cm/wv", "row"), ("*/cm/wr", "col"),
+    ("*/tm/wr", "col"), ("*/tm/wk", "col"), ("*/tm/wv", "col"),
+    ("*/tm/wg", "col"), ("*/tm/wo", "row"), ("*/tm/*", "rep"),
+    ("*/cm/*", "rep"),
+    ("*wr_router", "rep"),
+    ("*/experts/we_u", "col"), ("*/experts/we_g", "col"),
+    ("*/experts/we_d", "row"),
+    ("*/attn/wq", "col"), ("*/attn/wk", "col"), ("*/attn/wv", "col"),
+    ("*/attn/bq", "col"), ("*/attn/bk", "col"), ("*/attn/bv", "col"),
+    ("*/attn/wo", "row"),
+    ("*/xattn/wq", "col"), ("*/xattn/wk", "col"), ("*/xattn/wv", "col"),
+    ("*/xattn/bq", "col"), ("*/xattn/bk", "col"), ("*/xattn/bv", "col"),
+    ("*/xattn/wo", "row"),
+    ("*/mlp/wu", "col"), ("*/mlp/wg", "col"), ("*/mlp/wd", "row"),
+    ("*in_proj", "col"), ("*out_proj", "row"),
+    ("embed", "vocab"), ("head", "col"), ("cls_head", "rep"),
+    ("pos_embed", "rep"), ("enc_pos", "rep"), ("proj", "rep"),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _spec_for(kind: str, ndim: int, policy: ShardingPolicy,
+              divisible_last: bool, divisible_row: bool) -> P:
+    none = [None] * ndim
+    if kind == "rep" or ndim < 2:
+        return P(*none)
+    fs = "data" if policy.fsdp else None
+    if kind == "col":
+        spec = list(none)
+        if divisible_last:
+            spec[-1] = "model"
+            spec[-2] = fs
+        return P(*spec)
+    if kind == "row":
+        spec = list(none)
+        if divisible_row:
+            spec[-2] = "model"
+            spec[-1] = fs
+        return P(*spec)
+    if kind == "vocab":
+        spec = list(none)
+        spec[0] = "model" if policy.shard_vocab_embed else None
+        spec[1] = fs
+        return P(*spec)
+    raise ValueError(kind)
+
+
+def param_shardings(cfg: ModelConfig, params_spec: PyTree, mesh: Mesh,
+                    policy: ShardingPolicy = ShardingPolicy()) -> PyTree:
+    nmodel = mesh.shape.get("model", 1)
+    ndata = mesh.shape.get("data", 1)
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        kind = "rep"
+        for pattern, k in _RULES:
+            if fnmatch.fnmatch(ps, pattern) or ps == pattern.lstrip("*/"):
+                kind = k
+                break
+        if leaf.ndim < 2:
+            kind = "rep"
+        div_last = leaf.ndim >= 1 and shape[-1] % nmodel == 0
+        div_row = leaf.ndim >= 2 and shape[-2] % nmodel == 0
+        if policy.fsdp:
+            # FSDP dim must also divide
+            if kind == "col" and leaf.ndim >= 2 and shape[-2] % ndata != 0:
+                div_row = False  # (unused for col, kept for clarity)
+            if kind == "col" and shape[-2] % ndata != 0:
+                kind_spec = _spec_for(kind, leaf.ndim, ShardingPolicy(fsdp=False), div_last, div_row)
+                return NamedSharding(mesh, kind_spec)
+            if kind == "row" and shape[-1] % ndata != 0:
+                kind_spec = _spec_for(kind, leaf.ndim, ShardingPolicy(fsdp=False), div_last, div_row)
+                return NamedSharding(mesh, kind_spec)
+            if kind == "vocab" and (shape[0] % nmodel or shape[1] % ndata):
+                return NamedSharding(mesh, P(*[None] * leaf.ndim))
+        if kind == "vocab" and shape[0] % nmodel:
+            kind = "rep"
+        return NamedSharding(mesh, _spec_for(kind, leaf.ndim, policy, div_last, div_row))
+
+    return jax.tree_util.tree_map_with_path(assign, params_spec)
+
+
+def lora_shardings(lora_spec: PyTree, mesh: Mesh,
+                   policy: ShardingPolicy = ShardingPolicy()) -> PyTree:
+    # adapters are O(r x m): replicate (they are the paper's "switchable" state)
+    return jax.tree.map(lambda l: NamedSharding(mesh, P(*[None] * l.ndim)),
+                        lora_spec)
+
+
+def batch_shardings(specs: dict, mesh: Mesh) -> dict:
+    """Input batch: shard the batch dim over the dp axes when divisible."""
+    import math
+    dp = dp_axes(mesh)
+    dp_total = math.prod(mesh.shape[a] for a in dp)
+
+    def assign_leaf(leaf, batch_dim: int):
+        spec = [None] * leaf.ndim
+        if leaf.ndim > batch_dim and leaf.shape[batch_dim] % dp_total == 0:
+            spec[batch_dim] = dp
+        return NamedSharding(mesh, P(*spec))
+
+    out = {}
+    for key, val in specs.items():
+        if key == "cache":
+            out[key] = jax.tree.map(lambda l: assign_leaf(l, 1), val)
+        elif key == "pos":
+            out[key] = NamedSharding(mesh, P())
+        else:
+            out[key] = jax.tree.map(lambda l: assign_leaf(l, 0), val)
+    return out
+
+
+def hidden_constraint(mesh: Mesh, policy: ShardingPolicy):
+    """with_sharding_constraint applied to the residual stream each layer."""
+    import math
+    dp = dp_axes(mesh)
+    dp_total = math.prod(mesh.shape[a] for a in dp)
+    nmodel = mesh.shape.get("model", 1)
+
+    def constrain(x):
+        if x.ndim == 3:
+            bspec = dp if x.shape[0] % dp_total == 0 else None
+            seq = "model" if (policy.seq_shard and x.shape[1] % nmodel == 0) else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(bspec, seq, None)))
+        return x
+
+    return constrain

@@ -1,0 +1,223 @@
+"""Step builders: jit-able, sharded train/prefill/serve steps per
+(architecture x input shape x mesh x sharding policy).
+
+These are exactly what the multi-pod dry-run lowers and what train.py /
+serve.py execute. The LoRA adapters + optimizer state are ARGUMENTS of the
+compiled executable (never baked in), so the server's per-client adapter
+switching is a buffer swap — the paper's memory-efficiency mechanism in
+XLA-native form (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.launch.mesh import dp_axes
+from repro.launch.sharding import (ShardingPolicy, batch_shardings,
+                                   hidden_constraint, lora_shardings,
+                                   param_shardings)
+from repro.models import build_model, input_specs, long_context_variant
+from repro.optim import AdamW, AdamWState
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    cfg: ModelConfig
+    fn: Callable                    # jitted step
+    args: Tuple[PyTree, ...]        # ShapeDtypeStruct stand-ins for .lower()
+    mesh: Mesh
+
+    def lower(self):
+        with self.mesh:
+            return self.fn.lower(*self.args)
+
+
+def _dp_total(mesh: Mesh) -> int:
+    return math.prod(mesh.shape[a] for a in dp_axes(mesh))
+
+
+def _total_seq(cfg: ModelConfig, shape: InputShape) -> int:
+    if cfg.family == "vlm":
+        return shape.seq_len  # vision prefix + text = assigned seq_len
+    return shape.seq_len
+
+
+def resolve_cfg(cfg: ModelConfig, shape: InputShape,
+                swa_window: int = 8192) -> ModelConfig:
+    """Apply the long-context sliding-window variant where required."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm",):
+        return long_context_variant(cfg, swa_window)
+    return cfg
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+               policy: ShardingPolicy = ShardingPolicy(), *,
+               lr: float = 1e-5, remat: bool = True,
+               donate: bool = False) -> StepBundle:
+    cfg = resolve_cfg(cfg, shape)
+    model = build_model(cfg)
+    opt = AdamW(lr)
+    dp_tot = _dp_total(mesh)
+    constrain = hidden_constraint(mesh, policy)
+
+    pspec = model.params_spec()
+    lspec = model.lora_spec()
+    p_sh = param_shardings(cfg, pspec, mesh, policy)
+    l_sh = lora_shardings(lspec, mesh, policy)
+
+    cache_len = None
+    if shape.kind == "decode":
+        cache_len = cfg.sliding_window if cfg.sliding_window else shape.seq_len
+    specs = input_specs(cfg, shape, model, cache_len=cache_len)
+    b_sh = batch_shardings(specs, mesh)
+
+    if shape.kind == "train":
+        ospec = jax.eval_shape(opt.init, lspec)
+        o_sh = AdamWState(step=NamedSharding(mesh, P()),
+                          mu=lora_shardings(ospec.mu, mesh, policy),
+                          nu=lora_shardings(ospec.nu, mesh, policy))
+
+        def batch_loss(params, lo, batch):
+            if cfg.family == "encdec":
+                loss, _ = model.loss(params, lo, batch, remat=remat)
+                return loss
+            seq_tot = _total_seq(cfg, shape)
+            ctx = model.make_ctx(seq_tot, moe_groups=dp_tot,
+                                 constrain=constrain,
+                                 moe_mesh=mesh if policy.moe_shard_map else None,
+                                 moe_dp_axes=dp_axes(mesh))
+            loss, _ = model.loss(params, lo, batch, cut=0, side="full",
+                                 path="scan", remat=remat, ctx=ctx)
+            return loss
+
+        mb = max(policy.microbatch, 1)
+        if mb > 1 and all(v.shape[0] % mb == 0 for v in jax.tree.leaves(specs)):
+            # gradient accumulation: scan over microbatches — activation
+            # peak scales with B/mb; one optimizer update per global batch
+            def step(params, lora, opt_state, batch):
+                micro = jax.tree.map(
+                    lambda v: v.reshape((mb, v.shape[0] // mb) + v.shape[1:]),
+                    batch)
+
+                def acc_fn(carry, mbatch):
+                    loss_sum, g_sum = carry
+                    loss, g = jax.value_and_grad(
+                        lambda lo: batch_loss(params, lo, mbatch))(lora)
+                    return (loss_sum + loss,
+                            jax.tree.map(jnp.add, g_sum, g)), None
+
+                g0 = jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.float32), lora)
+                (loss_sum, g), _ = jax.lax.scan(acc_fn, (jnp.float32(0.0), g0),
+                                                micro)
+                g = jax.tree.map(lambda x: x / mb, g)
+                new_lora, new_opt = opt.update(g, opt_state, lora)
+                return loss_sum / mb, new_lora, new_opt
+        else:
+            def step(params, lora, opt_state, batch):
+                loss, g = jax.value_and_grad(
+                    lambda lo: batch_loss(params, lo, batch))(lora)
+                new_lora, new_opt = opt.update(g, opt_state, lora)
+                return loss, new_lora, new_opt
+
+        fn = jax.jit(step, in_shardings=(p_sh, l_sh, o_sh, b_sh),
+                     donate_argnums=(1, 2) if donate else ())
+        args = (pspec, lspec, ospec, specs)
+        return StepBundle(shape.step_name, cfg, fn, args, mesh)
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            def step(params, lora, batch):
+                return model.prefill(params, lora, batch)
+        else:
+            seq_tot = _total_seq(cfg, shape)
+
+            def step(params, lora, batch):
+                ctx = model.make_ctx(seq_tot, moe_groups=dp_tot,
+                                     constrain=constrain,
+                                     moe_mesh=mesh if policy.moe_shard_map else None,
+                                     moe_dp_axes=dp_axes(mesh))
+                return model.prefill(params, lora, batch, ctx=ctx)
+
+        fn = jax.jit(step, in_shardings=(p_sh, l_sh, b_sh))
+        args = (pspec, lspec, specs)
+        return StepBundle(shape.step_name, cfg, fn, args, mesh)
+
+    if shape.kind == "decode":
+        c_sh = b_sh["cache"]
+        t_sh = b_sh["token"]
+        pos_sh = b_sh["pos"]
+        window = cfg.sliding_window
+
+        def step(params, lora, cache, token, pos):
+            return model.serve_step(params, lora, cache, token, pos,
+                                    window=window)
+
+        fn = jax.jit(step, in_shardings=(p_sh, l_sh, c_sh, t_sh, pos_sh),
+                     donate_argnums=(2,) if donate else ())
+        args = (pspec, lspec, specs["cache"], specs["token"], specs["pos"])
+        return StepBundle(shape.step_name, cfg, fn, args, mesh)
+
+    raise ValueError(shape.kind)
+
+
+def build_server_resume_step(cfg: ModelConfig, mesh: Mesh,
+                             policy: ShardingPolicy = ShardingPolicy(), *,
+                             batch: int, seq_len: int, lr: float = 1e-5,
+                             remat: bool = True) -> StepBundle:
+    """The paper's Alg.1 server step (Eq. 4) as a production executable:
+    resume at a TRACED cut from uploaded activations; one compiled program
+    serves every client/cut."""
+    model = build_model(cfg)
+    opt = AdamW(lr)
+    dp_tot = _dp_total(mesh)
+    constrain = hidden_constraint(mesh, policy)
+
+    pspec = model.params_spec()
+    lspec = model.lora_spec()
+    p_sh = param_shardings(cfg, pspec, mesh, policy)
+    l_sh = lora_shardings(lspec, mesh, policy)
+    ospec = jax.eval_shape(opt.init, lspec)
+    o_sh = AdamWState(step=NamedSharding(mesh, P()),
+                      mu=lora_shardings(ospec.mu, mesh, policy),
+                      nu=lora_shardings(ospec.nu, mesh, policy))
+
+    sds = jax.ShapeDtypeStruct
+    act = jnp.dtype(cfg.dtype)
+    v_spec = sds((batch, seq_len, cfg.d_model), act)
+    if cfg.n_classes:
+        bspec = {"tokens": sds((batch, seq_len), jnp.int32),
+                 "label": sds((batch,), jnp.int32)}
+    else:
+        bspec = {"tokens": sds((batch, seq_len), jnp.int32),
+                 "targets": sds((batch, seq_len), jnp.int32)}
+    cut_spec = sds((), jnp.int32)
+    dp = dp_axes(mesh)
+    v_sh = NamedSharding(mesh, P(dp if batch % dp_tot == 0 else None, None, None))
+    b_sh = batch_shardings(bspec, mesh)
+
+    def step(params, lora, opt_state, v, batch_d, cut):
+        ctx = model.make_ctx(seq_len, moe_groups=dp_tot, constrain=constrain)
+
+        def loss_fn(lo, vv):
+            loss, _ = model.loss(params, lo, batch_d, cut=cut, side="server",
+                                 path="scan", remat=remat, ctx=ctx, x0=vv)
+            return loss
+
+        loss, (g_lora, g_v) = jax.value_and_grad(loss_fn, argnums=(0, 1))(lora, v)
+        new_lora, new_opt = opt.update(g_lora, opt_state, lora)
+        return loss, new_lora, new_opt, g_v
+
+    fn = jax.jit(step, in_shardings=(p_sh, l_sh, o_sh, v_sh, b_sh,
+                                     NamedSharding(mesh, P())))
+    args = (pspec, lspec, ospec, v_spec, bspec, cut_spec)
+    return StepBundle("server_resume_step", cfg, fn, args, mesh)

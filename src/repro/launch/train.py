@@ -1,0 +1,111 @@
+"""End-to-end training driver.
+
+Two modes:
+  * ``--mode central``: centralized LoRA fine-tuning of ``--arch`` on a
+    synthetic LM stream (the e2e example driver; runs for real on CPU with
+    ``--reduced``, or lowers the full config when combined with dryrun).
+  * ``--mode sfl``: the paper's memory-efficient split-federated loop with
+    the heterogeneous device fleet of §V (BERT-family classification).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpointing import save as save_ckpt
+from repro.configs import get_config, reduced
+from repro.core.splitfl import make_full_train_step
+from repro.data import lm_batches, lm_stream, make_emotion_dataset
+from repro.fed import FedRunConfig, PAPER_CLIENTS, PAPER_CUTS, Simulator
+from repro.models import build_model
+from repro.optim import AdamW
+
+
+def run_central(args):
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg, n_layers=args.layers, d_model=args.d_model)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(args.seed)
+    params = model.init_params(rng)
+    lora = model.init_lora(jax.random.fold_in(rng, 1))
+    opt = AdamW(args.lr)
+    opt_state = opt.init(lora)
+    step_fn = make_full_train_step(model, opt, remat=False, path="scan")
+
+    stream = lm_stream(200_000, cfg.vocab_size, seed=args.seed)
+    batches = lm_batches(stream, args.batch, args.seq, seed=args.seed)
+    t0 = time.time()
+    losses = []
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        loss, lora, opt_state = step_fn(params, lora, opt_state, batch)
+        losses.append(float(loss))
+        if (step + 1) % args.log_every == 0:
+            dt = time.time() - t0
+            print(f"step {step+1:5d} loss={np.mean(losses[-args.log_every:]):.4f} "
+                  f"({dt/ (step+1):.3f}s/step)")
+    if args.ckpt:
+        save_ckpt(args.ckpt, {"lora": lora, "opt": tuple(opt_state)})
+        print(f"saved adapters to {args.ckpt}")
+    print(f"final loss {np.mean(losses[-10:]):.4f} "
+          f"(first-10 {np.mean(losses[:10]):.4f})")
+    return losses
+
+
+def run_sfl(args):
+    cfg = get_config("bert-base")
+    if args.reduced:
+        cfg = reduced(cfg, n_layers=args.layers, d_model=args.d_model)
+        cfg = cfg.with_(vocab_size=4096, max_position=max(args.seq, 64))
+    train = make_emotion_dataset(args.n_train, seq_len=args.seq,
+                                 vocab_size=cfg.vocab_size, seed=args.seed)
+    test = make_emotion_dataset(args.n_train // 5, seq_len=args.seq,
+                                vocab_size=cfg.vocab_size, seed=args.seed + 1)
+    cuts = list(PAPER_CUTS)
+    if args.reduced:  # clamp cuts to the reduced depth
+        cuts = [min(c, cfg.n_layers - 1) for c in cuts]
+    run = FedRunConfig(scheme=args.scheme, scheduler=args.scheduler,
+                       rounds=args.steps, agg_interval=args.agg_interval,
+                       batch_size=args.batch, seq_len=args.seq, lr=args.lr,
+                       eval_every=args.log_every, seed=args.seed)
+    sim = Simulator(cfg, PAPER_CLIENTS, cuts, train, test, run)
+    sim.run_training(verbose=True)
+    rep = sim.server_memory_report()
+    print(f"[{args.scheme}] simulated time {sim.sim_clock:.1f}s  "
+          f"server memory {rep.total_mb:.1f} MB")
+    return sim
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", choices=("central", "sfl"), default="central")
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--scheme", default="ours", choices=("ours", "sfl", "sl"))
+    ap.add_argument("--scheduler", default="ours",
+                    choices=("ours", "fifo", "wf", "optimal"))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--agg-interval", type=int, default=5)
+    ap.add_argument("--n-train", type=int, default=2000)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+    if args.mode == "central":
+        run_central(args)
+    else:
+        run_sfl(args)
+
+
+if __name__ == "__main__":
+    main()

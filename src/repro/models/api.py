@@ -1,0 +1,79 @@
+"""Unified model construction + ShapeDtypeStruct input specs for dry-runs."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models.decoder import DecoderModel
+from repro.models.encdec import EncDecModel
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return EncDecModel(cfg)
+    return DecoderModel(cfg)
+
+
+def supports_decode(cfg: ModelConfig) -> bool:
+    # encoder-only models (bert) have no decode step
+    return cfg.family != "encoder"
+
+
+def supports_long_context(cfg: ModelConfig) -> bool:
+    """Native sub-quadratic (recurrent) families; dense/moe/vlm need the
+    sliding-window variant; whisper enc-dec has no 500k decode at all."""
+    return cfg.family in ("ssm", "hybrid")
+
+
+def long_context_variant(cfg: ModelConfig, window: int = 8192) -> ModelConfig:
+    """Sliding-window variant used for long_500k on attention families."""
+    if cfg.family in ("ssm",):
+        return cfg
+    return cfg.with_(sliding_window=window)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, model=None,
+                cache_len: Optional[int] = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the given step.
+
+    No device allocation; shardable; weak-type correct (int32 tokens,
+    activation-dtype embeddings).
+    """
+    model = model or build_model(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind == "train":
+        if cfg.family == "encoder":
+            return {"tokens": sds((b, s), i32), "label": sds((b,), i32)}
+        if cfg.family == "encdec":
+            return {"frames": sds((b, cfg.encoder_seq, cfg.d_model), act),
+                    "tokens": sds((b, s), i32), "targets": sds((b, s), i32)}
+        if cfg.family == "vlm":
+            st = s - cfg.n_vision_tokens
+            return {"vision_embeds": sds((b, cfg.n_vision_tokens, cfg.vision_embed_dim), act),
+                    "tokens": sds((b, st), i32), "targets": sds((b, st), i32)}
+        return {"tokens": sds((b, s), i32), "targets": sds((b, s), i32)}
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"frames": sds((b, cfg.encoder_seq, cfg.d_model), act),
+                    "tokens": sds((b, s), i32)}
+        if cfg.family == "vlm":
+            return {"vision_embeds": sds((b, cfg.n_vision_tokens, cfg.vision_embed_dim), act),
+                    "tokens": sds((b, s - cfg.n_vision_tokens), i32)}
+        return {"tokens": sds((b, s), i32)}
+
+    if shape.kind == "decode":
+        clen = cache_len if cache_len is not None else (
+            cfg.sliding_window if cfg.sliding_window else s)
+        cache = model.cache_spec(b, clen)
+        return {"cache": cache, "token": sds((b, 1), i32),
+                "pos": sds((), i32)}
+    raise ValueError(shape.kind)

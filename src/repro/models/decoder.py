@@ -1,0 +1,411 @@
+"""Single-stack model assembly for dense / moe / ssm / hybrid / vlm / encoder
+families, with the paper's split-execution support built in:
+
+* ``side="full" | "client" | "server"`` with a (possibly traced) ``cut``
+  selects which layers actually execute.
+* the ``scan`` path (production): masked ``lax.scan`` over stacked layer
+  params — one compiled executable for every cut point (DESIGN.md §4);
+* the ``sliced`` path (federated simulator / oracle): a python loop over
+  exactly the owned layers — bit-identical semantics, used to validate the
+  masked scan and to run real heterogeneous-client training on CPU.
+
+Params layout:
+    {"embed": (V,d), ["pos_embed": (P,d)], "layers": <stacked (L,...)>,
+     ["shared": <dense block>]  (hybrid), ["proj": (Dv,d)] (vlm),
+     "final_norm": {...}, ["head": (d,V) | "cls_head": (d,n_classes)]}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as B
+from repro.models import layers as L
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# LoRA tree construction (generic over block param structure)
+# ---------------------------------------------------------------------------
+
+def build_lora_tree(rng: Array, params_one_layer: PyTree, targets, rank: int) -> PyTree:
+    """Mirror 2-D (in,out) leaves whose key is in ``targets`` with {a,b} pairs."""
+    out = {}
+    idx = 0
+
+    def walk(node, dst):
+        nonlocal idx
+        for key, val in node.items():
+            if isinstance(val, dict):
+                child: dict = {}
+                walk(val, child)
+                if child:
+                    dst[key] = child
+            elif key in targets and hasattr(val, "ndim") and val.ndim == 2:
+                dst[key] = L.lora_init(jax.random.fold_in(rng, idx),
+                                       val.shape[0], val.shape[1], rank)
+                idx += 1
+
+    walk(params_one_layer, out)
+    return out
+
+
+def _run_mask(side: str, idx, cut):
+    if side == "full":
+        return jnp.bool_(True)
+    if side == "client":
+        return idx < cut
+    if side == "server":
+        return idx >= cut
+    raise ValueError(side)
+
+
+def _where_tree(pred, a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+class DecoderModel:
+    """Functional model namespace; all methods are pure."""
+
+    def __init__(self, cfg: ModelConfig):
+        if cfg.family not in ("dense", "moe", "ssm", "hybrid", "vlm", "encoder"):
+            raise ValueError(f"DecoderModel does not handle family {cfg.family}")
+        self.cfg = cfg
+        self.block = B.get_block(cfg)
+
+    # -- init ---------------------------------------------------------------
+    def init_params(self, rng: Array) -> PyTree:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        keys = jax.random.split(rng, 8)
+        p: dict = {"embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt)}
+        if cfg.positional == "learned":
+            p["pos_embed"] = L.embed_init(keys[1], cfg.max_position, cfg.d_model, dt)
+        layer_rngs = jax.random.split(keys[2], cfg.n_layers)
+        p["layers"] = jax.vmap(lambda r: self.block["init"](r, cfg))(layer_rngs)
+        if cfg.family == "hybrid":
+            p["shared"] = B.dense_init(keys[3], cfg)
+        if cfg.family == "vlm":
+            p["proj"] = L.dense_init(keys[4], cfg.vision_embed_dim, cfg.d_model, dt)
+        p["final_norm"] = L.init_norm(cfg)
+        if cfg.n_classes:
+            p["cls_head"] = L.dense_init(keys[5], cfg.d_model, cfg.n_classes, jnp.float32)
+        elif not cfg.tie_embeddings:
+            p["head"] = L.dense_init(keys[6], cfg.d_model, cfg.vocab_size, dt)
+        return p
+
+    def init_lora(self, rng: Array) -> PyTree:
+        cfg = self.cfg
+        one = jax.eval_shape(lambda r: self.block["init"](r, cfg),
+                             jax.random.PRNGKey(0))
+        # materialize a single-layer param skeleton cheaply for shape walking
+        one = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), one)
+        k1, k2 = jax.random.split(rng)
+        layer_rngs = jax.random.split(k1, cfg.n_layers)
+        stacked = jax.vmap(
+            lambda r: build_lora_tree(r, one, cfg.lora.targets, cfg.lora.rank)
+        )(layer_rngs)
+        lora: dict = {"layers": stacked}
+        if cfg.family == "hybrid":
+            shared_one = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype),
+                jax.eval_shape(lambda r: B.dense_init(r, cfg), jax.random.PRNGKey(0)))
+            lora["shared"] = build_lora_tree(k2, shared_one, cfg.lora.targets, cfg.lora.rank)
+        return lora
+
+    def params_spec(self) -> PyTree:
+        return jax.eval_shape(self.init_params, jax.random.PRNGKey(0))
+
+    def lora_spec(self) -> PyTree:
+        return jax.eval_shape(self.init_lora, jax.random.PRNGKey(0))
+
+    # -- embedding / head -----------------------------------------------------
+    def embed(self, params: PyTree, batch: dict, pos_offset=0) -> Array:
+        cfg = self.cfg
+        if cfg.embed_impl == "onehot":
+            # sharding-friendly: the contraction over the vocab-sharded dim
+            # stays local + one psum, instead of SPMD's gather fallback
+            # ("involuntary full rematerialization" — EXPERIMENTS §Dry-run)
+            oh = jax.nn.one_hot(batch["tokens"], cfg.vocab_size,
+                                dtype=params["embed"].dtype)
+            x = jnp.einsum("bsv,vd->bsd", oh, params["embed"])
+        else:
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            vis = jnp.einsum("bnd,de->bne", batch["vision_embeds"].astype(x.dtype),
+                             params["proj"].astype(x.dtype))
+            x = jnp.concatenate([vis, x], axis=1)
+        if cfg.positional == "learned":
+            s = x.shape[1]
+            pos = jnp.arange(s) + pos_offset
+            x = x + jnp.take(params["pos_embed"], pos, axis=0)
+        return x
+
+    def unembed(self, params: PyTree, x: Array) -> Array:
+        cfg = self.cfg
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        if cfg.n_classes:
+            return x[:, 0, :].astype(jnp.float32) @ params["cls_head"]  # CLS pool
+        w = params["embed"].T if cfg.tie_embeddings else params["head"]
+        return jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+
+    # -- context ----------------------------------------------------------------
+    def make_ctx(self, seq_len: int, *, moe_groups: int = 1, constrain=None,
+                 window: Optional[int] = None, positions: Optional[Array] = None,
+                 moe_mesh=None, moe_dp_axes=("data",)) -> dict:
+        cfg = self.cfg
+        if positions is None:
+            positions = jnp.arange(seq_len, dtype=jnp.int32)
+        return {
+            "positions": positions,
+            "causal": cfg.causal,
+            "window": window if window is not None else cfg.sliding_window,
+            "moe_groups": moe_groups or 1,
+            "moe_dense_fallback": False,
+            "constrain": constrain or (lambda x: x),
+            "moe_mesh": moe_mesh,
+            "moe_dp_axes": moe_dp_axes,
+        }
+
+    # -- backbone: masked scan path -------------------------------------------
+    def _scan_layers(self, params, lora, x, ctx, cut, side, *, remat=False,
+                     mode="train", cache=None, pos=None):
+        """Run the stacked layers. mode train|prefill|decode.
+        Returns (x, aux, new_cache_or_None)."""
+        cfg = self.cfg
+        block = self.block
+        lora_layers = (lora or {}).get("layers", {})
+        constrain = ctx["constrain"]
+        nl = cfg.n_layers
+
+        if mode == "train":
+            def body(carry, xs):
+                h, aux = carry
+                p_l, lo_l, idx = xs
+                y, a = block["train"](cfg, p_l, lo_l, h, ctx)
+                run = _run_mask(side, idx, cut)
+                h = constrain(jnp.where(run, y, h))
+                return (h, aux + jnp.where(run, a, 0.0)), None
+            if remat:
+                body = jax.checkpoint(body)
+            (x, aux), _ = jax.lax.scan(
+                body, (x, jnp.float32(0.0)),
+                (params["layers"], lora_layers, jnp.arange(nl)))
+            return x, aux, None
+
+        if mode == "prefill":
+            def body(carry, xs):
+                h, aux = carry
+                p_l, lo_l, idx = xs
+                y, c_l, a = block["prefill"](cfg, p_l, lo_l, h, ctx)
+                run = _run_mask(side, idx, cut)
+                h = constrain(jnp.where(run, y, h))
+                return (h, aux + jnp.where(run, a, 0.0)), c_l
+            (x, aux), caches = jax.lax.scan(
+                body, (x, jnp.float32(0.0)),
+                (params["layers"], lora_layers, jnp.arange(nl)))
+            return x, aux, caches
+
+        if mode == "decode":
+            def body(h, xs):
+                p_l, lo_l, c_l, idx = xs
+                y, c_new = block["decode"](cfg, p_l, lo_l, h, c_l, pos, ctx)
+                run = _run_mask(side, idx, cut)
+                h = constrain(jnp.where(run, y, h))
+                c_new = _where_tree(run, c_new, c_l)
+                return h, c_new
+            x, caches = jax.lax.scan(
+                body, x, (params["layers"], lora_layers, cache, jnp.arange(nl)))
+            return x, jnp.float32(0.0), caches
+        raise ValueError(mode)
+
+    # -- backbone: hybrid (mamba stack + shared attention every k) --------------
+    def _segments(self):
+        cfg = self.cfg
+        every = cfg.shared_attn_every
+        segs, start = [], 0
+        while start < cfg.n_layers:
+            end = min(start + every, cfg.n_layers)
+            segs.append((start, end))
+            start = end
+        return segs  # shared block applied after each segment
+
+    def _hybrid_layers(self, params, lora, x, ctx, cut, side, *, remat=False,
+                       mode="train", cache=None, pos=None):
+        cfg = self.cfg
+        block = self.block
+        lora_layers = (lora or {}).get("layers", {})
+        lora_shared = (lora or {}).get("shared")
+        constrain = ctx["constrain"]
+        segs = self._segments()
+        aux = jnp.float32(0.0)
+        new_mamba_caches, new_attn_caches = [], []
+
+        for si, (s0, s1) in enumerate(segs):
+            p_seg = jax.tree.map(lambda a: a[s0:s1], params["layers"])
+            lo_seg = jax.tree.map(lambda a: a[s0:s1], lora_layers)
+            idxs = jnp.arange(s0, s1)
+            if mode == "train":
+                def body(carry, xs, _side=side):
+                    h, ax = carry
+                    p_l, lo_l, idx = xs
+                    y, a = block["train"](cfg, p_l, lo_l, h, ctx)
+                    run = _run_mask(_side, idx, cut)
+                    return (constrain(jnp.where(run, y, h)), ax + jnp.where(run, a, 0.0)), None
+                if remat:
+                    body = jax.checkpoint(body)
+                (x, aux), _ = jax.lax.scan(body, (x, aux), (p_seg, lo_seg, idxs))
+            elif mode == "prefill":
+                def body(carry, xs, _side=side):
+                    h, ax = carry
+                    p_l, lo_l, idx = xs
+                    y, c_l, a = block["prefill"](cfg, p_l, lo_l, h, ctx)
+                    run = _run_mask(_side, idx, cut)
+                    return (constrain(jnp.where(run, y, h)), ax), c_l
+                (x, aux), seg_cache = jax.lax.scan(body, (x, aux), (p_seg, lo_seg, idxs))
+                new_mamba_caches.append(seg_cache)
+            else:  # decode
+                c_seg = jax.tree.map(lambda a: a[s0:s1], cache["mamba"])
+                def body(h, xs, _side=side):
+                    p_l, lo_l, c_l, idx = xs
+                    y, c_new = block["decode"](cfg, p_l, lo_l, h, c_l, pos, ctx)
+                    run = _run_mask(_side, idx, cut)
+                    return constrain(jnp.where(run, y, h)), _where_tree(run, c_new, c_l)
+                x, seg_cache = jax.lax.scan(body, x, (p_seg, lo_seg, c_seg, idxs))
+                new_mamba_caches.append(seg_cache)
+
+            # shared attention block after the segment
+            run_shared = _run_mask(side, jnp.int32(s1 - 1), cut) \
+                if side != "full" else jnp.bool_(True)
+            if mode == "train":
+                shared_fn = (lambda p_, lo_, x_: B.dense_train(cfg, p_, lo_, x_, ctx))
+                if remat:
+                    # the 14 shared-attn invocations are unrolled (not inside
+                    # the layer scan), so they need their own checkpointing or
+                    # their probs/activations all stay live for backward
+                    shared_fn = jax.checkpoint(shared_fn)
+                y, _ = shared_fn(params["shared"], lora_shared, x)
+                x = constrain(jnp.where(run_shared, y, x))
+            elif mode == "prefill":
+                y, c_attn, _ = B.dense_prefill(cfg, params["shared"], lora_shared, x, ctx)
+                x = constrain(jnp.where(run_shared, y, x))
+                new_attn_caches.append(c_attn)
+            else:
+                c_attn = jax.tree.map(lambda a: a[si], cache["attn"])
+                y, c_new = B.dense_decode(cfg, params["shared"], lora_shared, x,
+                                          c_attn, pos, ctx)
+                x = constrain(jnp.where(run_shared, y, x))
+                new_attn_caches.append(_where_tree(run_shared, c_new, c_attn))
+
+        new_cache = None
+        if mode in ("prefill", "decode") and new_mamba_caches:
+            mamba = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_mamba_caches)
+            attn = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_attn_caches)
+            new_cache = {"mamba": mamba, "attn": attn}
+        return x, aux, new_cache
+
+    def _layers(self, *args, **kw):
+        if self.cfg.family == "hybrid":
+            return self._hybrid_layers(*args, **kw)
+        return self._scan_layers(*args, **kw)
+
+    # -- backbone: sliced (static-cut) path -------------------------------------
+    def sliced_forward(self, params, lora, x, ctx, layer_range) -> Array:
+        """Python loop over exactly layers [lo, hi). Oracle + federated clients.
+        ``params['layers']`` may hold the full stack or a client's truncated
+        stack; indices are relative to the stored stack."""
+        cfg = self.cfg
+        block = self.block
+        lora_layers = (lora or {}).get("layers", {})
+        lo, hi = layer_range
+        segs = self._segments() if cfg.family == "hybrid" else None
+        for i in range(lo, hi):
+            p_l = jax.tree.map(lambda a: a[i], params["layers"])
+            lo_l = jax.tree.map(lambda a: a[i], lora_layers)
+            x, _ = block["train"](cfg, p_l, lo_l, x, ctx)
+            if segs is not None:
+                for (s0, s1) in segs:
+                    if s1 - 1 == i:   # segment boundary -> shared attention
+                        x, _ = B.dense_train(cfg, params["shared"],
+                                             (lora or {}).get("shared"), x, ctx)
+        return x
+
+    # -- public API ----------------------------------------------------------
+    def forward_hidden(self, params, lora, batch, *, cut=0, side="full",
+                       ctx=None, remat=False, path="scan", x0=None):
+        """Embedding (client/full only) + the owned layers; returns (h, aux)."""
+        if x0 is None:
+            x = self.embed(params, batch)
+        else:
+            x = x0
+        if ctx is None:
+            ctx = self.make_ctx(x.shape[1])
+        if path == "sliced":
+            nl = jax.tree.leaves(params["layers"])[0].shape[0]
+            rng = {"full": (0, nl), "client": (0, int(cut)),
+                   "server": (int(cut), nl)}[side]
+            return self.sliced_forward(params, lora, x, ctx, rng), jnp.float32(0.0)
+        x, aux, _ = self._layers(params, lora, x, ctx, cut, side,
+                                 remat=remat, mode="train")
+        return x, aux
+
+    def loss(self, params, lora, batch, *, cut=0, side="full", ctx=None,
+             remat=False, path="scan", x0=None):
+        """Full loss (side='full') or server-side loss from activations x0."""
+        cfg = self.cfg
+        h, aux = self.forward_hidden(params, lora, batch, cut=cut, side=side,
+                                     ctx=ctx, remat=remat, path=path, x0=x0)
+        logits = self.unembed(params, h)
+        if cfg.n_classes:
+            loss = L.softmax_xent(logits[:, None, :], batch["label"][:, None])
+        else:
+            tgt = batch["targets"]
+            if cfg.family == "vlm":
+                logits = logits[:, -tgt.shape[1]:, :]
+            loss = L.softmax_xent(logits, tgt)
+        return loss + aux, logits
+
+    # -- serving ---------------------------------------------------------------
+    def init_cache(self, batch_size: int, cache_len: int) -> PyTree:
+        cfg = self.cfg
+        one = self.block["init_cache"](cfg, batch_size, cache_len)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)
+        if cfg.family == "hybrid":
+            n_seg = len(self._segments())
+            attn_one = B.dense_init_cache(cfg, batch_size, cache_len)
+            attn = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_seg,) + a.shape), attn_one)
+            return {"mamba": stacked, "attn": attn}
+        return stacked
+
+    def cache_spec(self, batch_size: int, cache_len: int) -> PyTree:
+        return jax.eval_shape(lambda: self.init_cache(batch_size, cache_len))
+
+    def prefill(self, params, lora, batch, *, ctx=None):
+        x = self.embed(params, batch)
+        if ctx is None:
+            ctx = self.make_ctx(x.shape[1])
+        x, aux, cache = self._layers(params, lora, x, ctx, 0, "full", mode="prefill")
+        logits = self.unembed(params, x[:, -1:, :])
+        return logits, cache
+
+    def serve_step(self, params, lora, cache, token, pos, *, ctx=None,
+                   window: Optional[int] = None):
+        """One decode step: token (B,1) int32, pos scalar int32."""
+        positions = pos[None] if pos.ndim == 0 else pos
+        x = jnp.take(params["embed"], token, axis=0)
+        if self.cfg.positional == "learned":
+            x = x + jnp.take(params["pos_embed"], pos, axis=0)[None, None, :]
+        if ctx is None:
+            ctx = self.make_ctx(1, window=window, positions=positions)
+        x, _, cache = self._layers(params, lora, x, ctx, 0, "full",
+                                   mode="decode", cache=cache, pos=pos)
+        logits = self.unembed(params, x)
+        return logits, cache

@@ -1,0 +1,257 @@
+"""Whisper-style encoder-decoder backbone.
+
+The mel-spectrogram + conv frontend is the permitted stub: batches carry
+precomputed frame embeddings ``frames: (B, encoder_seq, d_model)``. We
+implement the transformer encoder, the causal decoder with cross-attention,
+LoRA everywhere, the split-execution support (cut = encoder layers held by
+the client), and KV-cache serving.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models.decoder import _run_mask, _where_tree, build_lora_tree
+
+Array = jax.Array
+
+
+def dec_block_init(rng: Array, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "ln1": L.init_norm(cfg),
+        "attn": L.attn_init(k1, cfg),          # causal self-attention
+        "lnx": L.init_norm(cfg),
+        "xattn": L.attn_init(k2, cfg),         # cross-attention
+        "ln2": L.init_norm(cfg),
+        "mlp": L.mlp_init(k3, cfg),
+    }
+
+
+def _cross_attend(cfg: ModelConfig, p: dict, lora, x: Array,
+                  xk: Array, xv: Array) -> Array:
+    """x: (B,S,d); xk/xv: (B,T,K,Dh) precomputed from encoder output."""
+    scale = cfg.lora.alpha / cfg.lora.rank
+    lget = (lora or {}).get
+    b, s, _ = x.shape
+    q = L.lora_apply(x, p["wq"], lget("wq"), scale, p.get("bq"))
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    t = xk.shape[1]
+    out = L.attention_full(q, xk, xv, causal=False, window=None,
+                           q_pos=jnp.arange(s), k_pos=jnp.arange(t))
+    return L.lora_apply(out, p["wo"], lget("wo"), scale)
+
+
+def _cross_kv(cfg: ModelConfig, p: dict, lora, enc: Array):
+    scale = cfg.lora.alpha / cfg.lora.rank
+    lget = (lora or {}).get
+    b, t, _ = enc.shape
+    k = L.lora_apply(enc, p["wk"], lget("wk"), scale, p.get("bk"))
+    v = L.lora_apply(enc, p["wv"], lget("wv"), scale, p.get("bv"))
+    return (k.reshape(b, t, cfg.n_kv_heads, cfg.head_dim),
+            v.reshape(b, t, cfg.n_kv_heads, cfg.head_dim))
+
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family == "encdec"
+        self.cfg = cfg
+
+    # -- init -----------------------------------------------------------------
+    def init_params(self, rng: Array):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(rng, 6)
+        enc_cfg = cfg.with_(causal=False)
+        enc_rngs = jax.random.split(ks[0], cfg.n_encoder_layers)
+        dec_rngs = jax.random.split(ks[1], cfg.n_layers)
+        return {
+            "embed": L.embed_init(ks[2], cfg.vocab_size, cfg.d_model, dt),
+            "pos_embed": L.embed_init(ks[3], cfg.max_position, cfg.d_model, dt),
+            "enc_pos": L.embed_init(ks[4], cfg.encoder_seq, cfg.d_model, dt),
+            "enc_layers": jax.vmap(lambda r: B.dense_init(r, enc_cfg))(enc_rngs),
+            "enc_norm": L.init_norm(cfg),
+            "dec_layers": jax.vmap(lambda r: dec_block_init(r, cfg))(dec_rngs),
+            "final_norm": L.init_norm(cfg),
+        }
+
+    def init_lora(self, rng: Array):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        enc_one = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                               jax.eval_shape(lambda r: B.dense_init(r, cfg),
+                                              jax.random.PRNGKey(0)))
+        dec_one = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                               jax.eval_shape(lambda r: dec_block_init(r, cfg),
+                                              jax.random.PRNGKey(0)))
+        enc = jax.vmap(lambda r: build_lora_tree(r, enc_one, cfg.lora.targets, cfg.lora.rank)
+                       )(jax.random.split(k1, cfg.n_encoder_layers))
+        dec = jax.vmap(lambda r: build_lora_tree(r, dec_one, cfg.lora.targets, cfg.lora.rank)
+                       )(jax.random.split(k2, cfg.n_layers))
+        return {"enc_layers": enc, "dec_layers": dec}
+
+    def params_spec(self):
+        return jax.eval_shape(self.init_params, jax.random.PRNGKey(0))
+
+    def lora_spec(self):
+        return jax.eval_shape(self.init_lora, jax.random.PRNGKey(0))
+
+    # -- encoder ----------------------------------------------------------------
+    def encode(self, params, lora, frames: Optional[Array] = None, *, cut=0,
+               side="full", constrain=None, remat=False, x0: Optional[Array] = None):
+        cfg = self.cfg
+        constrain = constrain or (lambda x: x)
+        enc_cfg = cfg.with_(causal=False)
+        if x0 is not None:       # resume from cut activations (no re-embedding)
+            x = x0
+            t = x.shape[1]
+        else:
+            t = frames.shape[1]
+            x = frames.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"][None, :t]
+        ctx = {"positions": jnp.arange(t), "causal": False, "window": None,
+               "moe_groups": 1, "moe_dense_fallback": False, "constrain": constrain}
+        lo = (lora or {}).get("enc_layers", {})
+
+        def body(h, xs):
+            p_l, lo_l, idx = xs
+            y, _ = B.dense_train(enc_cfg, p_l, lo_l, h, ctx)
+            run = _run_mask(side, idx, cut)
+            return constrain(jnp.where(run, y, h)), None
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, (params["enc_layers"], lo,
+                                      jnp.arange(cfg.n_encoder_layers)))
+        if side == "client":
+            return x               # cut activations; enc_norm applied server-side
+        return L.apply_norm(cfg, params["enc_norm"], x)
+
+    # -- decoder ----------------------------------------------------------------
+    def _dec_ctx(self, s, constrain=None, positions=None):
+        return {"positions": jnp.arange(s) if positions is None else positions,
+                "causal": True, "window": None, "moe_groups": 1,
+                "moe_dense_fallback": False, "constrain": constrain or (lambda x: x)}
+
+    def decode_train(self, params, lora, tokens: Array, enc: Array, *,
+                     constrain=None, remat=False):
+        cfg = self.cfg
+        constrain = constrain or (lambda x: x)
+        b, s = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0) + params["pos_embed"][None, :s]
+        ctx = self._dec_ctx(s, constrain)
+        lo = (lora or {}).get("dec_layers", {})
+
+        def body(h, xs):
+            p_l, lo_l = xs
+            hh = L.apply_norm(cfg, p_l["ln1"], h)
+            q, k, v = L.qkv_project(cfg, p_l["attn"], (lo_l or {}).get("attn"),
+                                    hh, ctx["positions"])
+            a = L.attention_full(q, k, v, causal=True, window=None,
+                                 q_pos=ctx["positions"], k_pos=ctx["positions"])
+            h = h + L.attn_out(cfg, p_l["attn"], (lo_l or {}).get("attn"), a)
+            hh = L.apply_norm(cfg, p_l["lnx"], h)
+            xk, xv = _cross_kv(cfg, p_l["xattn"], (lo_l or {}).get("xattn"), enc)
+            h = h + _cross_attend(cfg, p_l["xattn"], (lo_l or {}).get("xattn"),
+                                  hh, xk, xv)
+            hh = L.apply_norm(cfg, p_l["ln2"], h)
+            h = h + L.mlp_apply(cfg, p_l["mlp"], (lo_l or {}).get("mlp"), hh)
+            return constrain(h), None
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, (params["dec_layers"], lo))
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        return jnp.einsum("bsd,dv->bsv", x, params["embed"].T.astype(x.dtype))
+
+    # -- public API mirroring DecoderModel ---------------------------------------
+    def loss(self, params, lora, batch, *, cut=0, side="full", ctx=None,
+             remat=False, path="scan", x0=None):
+        cfg = self.cfg
+        if side == "client":
+            raise ValueError("use forward_hidden for the client side")
+        if x0 is None:
+            enc = self.encode(params, lora, batch["frames"], cut=cut, side=side,
+                              remat=remat)
+        else:
+            enc = self.encode(params, lora, cut=cut, side="server", remat=remat,
+                              x0=x0)
+        logits = self.decode_train(params, lora, batch["tokens"], enc, remat=remat)
+        return L.softmax_xent(logits, batch["targets"]), logits
+
+    def forward_hidden(self, params, lora, batch, *, cut=0, side="client",
+                       ctx=None, remat=False, path="scan", x0=None):
+        return self.encode(params, lora, batch["frames"], cut=cut, side=side,
+                           remat=remat), jnp.float32(0.0)
+
+    # -- serving ------------------------------------------------------------------
+    def init_cache(self, batch_size: int, cache_len: int):
+        cfg = self.cfg
+        shp = (cfg.n_layers, batch_size, cache_len, cfg.n_kv_heads, cfg.head_dim)
+        xshp = (cfg.n_layers, batch_size, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim)
+        dt = jnp.dtype(cfg.dtype)
+        return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt),
+                "xk": jnp.zeros(xshp, dt), "xv": jnp.zeros(xshp, dt)}
+
+    def cache_spec(self, batch_size: int, cache_len: int):
+        return jax.eval_shape(lambda: self.init_cache(batch_size, cache_len))
+
+    def prefill(self, params, lora, batch, *, ctx=None):
+        """Encode audio + consume the prompt tokens; build self+cross caches."""
+        cfg = self.cfg
+        enc = self.encode(params, lora, batch["frames"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        lo = (lora or {}).get("dec_layers", {})
+        x = jnp.take(params["embed"], tokens, axis=0) + params["pos_embed"][None, :s]
+        ctxd = self._dec_ctx(s)
+
+        def body(h, xs):
+            p_l, lo_l = xs
+            hh = L.apply_norm(cfg, p_l["ln1"], h)
+            q, k, v = L.qkv_project(cfg, p_l["attn"], (lo_l or {}).get("attn"),
+                                    hh, ctxd["positions"])
+            a = L.attention_full(q, k, v, causal=True, window=None,
+                                 q_pos=ctxd["positions"], k_pos=ctxd["positions"])
+            h = h + L.attn_out(cfg, p_l["attn"], (lo_l or {}).get("attn"), a)
+            hh = L.apply_norm(cfg, p_l["lnx"], h)
+            xk, xv = _cross_kv(cfg, p_l["xattn"], (lo_l or {}).get("xattn"), enc)
+            h = h + _cross_attend(cfg, p_l["xattn"], (lo_l or {}).get("xattn"),
+                                  hh, xk, xv)
+            hh = L.apply_norm(cfg, p_l["ln2"], h)
+            h = h + L.mlp_apply(cfg, p_l["mlp"], (lo_l or {}).get("mlp"), hh)
+            return h, {"k": k, "v": v, "xk": xk, "xv": xv}
+        x, cache = jax.lax.scan(body, x, (params["dec_layers"], lo))
+        x = L.apply_norm(cfg, params["final_norm"], x[:, -1:, :])
+        logits = jnp.einsum("bsd,dv->bsv", x, params["embed"].T.astype(x.dtype))
+        return logits, cache
+
+    def serve_step(self, params, lora, cache, token, pos, *, ctx=None,
+                   window: Optional[int] = None):
+        cfg = self.cfg
+        lo = (lora or {}).get("dec_layers", {})
+        x = jnp.take(params["embed"], token, axis=0) \
+            + jnp.take(params["pos_embed"], pos, axis=0)[None, None, :]
+        positions = pos[None]
+        ctxd = self._dec_ctx(1, positions=positions)
+        ctxd["window"] = window
+
+        def body(h, xs):
+            p_l, lo_l, c_l = xs
+            hh = L.apply_norm(cfg, p_l["ln1"], h)
+            a, c_new = B._decode_attn(cfg, p_l["attn"], (lo_l or {}).get("attn"),
+                                      hh, c_l, pos, ctxd)
+            h = h + L.attn_out(cfg, p_l["attn"], (lo_l or {}).get("attn"), a)
+            hh = L.apply_norm(cfg, p_l["lnx"], h)
+            h = h + _cross_attend(cfg, p_l["xattn"], (lo_l or {}).get("xattn"),
+                                  hh, c_l["xk"], c_l["xv"])
+            hh = L.apply_norm(cfg, p_l["ln2"], h)
+            h = h + L.mlp_apply(cfg, p_l["mlp"], (lo_l or {}).get("mlp"), hh)
+            c_out = {"k": c_new["k"], "v": c_new["v"], "xk": c_l["xk"], "xv": c_l["xv"]}
+            return h, c_out
+        x, cache = jax.lax.scan(body, x, (params["dec_layers"], lo, cache))
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["embed"].T.astype(x.dtype))
+        return logits, cache

@@ -1,0 +1,339 @@
+"""Shared neural-net primitives: norms, RoPE, LoRA-aware projections,
+attention (GQA/MQA, bias, sliding-window, KV-cache) and MLPs.
+
+Everything is a pure function over explicit parameter pytrees; no framework
+state. Weights use (in, out) layout so ``x @ w`` applies them.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng: Array, d_in: int, d_out: int, dtype) -> Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(rng: Array, vocab: int, d: int, dtype) -> Array:
+    return (jax.random.normal(rng, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: Array, weight: Array, bias: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: Array) -> Array:
+    if cfg.norm == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> dict:
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def group_norm(x: Array, weight: Array, bias: Array, n_groups: int, eps: float = 1e-5) -> Array:
+    """GroupNorm over the last dim split into n_groups (rwkv ln_x)."""
+    dt = x.dtype
+    *lead, d = x.shape
+    x = x.astype(jnp.float32).reshape(*lead, n_groups, d // n_groups)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = ((x - mu) * jax.lax.rsqrt(var + eps)).reshape(*lead, d)
+    return (x * weight + bias).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# LoRA-aware projection
+# ---------------------------------------------------------------------------
+
+# trace-time switch routing adapted projections through the fused Pallas
+# kernel (kernels/lora_matmul.py). Off by default: the jnp path is the
+# oracle; the kernel is the TPU deployment form (interpret-mode on CPU).
+_FUSED_LORA = False
+
+
+def set_fused_lora(flag: bool) -> None:
+    global _FUSED_LORA
+    _FUSED_LORA = bool(flag)
+
+
+def lora_apply(x: Array, w: Array, lora: Optional[dict], scale: float,
+               bias: Optional[Array] = None) -> Array:
+    """y = x @ w [+ bias] + scale * (x @ a.T) @ b.T   with a:(r,in), b:(out,r).
+
+    The frozen path and the adapter path are kept separate so autodiff only
+    produces gradients for (a, b) when w/bias are treated as constants.
+    """
+    if _FUSED_LORA and lora is not None and w.ndim == 2:
+        from repro.kernels import ops as _kops  # lazy: avoid import cycle
+        y = _kops.fused_lora_matmul(x.astype(w.dtype), w, lora["a"].astype(w.dtype),
+                                    lora["b"].astype(w.dtype), scale=float(scale))
+        if bias is not None:
+            y = y + bias.astype(y.dtype)
+        return y.astype(x.dtype)
+    y = jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    if lora is not None:
+        lo = jnp.einsum("...i,ri->...r", x, lora["a"].astype(x.dtype))
+        y = y + scale * jnp.einsum("...r,or->...o", lo, lora["b"].astype(x.dtype))
+    return y
+
+
+def lora_init(rng: Array, d_in: int, d_out: int, rank: int) -> dict:
+    """A ~ N(0, 1/r), B = 0 (standard LoRA init: Delta W = BA starts at zero)."""
+    return {
+        "a": jax.random.normal(rng, (rank, d_in), jnp.float32) / math.sqrt(rank),
+        "b": jnp.zeros((d_out, rank), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, Dh); positions: (..., S) or (S,)."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                       # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, Dh/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., None, :]                           # broadcast over heads
+    cos = cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention core
+# ---------------------------------------------------------------------------
+
+def _gqa_scores_softmax_out(q: Array, k: Array, v: Array, mask: Array) -> Array:
+    """q: (B,S,K,G,Dh)  k,v: (B,T,K,Dh)  mask: broadcastable to (B,K,G,S,T)."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(dh)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out
+
+
+def attention_full(q: Array, k: Array, v: Array, *, causal: bool,
+                   window: Optional[int], q_pos: Array, k_pos: Array,
+                   impl: str = "naive", chunk: int = 1024) -> Array:
+    """Full-sequence attention. q:(B,S,H,Dh) k,v:(B,T,K,Dh) -> (B,S,H*Dh).
+
+    impl="naive": materialized (B,K,G,S,T) probs (baseline).
+    impl="chunked": flash-style online softmax over KV chunks — probs only
+    ever exist one chunk at a time and ride in the model dtype (§Perf).
+    """
+    if impl == "chunked":
+        return _attention_chunked(q, k, v, causal=causal, window=window,
+                                  q_pos=q_pos, k_pos=k_pos, chunk=chunk)
+    b, s, h, dh = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    q = q.reshape(b, s, kheads, g, dh)
+    rel = q_pos[:, None] - k_pos[None, :]             # (S, T)
+    mask = jnp.ones((s, k.shape[1]), bool) if not causal else (rel >= 0)
+    if window is not None:
+        mask = mask & (rel < window)
+    out = _gqa_scores_softmax_out(q, k, v, mask[None, None, None])
+    return out.reshape(b, s, h * dh)
+
+
+def _attention_chunked(q: Array, k: Array, v: Array, *, causal: bool,
+                       window: Optional[int], q_pos: Array, k_pos: Array,
+                       chunk: int) -> Array:
+    """Online-softmax attention scanned over KV chunks (pure JAX flash)."""
+    b, s, h, dh = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    t = k.shape[1]
+    qq = q.reshape(b, s, kheads, g, dh).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(dh)
+
+    pad = (-t) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+    nc = (t + pad) // chunk
+    ks = k.reshape(b, nc, chunk, kheads, dh).swapaxes(0, 1)
+    vs = v.reshape(b, nc, chunk, kheads, dh).swapaxes(0, 1)
+    kp = k_pos.reshape(nc, chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry                              # (B,K,G,S), .., (B,K,G,S,Dh)
+        kc, vc, kpc = xs                               # (B,C,K,Dh), .., (C,)
+        sc = jnp.einsum("bskgd,btkd->bkgst", qq, kc.astype(jnp.float32)) * scale
+        rel = q_pos[:, None] - kpc[None, :]            # (S, C)
+        mask = kpc[None, :] >= 0
+        if causal:
+            mask = mask & (rel >= 0)
+        if window is not None:
+            mask = mask & (rel < window)
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+        m_new = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(v.dtype), vc)
+        acc = acc * corr[..., None] + pv.astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kheads, g, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kheads, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kheads, g, s, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kp))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # (B,K,G,S,Dh) -> (B,S,K,G,Dh) -> (B,S,H*Dh)
+    out = jnp.moveaxis(out, 3, 1)
+    return out.reshape(b, s, h * dh).astype(v.dtype)
+
+
+def attention_decode(q: Array, k_cache: Array, v_cache: Array, valid: Array) -> Array:
+    """One-token decode. q:(B,1,H,Dh) caches:(B,T,K,Dh) valid:(T,) or (B,T)."""
+    b, s, h, dh = q.shape
+    kheads = k_cache.shape[2]
+    q = q.reshape(b, s, kheads, h // kheads, dh)
+    if valid.ndim == 1:
+        mask = valid[None, None, None, None, :]
+    else:
+        mask = valid[:, None, None, None, :]
+    out = _gqa_scores_softmax_out(q, k_cache, v_cache, mask)
+    return out.reshape(b, s, h * dh)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng: Array, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    gated = cfg.activation in ("silu", "geglu")
+    ks = jax.random.split(rng, 3)
+    dt = jnp.dtype(cfg.dtype)
+    p = {"wu": dense_init(ks[0], d, ff, dt), "wd": dense_init(ks[1], ff, d, dt)}
+    if gated:
+        p["wg"] = dense_init(ks[2], d, ff, dt)
+    return p
+
+
+def _act(cfg: ModelConfig, x: Array) -> Array:
+    if cfg.activation == "silu":
+        return jax.nn.silu(x)
+    if cfg.activation == "geglu":
+        return jax.nn.gelu(x, approximate=True)
+    if cfg.activation == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if cfg.activation == "relu2":
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(cfg.activation)
+
+
+def mlp_apply(cfg: ModelConfig, p: dict, lora: Optional[dict], x: Array) -> Array:
+    scale = cfg.lora.alpha / cfg.lora.rank
+    lget = (lora or {}).get
+    up = lora_apply(x, p["wu"], lget("wu"), scale)
+    if "wg" in p:
+        up = _act(cfg, lora_apply(x, p["wg"], lget("wg"), scale)) * up
+    else:
+        up = _act(cfg, up)
+    return lora_apply(up, p["wd"], lget("wd"), scale)
+
+
+# ---------------------------------------------------------------------------
+# attention block parameter init/apply (used by dense, moe, vlm, encdec, bert,
+# and zamba's shared block)
+# ---------------------------------------------------------------------------
+
+def attn_init(rng: Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.attn_dim, dt),
+        "wk": dense_init(ks[1], d, cfg.kv_dim, dt),
+        "wv": dense_init(ks[2], d, cfg.kv_dim, dt),
+        "wo": dense_init(ks[3], cfg.attn_dim, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.attn_dim,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), jnp.float32)
+    return p
+
+
+def qkv_project(cfg: ModelConfig, p: dict, lora: Optional[dict], x: Array,
+                positions: Optional[Array]) -> tuple[Array, Array, Array]:
+    scale = cfg.lora.alpha / cfg.lora.rank
+    lget = (lora or {}).get
+    b, s, _ = x.shape
+    q = lora_apply(x, p["wq"], lget("wq"), scale, p.get("bq"))
+    k = lora_apply(x, p["wk"], lget("wk"), scale, p.get("bk"))
+    v = lora_apply(x, p["wv"], lget("wv"), scale, p.get("bv"))
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.positional == "rope" and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_out(cfg: ModelConfig, p: dict, lora: Optional[dict], ctx: Array) -> Array:
+    scale = cfg.lora.alpha / cfg.lora.rank
+    return lora_apply(ctx, p["wo"], (lora or {}).get("wo"), scale)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: Array, targets: Array, ignore_id: int = -1) -> Array:
+    """Mean token cross-entropy; targets == ignore_id are masked out."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(targets, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (targets != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

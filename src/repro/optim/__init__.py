@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim import schedules
+
+__all__ = ["AdamW", "AdamWState", "schedules"]

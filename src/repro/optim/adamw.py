@@ -1,0 +1,65 @@
+"""Minimal, dependency-free AdamW over arbitrary pytrees (optax-like API)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: float | Callable[[jax.Array], jax.Array] = 1e-5
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip_norm: Optional[float] = None
+
+    def init(self, params: PyTree) -> AdamWState:
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(z, params), nu=jax.tree.map(z, params))
+
+    def _lr(self, step: jax.Array) -> jax.Array:
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.float32(self.learning_rate)
+
+    def update(self, grads: PyTree, state: AdamWState, params: PyTree):
+        """Returns (new_params, new_state)."""
+        step = state.step + 1
+        if self.grad_clip_norm is not None:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in jax.tree.leaves(grads)) + 1e-12)
+            scale = jnp.minimum(1.0, self.grad_clip_norm / gnorm)
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)

@@ -1,0 +1,26 @@
+"""Learning-rate schedules (callables of the integer step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def linear_warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                         final_fraction: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = lr * (final_fraction + (1 - final_fraction) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def inverse_sqrt(lr: float, warmup_steps: int = 100):
+    def fn(step):
+        step = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return lr * jnp.minimum(step / warmup_steps, jnp.sqrt(warmup_steps / step))
+    return fn

@@ -1,0 +1,35 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, reduced
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny(name: str, **kw):
+    """Session-wide reduced config helper."""
+    return reduced(REGISTRY[name], **kw)
+
+
+def lm_batch(cfg, batch=2, seq=16, seed=0):
+    r = np.random.default_rng(seed)
+    toks = r.integers(0, cfg.vocab_size, size=(batch, seq)).astype(np.int32)
+    tgts = r.integers(0, cfg.vocab_size, size=(batch, seq)).astype(np.int32)
+    out = {"tokens": jnp.asarray(toks), "targets": jnp.asarray(tgts)}
+    if cfg.family == "vlm":
+        out["vision_embeds"] = jnp.asarray(
+            r.normal(size=(batch, cfg.n_vision_tokens, cfg.vision_embed_dim)),
+            jnp.float32)
+    if cfg.family == "encdec":
+        out["frames"] = jnp.asarray(
+            r.normal(size=(batch, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    if cfg.family == "encoder":
+        out = {"tokens": out["tokens"],
+               "label": jnp.asarray(r.integers(0, cfg.n_classes, size=(batch,)),
+                                    jnp.int32)}
+    return out

@@ -1,0 +1,99 @@
+"""Eqs. 5-9: heterogeneous LoRA aggregation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.core import aggregation as agg
+from repro.core import lora as lora_lib
+from repro.models import build_model
+
+
+def _rand_lora(model, seed):
+    lo = model.init_lora(jax.random.PRNGKey(seed))
+    return jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(seed + 100), x.shape),
+        lo)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny("granite-3-2b", n_layers=4)
+    model = build_model(cfg)
+    return cfg, model
+
+
+def test_weighted_mean_exact(setup):
+    cfg, model = setup
+    l1, l2 = _rand_lora(model, 1), _rand_lora(model, 2)
+    out = agg.aggregate_full([l1, l2], [3, 1])
+    expect = jax.tree.map(lambda a, b: 0.75 * a + 0.25 * b, l1, l2)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=1e-6),
+                 out, expect)
+
+
+def test_single_client_identity(setup):
+    cfg, model = setup
+    l1 = _rand_lora(model, 3)
+    out = agg.aggregate_full([l1], [42])
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=1e-7), out, l1)
+
+
+def test_permutation_invariance(setup):
+    cfg, model = setup
+    loras = [_rand_lora(model, s) for s in range(4)]
+    sizes = [1, 2, 3, 4]
+    a = agg.aggregate_full(loras, sizes)
+    b = agg.aggregate_full(loras[::-1], sizes[::-1])
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(x, y, atol=1e-5), a, b)
+
+
+def test_convex_hull_bound(setup):
+    """Aggregated leaves lie inside the per-leaf min/max envelope."""
+    cfg, model = setup
+    loras = [_rand_lora(model, s) for s in range(3)]
+    out = agg.aggregate_full(loras, [1, 1, 1])
+
+    def check(o, *ls):
+        lo = np.minimum.reduce([np.asarray(l) for l in ls]) - 1e-6
+        hi = np.maximum.reduce([np.asarray(l) for l in ls]) + 1e-6
+        assert np.all(o >= lo) and np.all(o <= hi)
+
+    jax.tree.map(check, out, *loras)
+
+
+def test_heterogeneous_aggregation_round(setup):
+    """Alg.1 l.17-30 with heterogeneous cuts: assemble -> aggregate ->
+    re-split preserves depth alignment exactly."""
+    cfg, model = setup
+    cuts = [1, 2, 3]
+    sizes = [10, 20, 30]
+    fulls = [_rand_lora(model, s) for s in range(3)]
+    clients, servers = zip(*[lora_lib.split_lora(f, c)
+                             for f, c in zip(fulls, cuts)])
+    new_c, new_s, agg_full = agg.aggregation_round(
+        list(clients), list(servers), cuts, sizes)
+    expect = agg.aggregate_full(fulls, sizes)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=1e-5),
+                 agg_full, expect)
+    for c, s, cut in zip(new_c, new_s, cuts):
+        re = lora_lib.assemble_full(c, s, cut)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=1e-6),
+                     re, expect)
+
+
+def test_aggregation_a_b_separate(setup):
+    """A and B are averaged separately (Eqs. 6-7), i.e. the aggregate of
+    products != product of aggregates in general — verify we do the former."""
+    cfg, model = setup
+    l1, l2 = _rand_lora(model, 5), _rand_lora(model, 6)
+    out = agg.aggregate_full([l1, l2], [1, 1])
+    lst1 = dict((p, (a, b)) for p, a, b in lora_lib.adapter_list(l1))
+    lsto = dict((p, (a, b)) for p, a, b in lora_lib.adapter_list(out))
+    for path, (a1, b1) in lst1.items():
+        ao, bo = lsto[path]
+        assert not np.allclose(ao, a1)   # it moved
+        # separate-mean property
+        a2, b2 = dict((p, (a, b)) for p, a, b in lora_lib.adapter_list(l2))[path]
+        np.testing.assert_allclose(np.asarray(ao), (np.asarray(a1) + np.asarray(a2)) / 2, atol=1e-5)

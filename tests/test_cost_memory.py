@@ -1,0 +1,63 @@
+"""Analytical cost/memory models: sanity + the paper's Table I orderings."""
+import pytest
+
+from repro.configs import REGISTRY
+from repro.core.cost_model import client_step_times, makespan
+from repro.core.memory_model import client_memory, model_bytes, server_memory
+from repro.core.partition import assign_cuts
+from repro.fed.devices import LINK, PAPER_CLIENTS, PAPER_CUTS, SERVER
+
+CFG = REGISTRY["bert-base"]
+
+
+def test_model_bytes_consistency():
+    mb = model_bytes(CFG)
+    # BERT-base fp32 ~ 440 MB of parameters
+    assert 350e6 < mb.params() < 550e6
+    assert mb.lora_per_layer > 0
+    assert mb.n_layers == 12
+
+
+def test_step_times_monotonic_in_cut():
+    dev = PAPER_CLIENTS[0]
+    t1 = client_step_times(CFG, 1, dev, SERVER, LINK, 16, 128)
+    t3 = client_step_times(CFG, 3, dev, SERVER, LINK, 16, 128)
+    assert t3.t_f > t1.t_f            # more client layers -> slower client
+    assert t3.t_s < t1.t_s            # fewer server layers -> faster server
+    assert t1.t_fc == t3.t_fc         # activation size unchanged (same d)
+
+
+def test_table1_memory_ordering():
+    """Paper Table I: SL < ours << SFL on server memory."""
+    mem = {s: server_memory(CFG, s, list(PAPER_CUTS), 16, 128).total
+           for s in ("ours", "sfl", "sl")}
+    assert mem["sl"] < mem["ours"] < mem["sfl"]
+    reduction = 1 - mem["ours"] / mem["sfl"]
+    # paper: 79% reduction vs SFL; accept a generous band for the analytic model
+    assert 0.55 < reduction < 0.9, reduction
+    overhead_vs_sl = mem["ours"] / mem["sl"] - 1
+    assert overhead_vs_sl < 0.35, overhead_vs_sl   # paper: ~10% memory cost
+
+
+def test_client_memory_fits_devices():
+    for dev, cut in zip(PAPER_CLIENTS, PAPER_CUTS):
+        need = client_memory(CFG, cut, 16, 128)
+        assert need < dev.mem_gb * (1024 ** 3), (dev.name, cut, need)
+
+
+def test_assign_cuts_monotonic_and_feasible():
+    cuts = assign_cuts(CFG, PAPER_CLIENTS, 16, 128, max_cut=4)
+    assert all(1 <= c <= 4 for c in cuts)
+    # the weakest device must not get more layers than the strongest
+    weakest = min(range(6), key=lambda i: PAPER_CLIENTS[i].tflops)
+    strongest = max(range(6), key=lambda i: PAPER_CLIENTS[i].tflops)
+    assert cuts[weakest] <= cuts[strongest]
+
+
+def test_round_time_scheme_ordering():
+    """Per-round: ours <= sfl-ish contention, and sl ~ sum >> max."""
+    times = [client_step_times(CFG, c, d, SERVER, LINK, 16, 128)
+             for c, d in zip(PAPER_CUTS, PAPER_CLIENTS)]
+    span, _, _ = makespan(times, list(range(6)))
+    seq_total = sum(t.ready + t.t_s + t.t_bc + t.t_b for t in times)
+    assert span < seq_total          # pipelining beats strictly sequential

@@ -1,0 +1,75 @@
+"""Data pipeline: synthetic corpus, non-IID partitioner, loader."""
+import numpy as np
+import pytest
+
+from repro.data import (ClassificationLoader, dirichlet_partition, iid_partition,
+                        lm_batches, lm_stream, make_emotion_dataset)
+
+
+def test_emotion_dataset_shapes_and_signal():
+    ds = make_emotion_dataset(3000, seq_len=64, vocab_size=8192, seed=0)
+    assert ds.tokens.shape == (3000, 64)
+    assert ds.labels.min() >= 0 and ds.labels.max() <= 5
+    assert ds.tokens.dtype == np.int32
+    # class signal: class-band tokens dominate within their class
+    band = 400
+    for c in range(3):
+        idx = ds.labels == c
+        toks = ds.tokens[idx]
+        in_band = ((toks >= 10 + c * band) & (toks < 10 + (c + 1) * band)).mean()
+        other = ((toks >= 10 + (c + 1) % 6 * band)
+                 & (toks < 10 + ((c + 1) % 6 + 1) * band)).mean()
+        assert in_band > 0.2 > other, (c, in_band, other)
+
+
+def test_class_imbalance_carer_like():
+    ds = make_emotion_dataset(20000, seed=1)
+    frac = np.bincount(ds.labels, minlength=6) / len(ds.labels)
+    assert frac[1] > frac[5] * 3     # joy >> surprise, like CARER
+
+
+def test_dirichlet_partition_properties():
+    ds = make_emotion_dataset(4000, seq_len=32, seed=2)
+    parts = dirichlet_partition(ds.labels, 6, alpha=0.5, seed=0)
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == 4000
+    assert len(np.unique(all_idx)) == 4000          # exact partition
+    assert min(len(p) for p in parts) >= 8
+    # non-IID: per-client class distributions differ substantially
+    dists = np.stack([np.bincount(ds.labels[p], minlength=6) / len(p)
+                      for p in parts])
+    spread = dists.std(axis=0).mean()
+    iid = iid_partition(4000, 6, seed=0)
+    dists_iid = np.stack([np.bincount(ds.labels[p], minlength=6) / len(p)
+                          for p in iid])
+    assert spread > 2 * dists_iid.std(axis=0).mean()
+
+
+def test_dirichlet_alpha_controls_skew():
+    ds = make_emotion_dataset(4000, seq_len=32, seed=3)
+    def spread(alpha):
+        parts = dirichlet_partition(ds.labels, 4, alpha=alpha, seed=1)
+        d = np.stack([np.bincount(ds.labels[p], minlength=6) / len(p) for p in parts])
+        return d.std(axis=0).mean()
+    assert spread(0.1) > spread(10.0)
+
+
+def test_loader_epochs_and_shapes():
+    ds = make_emotion_dataset(100, seq_len=16, seed=4)
+    loader = ClassificationLoader(ds, batch_size=16, seed=0)
+    seen = 0
+    for _ in range(10):
+        b = loader.next_batch()
+        assert b["tokens"].shape == (16, 16)
+        assert b["label"].shape == (16,)
+        seen += 16
+    assert seen == 160                # reshuffles across epochs
+
+
+def test_lm_stream_and_batches():
+    stream = lm_stream(5000, 1024, seed=0)
+    assert stream.min() >= 0 and stream.max() < 1024
+    it = lm_batches(stream, batch=4, seq=32, seed=0)
+    b = next(it)
+    assert b["tokens"].shape == (4, 32)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])

@@ -1,0 +1,161 @@
+"""Pallas kernels vs pure-jnp oracles: shape x dtype x rank sweeps in
+interpret mode (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import lora_matmul_ref, wkv6_ref
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype, scale=0.1):
+    return jnp.asarray(RNG.normal(size=shape) * scale).astype(dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (64, 256, 128),
+                                   (100, 300, 200), (7, 130, 64),
+                                   (256, 512, 384)])
+@pytest.mark.parametrize("r", [4, 16])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lora_matmul_sweep(m, k, n, r, dtype):
+    x = _rand((m, k), dtype, 0.5)
+    w = _rand((k, n), dtype)
+    a = _rand((r, k), dtype)
+    b = _rand((n, r), dtype)
+    y = ops.fused_lora_matmul(x, w, a, b, scale=2.0)
+    yr = lora_matmul_ref(x, w, a, b, 2.0)
+    tol = 1e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(128, 128, 128), (128, 256, 128)])
+def test_lora_matmul_block_shapes(bm, bn, bk):
+    x = _rand((256, 256), jnp.float32, 0.5)
+    w = _rand((256, 256), jnp.float32)
+    a = _rand((16, 256), jnp.float32)
+    b = _rand((256, 16), jnp.float32)
+    y = ops.fused_lora_matmul(x, w, a, b, scale=1.5, bm=bm, bn=bn, bk=bk)
+    yr = lora_matmul_ref(x, w, a, b, 1.5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-3)
+
+
+def test_lora_matmul_batched_input():
+    """(..., K) leading dims are flattened and restored."""
+    x = _rand((2, 3, 128), jnp.float32, 0.5)
+    w = _rand((128, 64), jnp.float32)
+    a = _rand((8, 128), jnp.float32)
+    b = _rand((64, 8), jnp.float32)
+    y = ops.fused_lora_matmul(x, w, a, b, scale=1.0)
+    assert y.shape == (2, 3, 64)
+    yr = lora_matmul_ref(x.reshape(-1, 128), w, a, b, 1.0).reshape(2, 3, 64)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-3)
+
+
+@pytest.mark.parametrize("b,s,h,d", [(1, 16, 1, 16), (2, 37, 3, 16),
+                                     (2, 64, 2, 32), (1, 128, 4, 64)])
+@pytest.mark.parametrize("chunk", [16, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_sweep(b, s, h, d, chunk, dtype):
+    r = _rand((b, s, h, d), dtype, 0.3)
+    k = _rand((b, s, h, d), dtype, 0.3)
+    v = _rand((b, s, h, d), dtype, 0.3)
+    w = jnp.asarray(RNG.uniform(0.6, 0.995, size=(b, s, h, d))).astype(dtype)
+    u = _rand((h, d), jnp.float32, 0.3)
+    out, sf = ops.wkv6_apply(r, k, v, w, u, chunk=chunk)
+    outr, sfr = wkv6_ref(r, k, v, w, u, jnp.zeros((b, h, d, d)))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(outr, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sfr), atol=tol)
+
+
+def test_wkv6_state_continuity():
+    """Chunked kernel state == running the oracle in two halves."""
+    b, s, h, d = 1, 64, 2, 16
+    r = _rand((b, s, h, d), jnp.float32, 0.3)
+    k = _rand((b, s, h, d), jnp.float32, 0.3)
+    v = _rand((b, s, h, d), jnp.float32, 0.3)
+    w = jnp.asarray(RNG.uniform(0.7, 0.99, size=(b, s, h, d)), jnp.float32)
+    u = _rand((h, d), jnp.float32, 0.3)
+    _, sf = ops.wkv6_apply(r, k, v, w, u, chunk=16)
+    half = s // 2
+    _, s1 = wkv6_ref(r[:, :half], k[:, :half], v[:, :half], w[:, :half], u,
+                     jnp.zeros((b, h, d, d)))
+    _, s2 = wkv6_ref(r[:, half:], k[:, half:], v[:, half:], w[:, half:], u, s1)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(s2), atol=1e-4)
+
+
+def test_model_rwkv_block_matches_kernel():
+    """The model's wkv_scan (used in rwkv blocks) == the Pallas kernel."""
+    from repro.models.blocks import wkv_scan
+    b, s, h, d = 2, 32, 2, 16
+    r = _rand((b, s, h, d), jnp.float32, 0.3)
+    k = _rand((b, s, h, d), jnp.float32, 0.3)
+    v = _rand((b, s, h, d), jnp.float32, 0.3)
+    w = jnp.asarray(RNG.uniform(0.7, 0.99, size=(b, s, h, d)), jnp.float32)
+    u = _rand((h, d), jnp.float32, 0.3)
+    out_m, s_m = wkv_scan(r, k, v, w, u, jnp.zeros((b, h, d, d)))
+    out_k, s_k = ops.wkv6_apply(r, k, v, w, u, chunk=16)
+    np.testing.assert_allclose(np.asarray(out_m), np.asarray(out_k), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_m), np.asarray(s_k), atol=1e-4)
+
+
+@pytest.mark.parametrize("b,s,h,kh,d", [(2, 128, 4, 4, 32), (1, 100, 8, 2, 64),
+                                        (2, 64, 4, 1, 32)])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 64)])
+def test_flash_attention_sweep(b, s, h, kh, d, causal, window):
+    from repro.models import layers as L
+    q = _rand((b, s, h, d), jnp.float32, 1.0)
+    k = _rand((b, s, kh, d), jnp.float32, 1.0)
+    v = _rand((b, s, kh, d), jnp.float32, 1.0)
+    out = ops.flash_attention_apply(q, k, v, causal=causal, window=window,
+                                    bq=32, bk=32)
+    pos = jnp.arange(s)
+    ref_out = L.attention_full(q, k, v, causal=causal, window=window,
+                               q_pos=pos, k_pos=pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    from repro.models import layers as L
+    q = _rand((1, 128, 2, 32), jnp.bfloat16, 1.0)
+    k = _rand((1, 128, 2, 32), jnp.bfloat16, 1.0)
+    v = _rand((1, 128, 2, 32), jnp.bfloat16, 1.0)
+    out = ops.flash_attention_apply(q, k, v, causal=True, bq=64, bk=64)
+    pos = jnp.arange(128)
+    ref_out = L.attention_full(q, k, v, causal=True, window=None,
+                               q_pos=pos, k_pos=pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref_out, np.float32), atol=3e-2)
+
+
+def test_chunked_variants_match_naive():
+    """§Perf execution variants are numerically identical to the baselines."""
+    from repro.models import layers as L
+    from repro.models.blocks import wkv_chunked, wkv_scan
+    rng = np.random.default_rng(7)
+    q = _rand((2, 50, 4, 16), jnp.float32, 1.0)
+    k = _rand((2, 50, 2, 16), jnp.float32, 1.0)
+    v = _rand((2, 50, 2, 16), jnp.float32, 1.0)
+    pos = jnp.arange(50)
+    a1 = L.attention_full(q, k, v, causal=True, window=None, q_pos=pos,
+                          k_pos=pos, impl="naive")
+    a2 = L.attention_full(q, k, v, causal=True, window=None, q_pos=pos,
+                          k_pos=pos, impl="chunked", chunk=16)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), atol=2e-5)
+
+    r = _rand((2, 50, 3, 16), jnp.float32, 0.3)
+    kk = _rand((2, 50, 3, 16), jnp.float32, 0.3)
+    vv = _rand((2, 50, 3, 16), jnp.float32, 0.3)
+    w = jnp.asarray(rng.uniform(0.05, 0.999, size=(2, 50, 3, 16)), jnp.float32)
+    u = _rand((3, 16), jnp.float32, 0.3)
+    s0 = _rand((2, 3, 16, 16), jnp.float32, 0.1)
+    o1, st1 = wkv_scan(r, kk, vv, w, u, s0)
+    o2, st2 = wkv_chunked(r, kk, vv, w, u, s0, chunk=16)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st2), atol=1e-5)

@@ -1,0 +1,85 @@
+"""Optimizer + checkpoint substrates."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing import load, save
+from repro.optim import AdamW, schedules
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(learning_rate=0.1)
+    params = {"x": jnp.asarray([5.0, -3.0]), "y": jnp.asarray(2.0)}
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return jnp.sum(p["x"] ** 2) + p["y"] ** 2
+
+    for _ in range(300):
+        g = jax.grad(loss_fn)(params)
+        params, state = opt.update(g, state, params)
+    assert float(loss_fn(params)) < 1e-3
+
+
+def test_adamw_grad_clip():
+    opt = AdamW(learning_rate=0.1, grad_clip_norm=1.0)
+    params = {"x": jnp.zeros(3)}
+    state = opt.init(params)
+    g = {"x": jnp.asarray([1e6, 0.0, 0.0])}
+    new_params, state = opt.update(g, state, params)
+    assert np.all(np.isfinite(np.asarray(new_params["x"])))
+    assert abs(float(new_params["x"][0])) <= 0.11
+
+
+def test_adamw_weight_decay_shrinks():
+    opt = AdamW(learning_rate=0.01, weight_decay=0.1)
+    params = {"x": jnp.asarray([10.0])}
+    state = opt.init(params)
+    for _ in range(5):
+        params, state = opt.update({"x": jnp.zeros(1)}, state, params)
+    assert float(params["x"][0]) < 10.0
+
+
+def test_schedules():
+    sc = schedules.linear_warmup_cosine(1.0, 10, 100)
+    assert float(sc(jnp.int32(0))) == 0.0
+    assert float(sc(jnp.int32(10))) == pytest.approx(1.0, abs=1e-3)
+    assert float(sc(jnp.int32(100))) == pytest.approx(0.1, abs=1e-3)
+    inv = schedules.inverse_sqrt(1.0, 16)
+    assert float(inv(jnp.int32(16))) == pytest.approx(1.0)
+    assert float(inv(jnp.int32(64))) == pytest.approx(0.5)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                   "b": jnp.ones(4, jnp.bfloat16)},
+        "opt": (jnp.int32(7), [jnp.zeros(2), jnp.asarray([1.5, 2.5])]),
+        "nested": {"deep": {"x": jnp.asarray([True, False])}},
+    }
+    path = os.path.join(tmp_path, "ck", "state.ckpt")
+    save(path, tree)
+    back = load(path)
+    flat1 = jax.tree.leaves(tree)
+    flat2 = jax.tree.leaves(back)
+    assert len(flat1) == len(flat2)
+    assert jax.tree.structure(tree) == jax.tree.structure(back)
+    for a, b in zip(flat1, flat2):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_adamw_state(tmp_path):
+    opt = AdamW(1e-3)
+    params = {"a": jnp.ones((4, 4))}
+    st = opt.init(params)
+    path = os.path.join(tmp_path, "opt.ckpt")
+    save(path, {"state": tuple(st)})
+    back = load(path)["state"]
+    assert int(back[0]) == 0
+    np.testing.assert_array_equal(np.asarray(back[1]["a"]),
+                                  np.asarray(st.mu["a"]))

@@ -1,0 +1,69 @@
+"""§IV scheduling: Alg. 2, baselines, makespan semantics."""
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY
+from repro.core.cost_model import StepTimes, client_step_times, makespan
+from repro.core.scheduling import (resolve_order, schedule_fifo,
+                                   schedule_optimal, schedule_ours,
+                                   schedule_workload_first)
+from repro.fed.devices import LINK, PAPER_CLIENTS, PAPER_CUTS, SERVER
+
+
+def _paper_times():
+    cfg = REGISTRY["bert-base"]
+    return [client_step_times(cfg, cut, dev, SERVER, LINK, 16, 128)
+            for cut, dev in zip(PAPER_CUTS, PAPER_CLIENTS)]
+
+
+def test_alg2_ordering():
+    """descending N_c/C: jetson-nano (1/0.472) first."""
+    order = schedule_ours(PAPER_CUTS, [d.tflops for d in PAPER_CLIENTS])
+    ratios = [c / d.tflops for c, d in zip(PAPER_CUTS, PAPER_CLIENTS)]
+    assert order[0] == int(np.argmax(ratios))
+    assert sorted(order) == list(range(6))          # constraint (14)-(15)
+    vals = [ratios[u] for u in order]
+    assert vals == sorted(vals, reverse=True)
+
+
+def test_makespan_semantics():
+    # two clients: server must wait for arrival; second queues behind first
+    t = [StepTimes(t_f=1, t_fc=1, t_s=5, t_bc=1, t_b=1),
+         StepTimes(t_f=0, t_fc=0, t_s=2, t_bc=0, t_b=0)]
+    span, comp, waits = makespan(t, [0, 1])
+    assert comp[0] == pytest.approx(2 + 5 + 2)       # ready 2, srv 5, tail 2
+    assert comp[1] == pytest.approx(7 + 2)           # starts when 0 finishes
+    assert waits[1] == pytest.approx(7)
+    assert span == pytest.approx(9)
+
+
+def test_schedulers_valid_permutations():
+    times = _paper_times()
+    for policy in ("ours", "fifo", "wf", "optimal"):
+        order = resolve_order(policy, times, PAPER_CUTS,
+                              [d.tflops for d in PAPER_CLIENTS])
+        assert sorted(order) == list(range(6))
+
+
+def test_ours_beats_or_matches_fifo_and_wf_on_paper_fleet():
+    times = _paper_times()
+    span = {}
+    for policy in ("ours", "fifo", "wf", "optimal"):
+        order = resolve_order(policy, times, PAPER_CUTS,
+                              [d.tflops for d in PAPER_CLIENTS])
+        span[policy], _, _ = makespan(times, order)
+    assert span["ours"] <= span["fifo"] + 1e-9
+    assert span["ours"] <= span["wf"] + 1e-9
+    assert span["optimal"] <= span["ours"] + 1e-9
+
+
+def test_optimal_is_minimal_bruteforce():
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        times = [StepTimes(*rng.uniform(0.1, 3.0, size=5)) for _ in range(5)]
+        opt = schedule_optimal(times)
+        span_opt, _, _ = makespan(times, opt)
+        for _ in range(30):
+            perm = rng.permutation(5).tolist()
+            span, _, _ = makespan(times, perm)
+            assert span_opt <= span + 1e-9

@@ -1,0 +1,104 @@
+"""Multi-tenant adapter-switching serving engine."""
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny("gemma-2b", n_layers=2, d_model=256)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init_params(rng)
+    adapters = {}
+    for i, tenant in enumerate(("client-a", "client-b")):
+        lo = model.init_lora(jax.random.PRNGKey(10 + i))
+        lo = jax.tree.map(
+            lambda x, _i=i: jax.random.normal(jax.random.PRNGKey(20 + _i),
+                                              x.shape) * 0.05, lo)
+        adapters[tenant] = lo
+    return cfg, model, params, adapters
+
+
+def test_engine_serves_all_requests(setup):
+    cfg, model, params, adapters = setup
+    eng = ServingEngine(cfg, params, adapters, slots=2, cache_len=64)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(5):
+        tenant = ["client-a", "client-b"][i % 2]
+        reqs.append(Request(uid=i, tenant=tenant,
+                            prompt=rng.integers(2, cfg.vocab_size,
+                                                size=6).astype(np.int32),
+                            max_new_tokens=8))
+        eng.submit(reqs[-1])
+    done = eng.run()
+    assert len(done) == 5
+    for r in done:
+        assert r.output is not None and len(r.output) == 8
+    assert eng.stats["adapter_switches"] >= 2      # both tenants served
+    assert eng.stats["completed"] == 5
+
+
+def test_engine_matches_single_request_decode(setup):
+    """Batched+slotted serving produces the same greedy tokens as a direct
+    single-request decode with the same adapter."""
+    cfg, model, params, adapters = setup
+    prompt = np.asarray([3, 5, 7, 11], np.int32)
+    n_new = 6
+    eng = ServingEngine(cfg, params, adapters, slots=2, cache_len=32)
+    req = Request(uid=0, tenant="client-a", prompt=prompt,
+                  max_new_tokens=n_new)
+    eng.submit(req)
+    eng.run()
+
+    # oracle: token-by-token greedy decode
+    import jax.numpy as jnp
+    lora = adapters["client-a"]
+    cache = model.init_cache(1, 32)
+    toks = list(prompt)
+    logits = None
+    for i, t in enumerate(toks):
+        logits, cache = model.serve_step(params, lora, cache,
+                                         jnp.asarray([[t]], jnp.int32),
+                                         jnp.int32(i))
+    out = []
+    for i in range(n_new):
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        logits, cache = model.serve_step(params, lora, cache,
+                                         jnp.asarray([[nxt]], jnp.int32),
+                                         jnp.int32(len(prompt) + i))
+    np.testing.assert_array_equal(req.output, np.asarray(out, np.int32))
+
+
+def test_engine_tenant_isolation(setup):
+    """Different adapters => different outputs for the same prompt."""
+    cfg, model, params, adapters = setup
+    prompt = np.asarray([3, 5, 7, 11, 13, 17], np.int32)
+    outs = {}
+    for tenant in ("client-a", "client-b"):
+        eng = ServingEngine(cfg, params, adapters, slots=1, cache_len=32)
+        req = Request(uid=0, tenant=tenant, prompt=prompt, max_new_tokens=8)
+        eng.submit(req)
+        eng.run()
+        outs[tenant] = req.output
+    assert not np.array_equal(outs["client-a"], outs["client-b"])
+
+
+def test_engine_eos_and_recycling(setup):
+    cfg, model, params, adapters = setup
+    eng = ServingEngine(cfg, params, adapters, slots=1, cache_len=32)
+    rng = np.random.default_rng(1)
+    for i in range(3):
+        eng.submit(Request(uid=i, tenant="client-a",
+                           prompt=rng.integers(2, cfg.vocab_size,
+                                               size=4).astype(np.int32),
+                           max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 3                          # slot recycled 3x
+    assert eng.stats["completed"] == 3
