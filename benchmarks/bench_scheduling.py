@@ -1,14 +1,20 @@
 """Paper §V scheduling claims: our Alg. 2 vs FIFO vs WF vs brute-force
 optimal — per-step makespan on the paper's six-device fleet (BERT-base) and
-on randomized fleets (robustness)."""
+on randomized fleets (robustness).  Plus the PR-1 engine comparisons:
+analytic (Eq. 10-12) vs event-driven round clock, and sequential vs
+cohort-batched server step throughput."""
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
-from repro.configs import REGISTRY
+from repro.configs import REGISTRY, reduced
 from repro.core.cost_model import StepTimes, client_step_times, makespan
-from repro.core.scheduling import resolve_order
+from repro.core.scheduling import (ONLINE_DISCIPLINES, alg2_priorities,
+                                   resolve_order)
 from repro.fed.devices import LINK, PAPER_CLIENTS, PAPER_CUTS, SERVER
+from repro.fed.engine import jobs_from_times, simulate_round
 
 POLICIES = ("ours", "fifo", "wf", "optimal")
 
@@ -48,6 +54,105 @@ def random_fleet_wins(n_trials=200, seed=0):
     return better_f / n_trials, better_w / n_trials, float(np.mean(gap_opt))
 
 
+def engine_vs_analytic():
+    """Event-driven round clock vs the closed-form makespan.
+
+    Fixed-order mode must be EXACT (delta 0); the online disciplines may do
+    better or worse than their precomputed-order counterparts because they
+    choose among *arrived* jobs only."""
+    cfg = REGISTRY["bert-base"]
+    times = [client_step_times(cfg, c, d, SERVER, LINK, 16, 128)
+             for c, d in zip(PAPER_CUTS, PAPER_CLIENTS)]
+    tfl = [d.tflops for d in PAPER_CLIENTS]
+    uids = list(range(len(times)))
+    out = {}
+    for pol in POLICIES:
+        order = resolve_order(pol, times, PAPER_CUTS, tfl)
+        analytic, _, _ = makespan(times, order)
+        fixed = simulate_round(jobs_from_times(times, uids), order=order)
+        if pol in ONLINE_DISCIPLINES:
+            disc, needs_pri = ONLINE_DISCIPLINES[pol]
+            pri = alg2_priorities(PAPER_CUTS, tfl) if needs_pri else None
+            online = simulate_round(
+                jobs_from_times(times, uids, priorities=pri), policy=disc)
+            online_span = online.round_time
+        else:
+            online_span = fixed.round_time
+        out[pol] = (analytic, fixed.round_time, online_span)
+    return out
+
+
+def server_throughput(iters=4):
+    """Wall-clock of U sequential per-cut server dispatches vs ONE batched
+    vmapped dispatch over the same cohort (tiny BERT, real jitted steps)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import lora as lora_lib
+    from repro.core import splitfl
+    from repro.models import build_model
+    from repro.optim import AdamW
+
+    cfg = reduced(REGISTRY["bert-base"], n_layers=4, d_model=256)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    lora = model.init_lora(jax.random.PRNGKey(1))
+    spec = jax.eval_shape(lambda: lora)
+    opt = AdamW(1e-3)
+    cuts = [1, 1, 2, 2, 3, 3]
+    u, b, s = len(cuts), 8, 32
+    r = np.random.default_rng(0)
+    batches, vs, loras, heads, opts = [], [], [], [], []
+    for cut in cuts:
+        batches.append({
+            "tokens": jnp.asarray(r.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+            "label": jnp.asarray(r.integers(0, cfg.n_classes, (b,)), jnp.int32)})
+        vs.append(jnp.asarray(r.normal(size=(b, s, cfg.d_model)), jnp.float32))
+        _, srv = lora_lib.split_lora(lora, cut)
+        full = lora_lib.embed_in_full_shape(srv, spec, cut, "server")
+        loras.append(full)
+        heads.append(params["cls_head"])
+        opts.append(opt.init({"lora": full, "head": params["cls_head"]}))
+
+    seq_steps = {c: splitfl.make_server_step_cls(model, opt, path="sliced",
+                                                 static_cut=c)
+                 for c in sorted(set(cuts))}
+
+    def run_sliced():
+        for i, cut in enumerate(cuts):
+            out = seq_steps[cut](params, loras[i], heads[i], opts[i],
+                                 vs[i], batches[i])
+        jax.block_until_ready(out[0])
+
+    # the production sequential server: ONE traced-cut executable, U dispatches
+    scan_step = splitfl.make_server_step_cls(model, opt, path="scan")
+
+    def run_scan():
+        for i, cut in enumerate(cuts):
+            out = scan_step(params, loras[i], heads[i], opts[i],
+                            vs[i], batches[i], jnp.int32(cut))
+        jax.block_until_ready(out[0])
+
+    bstep = splitfl.make_server_step_cls_batched(model, opt)
+    stacked = (lora_lib.stack_trees(loras), jnp.stack(heads),
+               lora_lib.stack_trees(opts), jnp.stack(vs),
+               lora_lib.stack_trees(batches), jnp.asarray(cuts))
+
+    def run_batched():
+        out = bstep(params, *stacked)
+        jax.block_until_ready(out[0])
+
+    def clock(fn):
+        fn()                      # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        return (time.perf_counter() - t0) / iters
+
+    t_sliced, t_scan, t_bat = clock(run_sliced), clock(run_scan), clock(run_batched)
+    return {"sliced": t_sliced, "scan": t_scan, "batched": t_bat, "u": u}
+
+
 def run(csv=False):
     spans = paper_fleet_spans()
     red_fifo = 1 - spans["ours"] / spans["fifo"]
@@ -66,6 +171,32 @@ def run(csv=False):
     out.append(("sched_reduction_vs_wf", 0.0, f"{red_wf:.4f}"))
     out.append(("sched_random_win_rate", 0.0,
                 f"fifo={wf_frac:.2f};wf={ww_frac:.2f};opt_gap={opt_gap:.4f}"))
+
+    # -- analytic vs event-driven round clock --------------------------------
+    for pol, (analytic, fixed, online) in engine_vs_analytic().items():
+        parity = fixed - analytic
+        delta = (online - analytic) / analytic
+        if not csv:
+            print(f"engine[{pol:8s}] analytic {analytic*1e3:8.2f} ms  "
+                  f"fixed-order parity {parity:+.2e}  "
+                  f"online delta {delta:+.2%}")
+        out.append((f"engine_{pol}", online * 1e6,
+                    f"analytic_us={analytic*1e6:.2f};parity={parity:.3e}"))
+
+    # -- sequential vs cohort-batched server step ----------------------------
+    tp = server_throughput()
+    u = tp.pop("u")
+    for name, t in tp.items():
+        if not csv:
+            print(f"server step [{name:7s}] {t*1e3:8.2f} ms/cohort "
+                  f"({u/t:6.1f} clients/s)")
+        out.append((f"server_step_{name}", t * 1e6,
+                    f"clients_per_s={u/t:.1f}"))
+    if not csv:
+        print(f"batched speedup vs sequential scan: {tp['scan']/tp['batched']:.2f}x")
+    out.append(("server_batched_speedup", 0.0,
+                f"vs_scan={tp['scan']/tp['batched']:.3f};"
+                f"vs_sliced={tp['sliced']/tp['batched']:.3f}"))
     return out
 
 

@@ -38,7 +38,7 @@ def main() -> None:
     if args.only:
         benches = [(n, f) for n, f in benches if n == args.only]
 
-    rows = []
+    rows, failed = [], []
     for name, fn in benches:
         t0 = time.time()
         print(f"== {name} ==", file=sys.stderr)
@@ -46,6 +46,7 @@ def main() -> None:
             rows.extend(fn(csv=True))
         except Exception as e:  # report, keep going
             rows.append((f"{name}_FAILED", 0.0, repr(e)[:120]))
+            failed.append(name)
             import traceback
             traceback.print_exc()
         print(f"== {name} done in {time.time()-t0:.1f}s ==", file=sys.stderr)
@@ -53,6 +54,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
+    if failed:   # every bench still ran, but CI must see the breakage
+        sys.exit(f"benchmarks failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

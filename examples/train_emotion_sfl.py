@@ -41,7 +41,8 @@ def main():
     else:
         # bert-small-ish: 4 layers, d=512 -> ~29M params
         cfg = reduced(REGISTRY["bert-base"], n_layers=4, d_model=512)
-        cfg = cfg.with_(n_heads=8, n_kv_heads=8, head_dim=64,
+        # reduced() caps vocab at 512 but the emotion corpus spans ~6.4k ids
+        cfg = cfg.with_(n_heads=8, n_kv_heads=8, head_dim=64, vocab_size=8192,
                         max_position=max(64, args.seq), dtype="float32")
 
     train = make_emotion_dataset(args.n_train, seq_len=args.seq,

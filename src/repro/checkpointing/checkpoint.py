@@ -1,5 +1,6 @@
-"""Pytree checkpointing: leaves -> zstd-compressed msgpack of raw ndarray
-buffers, structure -> path-keyed (no pickle; robust across sessions)."""
+"""Pytree checkpointing: leaves -> msgpack of raw ndarray buffers
+(zstd-compressed when ``zstandard`` is installed), structure -> path-keyed
+(no pickle; robust across sessions)."""
 from __future__ import annotations
 
 import os
@@ -9,10 +10,36 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional dependency: the ``zstd`` extra
+    import zstandard
+except ImportError:
+    zstandard = None
 
 PyTree = Any
 _SEP = "\x1f"   # unit separator: never appears in our dict keys
+_MAGIC_ZSTD = b"\x28\xb5\x2f\xfd"   # zstd frame header
+
+
+def _compress(raw: bytes, level: int) -> bytes:
+    if zstandard is None:
+        return raw
+    return zstandard.ZstdCompressor(level=level).compress(raw)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _MAGIC_ZSTD:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint is zstd-compressed but the 'zstandard' package is "
+                "not installed (pip install repro[zstd])")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return blob
+
+
+def codec() -> str:
+    """Codec tag recorded for saves on this install."""
+    return "zstd" if zstandard is not None else "raw"
 
 
 def _flatten(tree: PyTree):
@@ -60,18 +87,20 @@ def save(path: str, tree: PyTree, level: int = 3) -> None:
         k: {"dtype": str(v.dtype), "shape": list(v.shape), "data": v.tobytes()}
         for k, v in flat.items()
     }
+    payload["\x00codec"] = codec()
     raw = msgpack.packb(payload, use_bin_type=True)
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(zstandard.ZstdCompressor(level=level).compress(raw))
+        f.write(_compress(raw, level))
     os.replace(tmp, path)
 
 
 def load(path: str, as_jax: bool = True) -> PyTree:
     with open(path, "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+        raw = _decompress(f.read())
     payload = msgpack.unpackb(raw, raw=False)
+    payload.pop("\x00codec", None)
     flat = {}
     for k, rec in payload.items():
         arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))

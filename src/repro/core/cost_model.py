@@ -119,6 +119,20 @@ def lora_upload_bytes(cfg: ModelConfig, cut: int, dtype_bytes: int = 4) -> float
     return per_layer * cut
 
 
+def chunked_service_time(service_times: Sequence[float],
+                         efficiency: float = 1.0) -> float:
+    """Server time for one cohort chunk.  A single client is the sequential
+    baseline (exactly its t_s); a k>1 chunk runs as ONE batched vmapped
+    dispatch whose FLOPs still add up, discounted by ``efficiency`` (the
+    measured batching win — fewer dispatches, fuller kernels)."""
+    if not 0.0 < efficiency <= 1.0:
+        raise ValueError("efficiency must be in (0, 1]")
+    ts = list(service_times)
+    if len(ts) <= 1:
+        return float(sum(ts))
+    return float(efficiency * sum(ts))
+
+
 def makespan(times: Sequence[StepTimes], order: Sequence[int]):
     """Pipeline semantics of Eqs. 10-12: the server is a single sequential
     resource; client u's job becomes available at ready_u; completion is

@@ -8,7 +8,7 @@ re-assembly is a concat — exact and loss-free for heterogeneous cuts.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -134,6 +134,19 @@ def merge_lora(params: PyTree, lora: PyTree, scale: float) -> PyTree:
 
 def zeros_like_lora(lora: PyTree) -> PyTree:
     return jax.tree.map(jnp.zeros_like, lora)
+
+
+def stack_trees(trees: Sequence[PyTree]) -> PyTree:
+    """Stack same-structure pytrees along a new leading cohort axis — the
+    batched server step advances one such stacked tree per cohort chunk."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def unstack_tree(tree: PyTree) -> list:
+    """Inverse of :func:`stack_trees`: split the leading cohort axis back
+    into a list of per-client pytrees."""
+    n = jax.tree.leaves(tree)[0].shape[0]
+    return [jax.tree.map(lambda a, i=i: a[i], tree) for i in range(n)]
 
 
 def slice_stack(tree: PyTree, lo: int, hi: int) -> PyTree:

@@ -44,11 +44,28 @@ def schedule_optimal(times: Sequence[StepTimes], limit: int = 8) -> List[int]:
     return best_order
 
 
+def alg2_priorities(n_client_layers: Sequence[int],
+                    compute: Sequence[float]) -> List[float]:
+    """Alg. 2's N_c^u / C_u as a per-client priority value — the online
+    (event-engine) form of ``schedule_ours``: when the server frees, serve
+    the arrived client with the largest ratio."""
+    return [n / c for n, c in zip(n_client_layers, compute)]
+
+
 SCHEDULERS = {
     "ours": None,        # needs (n_layers, compute); see resolve_order
     "fifo": schedule_fifo,
     "wf": schedule_workload_first,
     "optimal": schedule_optimal,
+}
+
+# offline policy name -> (engine queue discipline, needs_priorities).
+# "optimal" has no online form: its brute-force order is handed to the
+# engine as a fixed ``order`` instead.
+ONLINE_DISCIPLINES = {
+    "ours": ("priority", True),
+    "fifo": ("fifo", False),
+    "wf": ("wf", False),
 }
 
 

@@ -109,6 +109,102 @@ def make_server_step_cls(model, opt: AdamW, *, path: str = "sliced",
     return jax.jit(step)
 
 
+def _chunk_slices(u: int, cohort_chunk: Optional[int]):
+    k = u if not cohort_chunk or cohort_chunk <= 0 else min(int(cohort_chunk), u)
+    return [slice(lo, min(lo + k, u)) for lo in range(0, u, k)]
+
+
+def _tree_slice(tree: PyTree, sl: slice) -> PyTree:
+    return jax.tree.map(lambda a: a[sl], tree)
+
+
+def _tree_concat(parts) -> PyTree:
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+
+
+def make_server_step_batched(model, opt: AdamW, *,
+                             cohort_chunk: Optional[int] = None,
+                             donate: bool = True):
+    """Cohort-batched server step: ONE vmapped executable advances a whole
+    chunk of clients instead of U sequential dispatches.
+
+    signature: (params, lora_s, opt_state, v, batch, cuts) ->
+               (losses, new_lora_s, new_opt_state, dv)
+
+    Every argument after ``params`` carries a leading cohort axis U: the
+    per-client full-shape server adapters (``lora.embed_in_full_shape`` +
+    ``lora.stack_trees``), optimizer states, activations, batches, and an
+    int32 ``cuts`` vector.  The cut is *traced* per cohort lane (path='scan'),
+    so heterogeneous cuts share the compiled executable.  ``cohort_chunk``
+    bounds how many clients are materialized per dispatch — the paper's
+    sequential server is exactly ``cohort_chunk=1``.
+    """
+    def one(params, lora_s, opt_state, v, batch, cut):
+        def loss_fn(lo, vv):
+            loss, _ = server_loss(model, params, lo, vv, batch, cut,
+                                  path="scan")
+            return loss
+
+        loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1))(lora_s, v)
+        g_lora, g_v = grads
+        new_lora, new_opt = opt.update(g_lora, opt_state, lora_s)
+        return loss, new_lora, new_opt, g_v
+
+    vstep = jax.vmap(one, in_axes=(None, 0, 0, 0, 0, 0))
+    jitted = jax.jit(vstep, donate_argnums=(1, 2) if donate else ())
+
+    def step(params, lora_s, opt_state, v, batch, cuts):
+        cuts = jnp.asarray(cuts, jnp.int32)
+        outs = [jitted(params, _tree_slice(lora_s, sl), _tree_slice(opt_state, sl),
+                       v[sl], _tree_slice(batch, sl), cuts[sl])
+                for sl in _chunk_slices(int(cuts.shape[0]), cohort_chunk)]
+        return _tree_concat(outs)
+
+    return step
+
+
+def make_server_step_cls_batched(model, opt: AdamW, *,
+                                 cohort_chunk: Optional[int] = None,
+                                 donate: bool = False):
+    """Cohort-batched classification server step (per-client heads train
+    alongside the server adapters).
+
+    signature: (params, lora_s, heads, opt_state, v, batch, cuts) ->
+               (losses, new_lora_s, new_heads, new_opt_state, dv)
+    with the same leading cohort axis conventions as
+    :func:`make_server_step_batched`; ``opt_state`` is over the stacked
+    pytree {"lora": ..., "head": ...}.
+    """
+    def one(params, lora_s, head, opt_state, v, batch, cut):
+        def loss_fn(trainable, vv):
+            pp = dict(params)
+            pp["cls_head"] = trainable["head"]
+            loss, _ = server_loss(model, pp, trainable["lora"], vv, batch,
+                                  cut, path="scan")
+            return loss
+
+        trainable = {"lora": lora_s, "head": head}
+        loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1))(trainable, v)
+        g_tr, g_v = grads
+        new_tr, new_opt = opt.update(g_tr, opt_state, trainable)
+        return loss, new_tr["lora"], new_tr["head"], new_opt, g_v
+
+    vstep = jax.vmap(one, in_axes=(None, 0, 0, 0, 0, 0, 0))
+    jitted = jax.jit(vstep, donate_argnums=(1, 2, 3) if donate else ())
+
+    def step(params, lora_s, heads, opt_state, v, batch, cuts):
+        cuts = jnp.asarray(cuts, jnp.int32)
+        outs = [jitted(params, _tree_slice(lora_s, sl), heads[sl],
+                       _tree_slice(opt_state, sl), v[sl],
+                       _tree_slice(batch, sl), cuts[sl])
+                for sl in _chunk_slices(int(cuts.shape[0]), cohort_chunk)]
+        return _tree_concat(outs)
+
+    return step
+
+
 def make_client_step(model, opt: AdamW, cut: int, *, path: str = "sliced"):
     """Build the jitted client fwd+bwd pair for a fixed (static) cut.
 

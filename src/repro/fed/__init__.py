@@ -1,6 +1,9 @@
 from repro.fed.devices import (LINK, PAPER_CLIENTS, PAPER_CUTS, SERVER,
                                TPU_V5E)
+from repro.fed.engine import (EngineResult, Job, ServiceRecord,
+                              jobs_from_times, simulate_round)
 from repro.fed.simulator import FedRunConfig, RoundRecord, Simulator
 
-__all__ = ["FedRunConfig", "LINK", "PAPER_CLIENTS", "PAPER_CUTS",
-           "RoundRecord", "SERVER", "Simulator", "TPU_V5E"]
+__all__ = ["EngineResult", "FedRunConfig", "Job", "LINK", "PAPER_CLIENTS",
+           "PAPER_CUTS", "RoundRecord", "SERVER", "ServiceRecord",
+           "Simulator", "TPU_V5E", "jobs_from_times", "simulate_round"]

@@ -1,0 +1,234 @@
+"""Discrete-event round clock for the split-federated server (§IV, beyond
+the closed-form Eqs. 10-12).
+
+The analytic ``cost_model.makespan`` assumes a synchronous round, one server
+slot, and a total order fixed before the round starts.  This engine replays
+the same Eq. 10 phase structure as *events*
+
+    fwd_done      client-side forward finished        (t = arrival + T^f)
+    uplink_done   activations arrived at the server   (+ T^fc)
+    server_start  a server slot dequeued the client   (queue discipline)
+    server_done   server fwd+bwd finished             (+ service time)
+    downlink_done activation gradients delivered      (+ T^bc)
+    client_done   client-side backward finished       (+ T^b)
+
+so that scheduling policies act as *online* queue disciplines (choose among
+the jobs whose activations have actually arrived), the server may expose
+multiple slots, a slot may serve a cohort *chunk* at once (the batched
+vmapped server step), clients may arrive staggered (async / semi-sync
+rounds), and a deadline may cut stragglers out mid-round.
+
+With ``slots=1``, ``cohort_chunk=1`` and a fixed ``order``, the engine
+reproduces ``cost_model.makespan`` exactly (tested) — the analytic model is
+the degenerate case of this clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cost_model import StepTimes, chunked_service_time
+
+__all__ = ["Job", "ServiceRecord", "EngineResult", "jobs_from_times",
+           "simulate_round"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Job:
+    """One client's Eq. 10 phase durations for this round."""
+    uid: int
+    t_f: float      # client forward
+    t_fc: float     # activation uplink
+    t_s: float      # server fwd+bwd (this client's remaining layers)
+    t_bc: float     # activation-gradient downlink
+    t_b: float      # client backward
+    arrival: float = 0.0   # round-relative start offset (async rounds)
+    priority: float = 0.0  # policy="priority" key (e.g. Alg. 2's N_c/C)
+
+    @property
+    def ready(self) -> float:
+        """When the job enters the server queue."""
+        return self.arrival + self.t_f + self.t_fc
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceRecord:
+    """One server dispatch: a chunk of client uids served together."""
+    slot: int
+    uids: Tuple[int, ...]
+    start: float
+    end: float
+
+
+@dataclasses.dataclass
+class EngineResult:
+    round_time: float
+    service: List[ServiceRecord]            # dispatch order, chunk grouping
+    completion: Dict[int, float]            # uid -> client_done time
+    waits: Dict[int, float]                 # uid -> T^w (queue wait)
+    dropped: List[int]                      # uids cut by the deadline
+    events: List[Tuple[float, str, int]]    # (time, kind, uid) trace
+
+    @property
+    def order(self) -> List[int]:
+        """Flat service order (chunk-major)."""
+        return [u for rec in self.service for u in rec.uids]
+
+
+def jobs_from_times(times: Sequence[StepTimes], uids: Sequence[int], *,
+                    priorities: Optional[Sequence[float]] = None,
+                    arrivals: Optional[Sequence[float]] = None) -> List[Job]:
+    """Build engine jobs for the chosen cohort.  ``times``, ``priorities``
+    and ``arrivals`` are all indexed by uid (full-fleet lists), so partial
+    cohorts pick out exactly their own entries."""
+    out = []
+    for u in uids:
+        st = times[u]
+        out.append(Job(uid=u, t_f=st.t_f, t_fc=st.t_fc, t_s=st.t_s,
+                       t_bc=st.t_bc, t_b=st.t_b,
+                       arrival=arrivals[u] if arrivals is not None else 0.0,
+                       priority=priorities[u] if priorities is not None else 0.0))
+    return out
+
+
+# -- queue disciplines -------------------------------------------------------
+# Each discipline maps an *arrived* job to a sort key; the smallest key is
+# served next.  This is the online counterpart of ``scheduling.resolve_order``:
+# FIFO picks by arrival, WF by largest server workload, "priority" by the
+# caller-supplied key (Alg. 2 passes N_c^u / C_u so the clients with the
+# longest client-side backward get their gradients first).
+
+def _key_fifo(job: Job):
+    return (job.ready, job.uid)
+
+
+def _key_wf(job: Job):
+    return (-job.t_s, job.uid)
+
+
+def _key_priority(job: Job):
+    return (-job.priority, job.uid)
+
+
+DISCIPLINES: Dict[str, Callable[[Job], tuple]] = {
+    "fifo": _key_fifo,
+    "wf": _key_wf,
+    "priority": _key_priority,
+}
+
+
+def simulate_round(jobs: Sequence[Job], *, policy: str = "fifo",
+                   order: Optional[Sequence[int]] = None, slots: int = 1,
+                   cohort_chunk: int = 1, chunk_efficiency: float = 1.0,
+                   deadline: Optional[float] = None) -> EngineResult:
+    """Run one round through the event clock.
+
+    policy           online discipline ("fifo" | "wf" | "priority") — ignored
+                     when ``order`` is given;
+    order            fixed uid sequence (the analytic / brute-force-optimal
+                     mode): slots serve exactly this order, waiting for each
+                     job's activations like ``cost_model.makespan`` does;
+    slots            concurrent server executors;
+    cohort_chunk     max clients dispatched together (batched server step);
+    chunk_efficiency fraction of the summed sequential service time a k>1
+                     chunk costs (1.0 = no batching win);
+    deadline         jobs not dispatched by this time are dropped mid-round.
+    """
+    if slots < 1 or cohort_chunk < 1:
+        raise ValueError("slots and cohort_chunk must be >= 1")
+    if order is not None and sorted(order) != sorted(j.uid for j in jobs):
+        raise ValueError("order must be a permutation of the job uids")
+    if order is None and policy not in DISCIPLINES:
+        raise KeyError(f"unknown queue discipline {policy!r}")
+
+    by_uid = {j.uid: j for j in jobs}
+    events: List[Tuple[float, str, int]] = []
+    service: List[ServiceRecord] = []
+    completion: Dict[int, float] = {}
+    waits: Dict[int, float] = {}
+    dropped: List[int] = []
+
+    # event heap holds arrivals; (time, seq) keeps ordering deterministic
+    heap: List[Tuple[float, int, int]] = []
+    for seq, j in enumerate(jobs):
+        events.append((j.arrival + j.t_f, "fwd_done", j.uid))
+        events.append((j.ready, "uplink_done", j.uid))
+        heapq.heappush(heap, (j.ready, seq, j.uid))
+
+    slot_free = [0.0] * slots
+    queue: List[int] = []            # uids with activations at the server
+    pending = list(order) if order is not None else None
+
+    def drain_arrivals(now: float):
+        while heap and heap[0][0] <= now:
+            _, _, uid = heapq.heappop(heap)
+            queue.append(uid)
+
+    def finish(uids: Sequence[int], slot: int, start: float, end: float):
+        service.append(ServiceRecord(slot, tuple(uids), start, end))
+        events.append((start, "server_start", uids[0]))
+        events.append((end, "server_done", uids[0]))
+        for u in uids:
+            j = by_uid[u]
+            waits[u] = start - j.ready
+            events.append((end + j.t_bc, "downlink_done", u))
+            completion[u] = end + j.t_bc + j.t_b
+            events.append((completion[u], "client_done", u))
+
+    n_left = len(jobs)
+    while n_left > 0:
+        slot = min(range(slots), key=lambda s: slot_free[s])
+        now = slot_free[slot]
+        drain_arrivals(now)
+
+        if order is not None:
+            # fixed-order mode: take the next uids in sequence, wait for them
+            take = pending[:cohort_chunk]
+            pending[:cohort_chunk] = []
+            start = max(now, max(by_uid[u].ready for u in take))
+            if deadline is not None and start > deadline:
+                dropped.extend(take)
+                n_left -= len(take)
+                continue
+        else:
+            if not queue:
+                # idle until the next activation arrives.  ALL idle slots
+                # advance to that instant — bumping only the chosen slot
+                # would let another slot with an earlier clock dispatch the
+                # drained job "in the past" (negative wait).
+                nxt = heap[0][0]
+                if deadline is not None and nxt > deadline:
+                    while heap:
+                        dropped.append(heapq.heappop(heap)[2])
+                        n_left -= 1
+                    continue
+                for s in range(slots):
+                    slot_free[s] = max(slot_free[s], nxt)
+                drain_arrivals(nxt)
+                continue
+            key = DISCIPLINES[policy]
+            queue.sort(key=lambda u: key(by_uid[u]))
+            take = queue[:cohort_chunk]
+            queue[:cohort_chunk] = []
+            start = now
+            if deadline is not None and start > deadline:
+                dropped.extend(take)
+                n_left -= len(take)
+                continue
+
+        span = chunked_service_time([by_uid[u].t_s for u in take],
+                                    chunk_efficiency)
+        finish(take, slot, start, start + span)
+        slot_free[slot] = start + span
+        n_left -= len(take)
+
+    events.sort(key=lambda e: (e[0], e[1], e[2]))
+    round_time = max(completion.values()) if completion else 0.0
+    if deadline is not None and dropped:
+        # the server waited until the deadline before cutting stragglers,
+        # so the round cannot be shorter than the deadline itself
+        round_time = max(round_time, deadline)
+    return EngineResult(round_time=round_time, service=service,
+                        completion=completion, waits=waits, dropped=dropped,
+                        events=events)

@@ -29,10 +29,12 @@ from repro.core import memory_model, splitfl
 from repro.core.cost_model import (DeviceProfile, LinkProfile, StepTimes,
                                    client_step_times, lora_upload_bytes,
                                    makespan)
-from repro.core.scheduling import resolve_order
+from repro.core.scheduling import (ONLINE_DISCIPLINES, alg2_priorities,
+                                   resolve_order)
 from repro.data import ClassificationLoader, EmotionDataset, dirichlet_partition
 from repro.fed import metrics as M
 from repro.fed.devices import LINK, SERVER
+from repro.fed.engine import jobs_from_times, simulate_round
 from repro.models import build_model
 from repro.optim import AdamW
 
@@ -57,6 +59,16 @@ class FedRunConfig:
     participation: float = 1.0           # fraction of clients sampled per round
     straggler_prob: float = 0.0          # per-client chance of a slow round
     straggler_slowdown: float = 3.0      # compute slowdown when straggling
+    # -- server engine (fed/engine.py) ---------------------------------------
+    engine: str = "analytic"             # analytic (Eq. 10-12) | event (DES)
+    # cohort_chunk works under BOTH engines (it picks the batched vmapped
+    # server step for chunks > 1); with engine="analytic" the round TIME
+    # stays the sequential makespan — only "event" models chunked service.
+    cohort_chunk: int = 1                # clients per batched server dispatch
+    # event-only knobs (rejected under engine="analytic"):
+    chunk_efficiency: float = 1.0        # k>1 chunk cost vs summed sequential
+    server_slots: int = 1                # concurrent server executors
+    round_deadline: Optional[float] = None  # drop stragglers mid-round
 
 
 @dataclasses.dataclass
@@ -74,6 +86,21 @@ class Simulator:
                  test: EmotionDataset, run: FedRunConfig,
                  link: LinkProfile = LINK, server: DeviceProfile = SERVER):
         assert len(devices) == len(cuts)
+        if run.engine not in ("analytic", "event"):
+            raise KeyError(f"unknown engine {run.engine!r}")
+        if not 0.0 < run.chunk_efficiency <= 1.0:
+            raise ValueError("chunk_efficiency must be in (0, 1]")
+        if run.engine == "analytic" and (run.chunk_efficiency != 1.0
+                                         or run.server_slots != 1
+                                         or run.round_deadline is not None):
+            raise ValueError("chunk_efficiency / server_slots / "
+                             "round_deadline model the event-driven round "
+                             "clock; set engine='event' to use them")
+        if run.engine == "event" and run.scheme != "ours":
+            # the DES models the paper's single shared-server queue; sfl
+            # (concurrent submodels) and sl (strictly sequential) keep
+            # their own closed-form time models
+            raise ValueError("engine='event' only models scheme='ours'")
         self.cfg, self.run = cfg, run
         self.devices, self.cuts = list(devices), [int(c) for c in cuts]
         self.link, self.server_dev = link, server
@@ -121,6 +148,11 @@ class Simulator:
                 self.model, self.opt, path="sliced", static_cut=cut)
             self._cli_steps[cut] = splitfl.make_client_step(
                 self.model, self.opt, cut, path="sliced")
+        # cohort-batched server step: ONE vmapped executable with traced
+        # per-client cuts serves any chunk handed over by the round clock
+        self._srv_step_batched = splitfl.make_server_step_cls_batched(
+            self.model, self.opt)
+        self._last_event = None   # EngineResult of the last event-driven round
 
         # analytic per-step Eq.10 terms (fixed per client)
         self.times: List[StepTimes] = [
@@ -156,9 +188,52 @@ class Simulator:
                                            t_fc=t_fc, t_bc=t_bc))
         return out
 
+    def _service_plan(self):
+        """Decide this round's server dispatch groups (and, for the event
+        engine, the round clock outcome).
+
+        Returns (groups, dropped): ``groups`` is a list of uid-chunks served
+        in order — each chunk of size>1 runs through the batched vmapped
+        server step; ``dropped`` are clients cut off by the round deadline.
+        """
+        run = self.run
+        t = self._times_this_round
+        tfl = [d.tflops for d in self.devices]
+        chunk = max(1, int(run.cohort_chunk))
+        if run.engine == "analytic" or run.scheme != "ours":
+            order = resolve_order(run.scheduler, t, self.cuts, tfl)
+            order = [u for u in order if u in self._active]
+            self._last_event = None
+            return ([order[i:i + chunk] for i in range(0, len(order), chunk)],
+                    [])
+        if run.engine != "event":
+            raise KeyError(f"unknown engine {run.engine!r}")
+
+        uids = sorted(self._active)
+        if run.scheduler in ONLINE_DISCIPLINES:
+            policy, needs_pri = ONLINE_DISCIPLINES[run.scheduler]
+            pri = alg2_priorities(self.cuts, tfl) if needs_pri else None
+            jobs = jobs_from_times(t, uids, priorities=pri)
+            res = simulate_round(jobs, policy=policy, slots=run.server_slots,
+                                 cohort_chunk=chunk,
+                                 chunk_efficiency=run.chunk_efficiency,
+                                 deadline=run.round_deadline)
+        else:   # e.g. "optimal": no online form — replay its fixed order
+            order = [u for u in resolve_order(run.scheduler, t, self.cuts, tfl)
+                     if u in self._active]
+            jobs = jobs_from_times(t, uids)
+            res = simulate_round(jobs, order=order, slots=run.server_slots,
+                                 cohort_chunk=chunk,
+                                 chunk_efficiency=run.chunk_efficiency,
+                                 deadline=run.round_deadline)
+        self._last_event = res
+        return [list(rec.uids) for rec in res.service], list(res.dropped)
+
     def _round_time(self, order: Sequence[int]) -> float:
         t = self._times_this_round
         if self.run.scheme == "ours":
+            if self._last_event is not None:     # event-driven round clock
+                return self._last_event.round_time
             span, _, _ = makespan(t, order)
             return span
         if self.run.scheme == "sfl":
@@ -221,17 +296,25 @@ class Simulator:
             self.server_opt = [self.opt.init({"lora": s, "head": self.heads[u]})
                                for u, s in enumerate(self.server_lora)]
 
-        rec = RoundRecord(rnd, self.sim_clock, float(np.mean(losses)))
+        # a deadline can cut every client out of a round -> no losses
+        mean_loss = float(np.mean(losses)) if losses else float("nan")
+        rec = RoundRecord(rnd, self.sim_clock, mean_loss)
         self.history.append(rec)
         return rec
 
     # -- round bodies ----------------------------------------------------------
     def _round_parallel(self):
-        """ours / sfl: parallel client forwards, then (scheduled) sequential
-        per-client server updates on the single full model."""
+        """ours / sfl: parallel client forwards, then scheduled server
+        updates on the single full model — sequential per-client dispatches
+        or cohort-chunked batched dispatches, as the round clock decides."""
         run = self.run
+        groups, _dropped = self._service_plan()
+        # the round clock only reads the analytic times, so it runs FIRST:
+        # deadline-dropped clients never execute their (real, jitted)
+        # forward, and their uplink error-feedback state stays untouched
+        served = sorted({u for grp in groups for u in grp})
         batches, acts = {}, {}
-        for u in self._active:
+        for u in served:
             batch = {k: jnp.asarray(v) for k, v in self.loaders[u].next_batch().items()}
             batches[u] = batch
             fwd, _ = self._cli_steps[self.cuts[u]]
@@ -244,27 +327,53 @@ class Simulator:
                 v = dequantize(qx, v.dtype)
             acts[u] = v
 
-        order = resolve_order(run.scheduler, self._times_this_round, self.cuts,
-                              [d.tflops for d in self.devices])
-        order = [u for u in order if u in acts]
-        losses = []
-        for u in order:
-            cut = self.cuts[u]
-            loss, new_lora, new_head, new_opt, dv = self._srv_steps[cut](
-                self.params, self.server_lora[u], self.heads[u],
-                self.server_opt[u], acts[u], batches[u])
-            self.server_lora[u] = new_lora
-            self.heads[u] = new_head
-            self.server_opt[u] = new_opt
-            losses.append(float(loss))
-            if run.quantize_activations:
-                from repro.comm import dequantize, quantize
-                dv = dequantize(quantize(dv), dv.dtype)   # downlink int8
-            _, bwd = self._cli_steps[cut]
-            self.client_lora[u], self.client_opt[u] = bwd(
-                self.client_params[u], self.client_lora[u],
-                self.client_opt[u], batches[u], dv)
+        losses, order = [], []
+        for grp in groups:
+            grp = [u for u in grp if u in acts]
+            if not grp:
+                continue
+            order.extend(grp)
+            if len(grp) == 1:
+                u = grp[0]
+                cut = self.cuts[u]
+                loss, new_lora, new_head, new_opt, dv = self._srv_steps[cut](
+                    self.params, self.server_lora[u], self.heads[u],
+                    self.server_opt[u], acts[u], batches[u])
+                losses.append(float(loss))
+                self._apply_server_update(u, new_lora, new_head, new_opt)
+                self._client_backward(u, batches[u], dv)
+                continue
+            # batched cohort chunk: one vmapped dispatch for the whole group
+            loss_g, nl, nh, no, dv_g = self._srv_step_batched(
+                self.params,
+                lora_lib.stack_trees([self.server_lora[u] for u in grp]),
+                jnp.stack([self.heads[u] for u in grp]),
+                lora_lib.stack_trees([self.server_opt[u] for u in grp]),
+                jnp.stack([acts[u] for u in grp]),
+                lora_lib.stack_trees([batches[u] for u in grp]),
+                jnp.asarray([self.cuts[u] for u in grp]))
+            nls, nos = lora_lib.unstack_tree(nl), lora_lib.unstack_tree(no)
+            for i, u in enumerate(grp):
+                losses.append(float(loss_g[i]))
+                self._apply_server_update(u, nls[i], nh[i], nos[i])
+                self._client_backward(u, batches[u], dv_g[i])
+        # deadline-cut stragglers are simply absent from ``groups``: they
+        # keep last round's adapters and rejoin the sampling pool next round
         return losses, order
+
+    def _apply_server_update(self, u: int, new_lora, new_head, new_opt):
+        self.server_lora[u] = new_lora
+        self.heads[u] = new_head
+        self.server_opt[u] = new_opt
+
+    def _client_backward(self, u: int, batch, dv):
+        if self.run.quantize_activations:
+            from repro.comm import dequantize, quantize
+            dv = dequantize(quantize(dv), dv.dtype)   # downlink int8
+        _, bwd = self._cli_steps[self.cuts[u]]
+        self.client_lora[u], self.client_opt[u] = bwd(
+            self.client_params[u], self.client_lora[u],
+            self.client_opt[u], batch, dv)
 
     def _round_sl(self):
         """SL baseline: ONE traveling full adapter set (kept in slot 0 as a

@@ -1,0 +1,270 @@
+"""Event-driven round clock (fed/engine.py): exact parity with the analytic
+makespan, queue-discipline semantics, no-overlap/chunking properties, and the
+simulator's engine="analytic" | "event" switch."""
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.configs import REGISTRY
+from repro.core.cost_model import (StepTimes, chunked_service_time,
+                                   client_step_times, makespan)
+from repro.core.scheduling import (ONLINE_DISCIPLINES, alg2_priorities,
+                                   resolve_order)
+from repro.data import make_emotion_dataset
+from repro.fed import (FedRunConfig, LINK, PAPER_CLIENTS, PAPER_CUTS, SERVER,
+                       Simulator)
+from repro.fed.engine import DISCIPLINES, jobs_from_times, simulate_round
+
+POLICIES = ("ours", "fifo", "wf", "optimal")
+
+
+def _paper_times():
+    cfg = REGISTRY["bert-base"]
+    return [client_step_times(cfg, c, d, SERVER, LINK, 16, 128)
+            for c, d in zip(PAPER_CUTS, PAPER_CLIENTS)]
+
+
+def _random_times(rng, u):
+    times = []
+    for _ in range(u):
+        t_f = rng.uniform(0.05, 0.4)
+        times.append(StepTimes(t_f=t_f, t_fc=rng.uniform(0.02, 0.1),
+                               t_s=rng.uniform(0.05, 0.8),
+                               t_bc=rng.uniform(0.02, 0.1), t_b=2 * t_f))
+    return times
+
+
+# -- parity with the analytic model -----------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_fixed_order_parity_with_makespan(policy):
+    times = _paper_times()
+    tfl = [d.tflops for d in PAPER_CLIENTS]
+    order = resolve_order(policy, times, PAPER_CUTS, tfl)
+    span, comp, waits = makespan(times, order)
+    res = simulate_round(jobs_from_times(times, range(len(times))), order=order)
+    assert res.round_time == pytest.approx(span, abs=1e-12)
+    assert res.order == list(order)
+    for u in range(len(times)):
+        assert res.completion[u] == pytest.approx(comp[u], abs=1e-12)
+        assert res.waits[u] == pytest.approx(waits[u], abs=1e-12)
+
+
+def test_online_fifo_equals_offline_fifo():
+    """Serving the earliest-arrived job online reproduces the precomputed
+    by-arrival order exactly (single server)."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        times = _random_times(rng, int(rng.integers(2, 9)))
+        order = resolve_order("fifo", times, [1] * len(times), [1.0] * len(times))
+        span, _, _ = makespan(times, order)
+        res = simulate_round(jobs_from_times(times, range(len(times))),
+                             policy="fifo")
+        assert res.order == order
+        assert res.round_time == pytest.approx(span, abs=1e-12)
+
+
+# -- engine properties -------------------------------------------------------
+
+def test_no_server_overlap_per_slot():
+    rng = np.random.default_rng(1)
+    for slots in (1, 2, 3):
+        for chunk in (1, 2, 3):
+            times = _random_times(rng, 10)
+            res = simulate_round(jobs_from_times(times, range(10)),
+                                 policy="fifo", slots=slots,
+                                 cohort_chunk=chunk, chunk_efficiency=0.8)
+            assert sorted(res.order) == list(range(10))
+            per_slot = {}
+            for rec in res.service:
+                per_slot.setdefault(rec.slot, []).append(rec)
+            for recs in per_slot.values():
+                recs.sort(key=lambda r: r.start)
+                for a, b in zip(recs, recs[1:]):
+                    assert a.end <= b.start + 1e-12
+
+
+def test_service_respects_discipline():
+    """At every dispatch, the served chunk is exactly the best-keyed subset
+    of the jobs whose activations had arrived."""
+    rng = np.random.default_rng(2)
+    for policy in ("fifo", "wf", "priority"):
+        times = _random_times(rng, 12)
+        pri = rng.uniform(0.1, 3.0, size=12).tolist()
+        jobs = jobs_from_times(times, range(12), priorities=pri)
+        by_uid = {j.uid: j for j in jobs}
+        res = simulate_round(jobs, policy=policy, cohort_chunk=2)
+        key = DISCIPLINES[policy]
+        served = set()
+        for rec in res.service:
+            arrived = [u for u in by_uid
+                       if u not in served and by_uid[u].ready <= rec.start + 1e-12]
+            best = sorted(arrived, key=lambda u: key(by_uid[u]))[:len(rec.uids)]
+            assert list(rec.uids) == best
+            served.update(rec.uids)
+
+
+def test_chunk_service_time_and_start():
+    times = _random_times(np.random.default_rng(3), 6)
+    eff = 0.7
+    res = simulate_round(jobs_from_times(times, range(6)), policy="fifo",
+                         cohort_chunk=3, chunk_efficiency=eff)
+    for rec in res.service:
+        expect = chunked_service_time([times[u].t_s for u in rec.uids], eff)
+        assert rec.end - rec.start == pytest.approx(expect, abs=1e-12)
+        # a chunk never starts before its members' activations arrived
+        assert rec.start >= max(times[u].ready for u in rec.uids) - 1e-12
+
+
+def test_multi_slot_never_serves_before_arrival():
+    """Regression: an idle slot advancing to the next arrival must not let
+    ANOTHER slot with an earlier clock dispatch the drained job in the past."""
+    t = [StepTimes(t_f=10, t_fc=0, t_s=1, t_bc=0, t_b=0),
+         StepTimes(t_f=20, t_fc=0, t_s=1, t_bc=0, t_b=0)]
+    res = simulate_round(jobs_from_times(t, range(2)), policy="fifo", slots=2)
+    assert res.waits[0] == pytest.approx(0.0, abs=1e-12)
+    assert res.waits[1] == pytest.approx(0.0, abs=1e-12)
+    assert res.round_time == pytest.approx(21.0, abs=1e-12)
+    for rec in res.service:
+        assert rec.start >= t[rec.uids[0]].ready - 1e-12
+    # property form: random fleets, multiple slots, waits never negative
+    rng = np.random.default_rng(7)
+    for slots in (2, 3):
+        times = _random_times(rng, 9)
+        r = simulate_round(jobs_from_times(times, range(9)), policy="fifo",
+                           slots=slots)
+        assert all(w >= -1e-12 for w in r.waits.values())
+
+
+def test_all_dropped_round_costs_the_deadline():
+    """Regression: a deadline round that drops every client still consumed
+    the deadline's worth of wall-clock."""
+    t = [StepTimes(t_f=10, t_fc=0, t_s=1, t_bc=0, t_b=0)]
+    res = simulate_round(jobs_from_times(t, range(1)), policy="fifo",
+                         deadline=5.0)
+    assert res.dropped == [0] and res.order == []
+    assert res.round_time == pytest.approx(5.0)
+
+
+def test_deadline_drops_stragglers():
+    times = _random_times(np.random.default_rng(4), 8)
+    full = simulate_round(jobs_from_times(times, range(8)), policy="fifo")
+    cut = simulate_round(jobs_from_times(times, range(8)), policy="fifo",
+                         deadline=full.round_time * 0.5)
+    assert set(cut.dropped) | set(cut.order) == set(range(8))
+    assert not set(cut.dropped) & set(cut.order)
+    assert len(cut.dropped) > 0
+    for rec in cut.service:
+        assert rec.start <= full.round_time * 0.5
+
+
+def test_staggered_arrivals_shift_ready():
+    times = _random_times(np.random.default_rng(5), 4)
+    base = simulate_round(jobs_from_times(times, range(4)), policy="fifo")
+    lag = simulate_round(jobs_from_times(times, range(4),
+                                         arrivals=[0.0, 5.0, 10.0, 15.0]),
+                         policy="fifo")
+    assert lag.round_time > base.round_time
+    assert lag.order == [0, 1, 2, 3]     # arrivals dominate the fifo order
+
+
+def test_bad_inputs_raise():
+    times = _random_times(np.random.default_rng(6), 3)
+    jobs = jobs_from_times(times, range(3))
+    with pytest.raises(KeyError):
+        simulate_round(jobs, policy="nope")
+    with pytest.raises(ValueError):
+        simulate_round(jobs, order=[0, 1])
+    with pytest.raises(ValueError):
+        simulate_round(jobs, slots=0)
+
+
+# -- simulator integration ---------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sim_setup():
+    cfg = tiny("bert-base", n_layers=2, d_model=256)
+    cfg = cfg.with_(vocab_size=4096, max_position=32)
+    train = make_emotion_dataset(400, seq_len=16, vocab_size=4096, seed=0)
+    test = make_emotion_dataset(100, seq_len=16, vocab_size=4096, seed=1)
+    return cfg, train, test
+
+
+def _run_sim(sim_setup, rounds=2, **kw):
+    cfg, train, test = sim_setup
+    rc = FedRunConfig(scheme="ours", rounds=rounds, agg_interval=rounds,
+                      batch_size=4, seq_len=16, lr=3e-3, eval_every=100, **kw)
+    sim = Simulator(cfg, PAPER_CLIENTS[:4], [1, 1, 1, 2], train, test, rc)
+    sim.run_training()
+    return sim
+
+
+def test_simulator_event_matches_analytic_sync(sim_setup):
+    """Synchronous round, chunk=1, FIFO: the event clock and the closed form
+    must agree exactly — on round times AND on the training math."""
+    a = _run_sim(sim_setup, scheduler="fifo", engine="analytic")
+    b = _run_sim(sim_setup, scheduler="fifo", engine="event")
+    np.testing.assert_allclose([r.sim_time_s for r in a.history],
+                               [r.sim_time_s for r in b.history], rtol=1e-12)
+    np.testing.assert_allclose([r.mean_loss for r in a.history],
+                               [r.mean_loss for r in b.history], atol=1e-7)
+
+
+def test_simulator_batched_chunk_matches_sequential(sim_setup):
+    """cohort_chunk>1 routes chunks through the ONE vmapped batched server
+    step; per-client losses and adapters must match the sequential path."""
+    import jax
+    a = _run_sim(sim_setup, rounds=1, engine="analytic", cohort_chunk=1)
+    b = _run_sim(sim_setup, rounds=1, engine="analytic", cohort_chunk=3)
+    np.testing.assert_allclose([r.mean_loss for r in a.history],
+                               [r.mean_loss for r in b.history], atol=1e-5)
+    for u in range(4):
+        for x, y in zip(jax.tree.leaves(a.server_lora[u]),
+                        jax.tree.leaves(b.server_lora[u])):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+        for x, y in zip(jax.tree.leaves(a.client_lora[u]),
+                        jax.tree.leaves(b.client_lora[u])):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+def test_simulator_event_online_ours(sim_setup):
+    """The Alg. 2 online discipline runs end-to-end on the event engine and
+    records a full service trace."""
+    sim = _run_sim(sim_setup, scheduler="ours", engine="event",
+                   cohort_chunk=2, chunk_efficiency=0.8)
+    res = sim._last_event
+    assert res is not None
+    assert sorted(res.order) == [0, 1, 2, 3]
+    kinds = {k for _, k, _ in res.events}
+    assert {"fwd_done", "uplink_done", "server_start", "server_done",
+            "downlink_done", "client_done"} <= kinds
+    assert all(np.isfinite(r.mean_loss) for r in sim.history)
+
+
+def test_simulator_rejects_event_knobs_under_analytic(sim_setup):
+    cfg, train, test = sim_setup
+    for kw in ({"chunk_efficiency": 0.8}, {"server_slots": 2},
+               {"round_deadline": 1.0}):
+        rc = FedRunConfig(scheme="ours", engine="analytic", **kw)
+        with pytest.raises(ValueError):
+            Simulator(cfg, PAPER_CLIENTS[:2], [1, 1], train, test, rc)
+    with pytest.raises(KeyError):
+        Simulator(cfg, PAPER_CLIENTS[:2], [1, 1], train, test,
+                  FedRunConfig(engine="bogus"))
+    # the DES models the shared-server queue of scheme="ours" only
+    with pytest.raises(ValueError):
+        Simulator(cfg, PAPER_CLIENTS[:2], [1, 1], train, test,
+                  FedRunConfig(scheme="sfl", engine="event"))
+    # chunk_efficiency range is validated up front, even for chunk=1
+    with pytest.raises(ValueError):
+        Simulator(cfg, PAPER_CLIENTS[:2], [1, 1], train, test,
+                  FedRunConfig(scheme="ours", engine="event",
+                               chunk_efficiency=-0.5))
+
+
+def test_simulator_alg2_priorities_consistent():
+    tfl = [d.tflops for d in PAPER_CLIENTS]
+    pri = alg2_priorities(PAPER_CUTS, tfl)
+    offline = resolve_order("ours", None, PAPER_CUTS, tfl)
+    assert offline == sorted(range(6), key=lambda u: (-pri[u], u))
+    assert set(ONLINE_DISCIPLINES) == {"ours", "fifo", "wf"}

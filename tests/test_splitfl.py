@@ -113,6 +113,109 @@ def test_end_to_end_split_training_decreases_loss(setup):
     assert losses[-1] < losses[0] - 0.05, losses
 
 
+def _cohort_state(model, params, lora, cuts, cfg, opt, *, with_head):
+    """Per-client full-shape server adapters + opt states for a cohort."""
+    spec = jax.eval_shape(lambda: lora)
+    r = np.random.default_rng(0)
+    loras, opts, vs, batches = [], [], [], []
+    for cut in cuts:
+        _, srv = lora_lib.split_lora(lora, cut)
+        full = lora_lib.embed_in_full_shape(srv, spec, cut, "server")
+        loras.append(full)
+        if with_head:
+            opts.append(opt.init({"lora": full, "head": params["cls_head"]}))
+        else:
+            opts.append(opt.init(full))
+        vs.append(jnp.asarray(r.normal(size=(2, 16, cfg.d_model)), jnp.float32))
+        batches.append(lm_batch(cfg, batch=2, seq=16, seed=cut))
+    return loras, opts, vs, batches
+
+
+def test_batched_server_step_matches_sequential(setup):
+    """ONE vmapped dispatch over the cohort == U sequential dispatches,
+    for heterogeneous traced cuts (within 1e-5)."""
+    cfg, model, params, lora = setup
+    opt = AdamW(1e-3)
+    cuts = [1, 2, 3]
+    loras, opts, vs, batches = _cohort_state(model, params, lora, cuts, cfg,
+                                             opt, with_head=False)
+    seq_losses, seq_loras = [], []
+    for i, cut in enumerate(cuts):
+        step = splitfl.make_server_step(model, opt, path="sliced",
+                                        static_cut=cut, donate=False)
+        loss, nl, _, dv = step(params, loras[i], opts[i], vs[i], batches[i])
+        seq_losses.append(float(loss))
+        seq_loras.append(nl)
+
+    bstep = splitfl.make_server_step_batched(model, opt, donate=False)
+    losses, nls, nos, dvs = bstep(
+        params, lora_lib.stack_trees(loras), lora_lib.stack_trees(opts),
+        jnp.stack(vs), lora_lib.stack_trees(batches), jnp.asarray(cuts))
+    np.testing.assert_allclose(np.asarray(losses), seq_losses, atol=1e-5)
+    for i in range(len(cuts)):
+        for x, y in zip(jax.tree.leaves(seq_loras[i]),
+                        jax.tree.leaves(lora_lib.unstack_tree(nls)[i])):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+    assert dvs.shape == (len(cuts),) + vs[0].shape
+
+
+def test_batched_server_step_chunking_is_exact(setup):
+    """cohort_chunk only changes dispatch granularity, never the numbers:
+    chunk=1 (the paper's sequential server) == chunk=2 == one full chunk."""
+    cfg, model, params, lora = setup
+    opt = AdamW(1e-3)
+    cuts = [1, 2, 3]
+    loras, opts, vs, batches = _cohort_state(model, params, lora, cuts, cfg,
+                                             opt, with_head=False)
+    args = (params, lora_lib.stack_trees(loras), lora_lib.stack_trees(opts),
+            jnp.stack(vs), lora_lib.stack_trees(batches), jnp.asarray(cuts))
+    outs = [splitfl.make_server_step_batched(model, opt, cohort_chunk=k,
+                                             donate=False)(*args)
+            for k in (1, 2, None)]
+    for other in outs[1:]:
+        for x, y in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(other)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+def test_batched_cls_server_step_matches_sequential():
+    cfg = tiny("bert-base", n_layers=4)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    lora = model.init_lora(jax.random.PRNGKey(1))
+    opt = AdamW(1e-2)
+    cuts = [1, 2, 3]
+    loras, opts, vs, batches = _cohort_state(model, params, lora, cuts, cfg,
+                                             opt, with_head=True)
+    heads = [params["cls_head"]] * len(cuts)
+    seq = []
+    for i, cut in enumerate(cuts):
+        step = splitfl.make_server_step_cls(model, opt, path="sliced",
+                                            static_cut=cut)
+        seq.append(step(params, loras[i], heads[i], opts[i], vs[i], batches[i]))
+
+    bstep = splitfl.make_server_step_cls_batched(model, opt, cohort_chunk=2)
+    losses, nls, nhs, nos, dvs = bstep(
+        params, lora_lib.stack_trees(loras), jnp.stack(heads),
+        lora_lib.stack_trees(opts), jnp.stack(vs),
+        lora_lib.stack_trees(batches), jnp.asarray(cuts))
+    for i in range(len(cuts)):
+        np.testing.assert_allclose(float(losses[i]), float(seq[i][0]), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(nhs[i]), np.asarray(seq[i][2]),
+                                   atol=1e-5)
+        for x, y in zip(jax.tree.leaves(lora_lib.unstack_tree(nls)[i]),
+                        jax.tree.leaves(seq[i][1])):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+def test_stack_unstack_roundtrip(setup):
+    _, _, _, lora = setup
+    trees = [jax.tree.map(lambda a, k=k: a + k, lora) for k in range(3)]
+    back = lora_lib.unstack_tree(lora_lib.stack_trees(trees))
+    for t, b in zip(trees, back):
+        for x, y in zip(jax.tree.leaves(t), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
 def test_classification_server_step(setup):
     cfg_cls = tiny("bert-base", n_layers=4)
     model = build_model(cfg_cls)

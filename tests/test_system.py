@@ -4,6 +4,9 @@ import jax
 import numpy as np
 import pytest
 
+# real multi-round federated training: ~4 min of the suite's wall-clock
+pytestmark = pytest.mark.slow
+
 from conftest import tiny
 from repro.data import make_emotion_dataset
 from repro.fed import FedRunConfig, PAPER_CLIENTS, Simulator
