@@ -2,7 +2,10 @@
 optimal — per-step makespan on the paper's six-device fleet (BERT-base) and
 on randomized fleets (robustness).  Plus the PR-1 engine comparisons:
 analytic (Eq. 10-12) vs event-driven round clock, and sequential vs
-cohort-batched server step throughput."""
+cohort-batched server step throughput.  Plus the continuous-time engine
+comparison: sync barrier vs buffered vs staleness aggregation on a
+16-client heterogeneous fleet (wall-clock makespan and time-to-target-loss
+over REAL jitted training math)."""
 from __future__ import annotations
 
 import time
@@ -153,6 +156,62 @@ def server_throughput(iters=4):
     return {"sliced": t_sliced, "scan": t_scan, "batched": t_bat, "u": u}
 
 
+def async_vs_sync(n_clients=16, rounds=3, csv=False):
+    """Continuous-time engine: the three aggregation policies on one
+    heterogeneous fleet, compared on WALL-CLOCK (not rounds): total makespan
+    to finish every client's local rounds, and time until the smoothed
+    per-serve loss first reaches a shared target."""
+    from repro.data import make_emotion_dataset
+    from repro.fed import FedRunConfig, Simulator, make_fleet
+    from repro.fed import metrics as M
+
+    cfg = reduced(REGISTRY["bert-base"], n_layers=3, d_model=128)
+    cfg = cfg.with_(vocab_size=4096, max_position=16)
+    train = make_emotion_dataset(800, seq_len=16, vocab_size=4096, seed=0)
+    test = make_emotion_dataset(100, seq_len=16, vocab_size=4096, seed=1)
+    devices = make_fleet(n_clients, seed=0)
+    cuts = [min(PAPER_CUTS[i % len(PAPER_CUTS)], cfg.n_layers - 1)
+            for i in range(n_clients)]
+
+    configs = {
+        "sync": {},
+        "buffered": dict(agg_policy="buffered", max_inflight_rounds=2,
+                         agg_buffer_k=max(2, n_clients // 4)),
+        "staleness": dict(agg_policy="staleness", max_inflight_rounds=2,
+                          agg_buffer_k=1, staleness_alpha=0.5),
+    }
+    sims = {}
+    for name, extra in configs.items():
+        rc = FedRunConfig(scheme="ours", scheduler="ours", rounds=rounds,
+                          agg_interval=1, batch_size=4, seq_len=16, lr=3e-3,
+                          eval_every=10 ** 6, engine="event", **extra)
+        sims[name] = Simulator(cfg, devices, cuts, train, test, rc)
+        sims[name].run_training()
+
+    window = n_clients // 2
+    curves = {n: M.wallclock_curve(s.loss_events) for n, s in sims.items()}
+    # shared target: the worst policy's final smoothed loss (so every
+    # policy reaches it), read off each policy's wall-clock trajectory
+    finals = {n: float(M.running_mean(v, window)[-1])
+              for n, (t, v) in curves.items()}
+    target = max(finals.values()) + 1e-6
+    out = []
+    for name, sim in sims.items():
+        t, v = curves[name]
+        hit = M.time_to_target(t, v, target, smooth=window)
+        if not csv:
+            print(f"async[{name:9s}] makespan {sim.sim_clock:8.3f}s  "
+                  f"commits {len(sim._clock.commits):3d}  "
+                  f"final_loss {finals[name]:.4f}  "
+                  f"t_to_loss<={target:.3f}: "
+                  f"{'n/a' if hit is None else f'{hit:8.3f}s'}")
+        out.append((f"async_{name}", sim.sim_clock * 1e6,
+                    f"commits={len(sim._clock.commits)};"
+                    f"final_loss={finals[name]:.4f};"
+                    f"t_to_target={'nan' if hit is None else f'{hit:.4f}'}"))
+    return out
+
+
 def run(csv=False):
     spans = paper_fleet_spans()
     red_fifo = 1 - spans["ours"] / spans["fifo"]
@@ -197,6 +256,9 @@ def run(csv=False):
     out.append(("server_batched_speedup", 0.0,
                 f"vs_scan={tp['scan']/tp['batched']:.3f};"
                 f"vs_sliced={tp['sliced']/tp['batched']:.3f}"))
+
+    # -- continuous-time async vs sync federation ----------------------------
+    out.extend(async_vs_sync(csv=csv))
     return out
 
 

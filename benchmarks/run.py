@@ -9,12 +9,54 @@
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 Skip the slow real-training bench: ``--fast``.
+
+``--artifacts-dir DIR`` additionally writes one machine-readable
+``BENCH_<name>.json`` per bench (rows + wall time + backend/device info) so
+CI can archive the perf trajectory across commits.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import platform
 import sys
 import time
+
+
+def _environment_info() -> dict:
+    """Backend/device fingerprint stamped into every bench artifact."""
+    info = {
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+    }
+    try:
+        import jax
+        info["jax"] = jax.__version__
+        info["backend"] = jax.default_backend()
+        info["devices"] = [str(d) for d in jax.devices()]
+    except Exception as e:  # keep artifacts writable even without jax
+        info["jax_error"] = repr(e)
+    return info
+
+
+def _write_artifact(dirpath: str, name: str, rows, elapsed: float,
+                    env: dict, error: str | None) -> None:
+    os.makedirs(dirpath, exist_ok=True)
+    doc = {
+        "bench": name,
+        "elapsed_s": round(elapsed, 3),
+        "status": "failed" if error else "ok",
+        "environment": env,
+        "rows": [{"name": n, "us_per_call": us, "derived": derived}
+                 for n, us, derived in rows],
+    }
+    if error:
+        doc["error"] = error
+    path = os.path.join(dirpath, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    print(f"wrote {path}", file=sys.stderr)
 
 
 def main() -> None:
@@ -22,6 +64,8 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="skip bench_fig2 (real federated training)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--artifacts-dir", default=None,
+                    help="write BENCH_<name>.json per bench here")
     args = ap.parse_args()
 
     from benchmarks import (bench_ablations, bench_fig2, bench_kernels,
@@ -38,18 +82,26 @@ def main() -> None:
     if args.only:
         benches = [(n, f) for n, f in benches if n == args.only]
 
+    env = _environment_info() if args.artifacts_dir else {}
     rows, failed = [], []
     for name, fn in benches:
         t0 = time.time()
         print(f"== {name} ==", file=sys.stderr)
+        bench_rows, error = [], None
         try:
-            rows.extend(fn(csv=True))
+            bench_rows = fn(csv=True)
         except Exception as e:  # report, keep going
-            rows.append((f"{name}_FAILED", 0.0, repr(e)[:120]))
+            error = repr(e)[:300]
+            bench_rows = [(f"{name}_FAILED", 0.0, repr(e)[:120])]
             failed.append(name)
             import traceback
             traceback.print_exc()
-        print(f"== {name} done in {time.time()-t0:.1f}s ==", file=sys.stderr)
+        elapsed = time.time() - t0
+        rows.extend(bench_rows)
+        if args.artifacts_dir:
+            _write_artifact(args.artifacts_dir, name, bench_rows, elapsed,
+                            env, error)
+        print(f"== {name} done in {elapsed:.1f}s ==", file=sys.stderr)
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -9,6 +9,12 @@ BERT-base (110M) — same code path, just slower per round on CPU.
 
     PYTHONPATH=src python examples/train_emotion_sfl.py --rounds 60
     PYTHONPATH=src python examples/train_emotion_sfl.py --full --rounds 200
+
+Continuous-time async federation (event engine; see README "Async
+federation"):
+
+    PYTHONPATH=src python examples/train_emotion_sfl.py --tiny --rounds 3 \
+        --engine event --agg-policy buffered --max-inflight-rounds 2
 """
 import argparse
 
@@ -17,14 +23,19 @@ import numpy as np
 from repro.configs import REGISTRY, reduced
 from repro.core.partition import assign_cuts
 from repro.data import make_emotion_dataset
-from repro.fed import FedRunConfig, PAPER_CLIENTS, PAPER_CUTS, Simulator
+from repro.fed import (AGG_POLICIES, FedRunConfig, PAPER_CLIENTS, PAPER_CUTS,
+                       Simulator, validate_run_config)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper's BERT-base 110M")
+    ap.add_argument("--tiny", action="store_true",
+                    help="2-layer smoke model (CI async smoke)")
     ap.add_argument("--rounds", type=int, default=60)
-    ap.add_argument("--agg-interval", type=int, default=5)
+    ap.add_argument("--agg-interval", type=int, default=None,
+                    help="rounds per sync aggregation (default 5; async "
+                    "policies commit per agg-buffer-k uploads, default 1)")
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -33,11 +44,33 @@ def main():
     ap.add_argument("--alpha", type=float, default=0.5)
     ap.add_argument("--n-train", type=int, default=4000)
     ap.add_argument("--seed", type=int, default=0)
+    # -- server engine / continuous-time async federation --------------------
+    ap.add_argument("--engine", choices=("analytic", "event"),
+                    default="analytic",
+                    help="closed-form Eq. 10-12 vs event-driven clock")
+    ap.add_argument("--agg-policy", choices=AGG_POLICIES, default="sync",
+                    help="sync barrier | buffered k-of-U | staleness-weighted")
+    ap.add_argument("--max-inflight-rounds", type=int, default=1,
+                    help="local rounds a client may run past its last commit")
+    ap.add_argument("--agg-buffer-k", type=int, default=None,
+                    help="async commit threshold (distinct client uploads)")
+    ap.add_argument("--staleness-alpha", type=float, default=None,
+                    help="polynomial (1+s)^-alpha discount exponent "
+                    "(staleness policy only; default 0.5)")
     args = ap.parse_args()
+    if args.agg_interval is None:
+        args.agg_interval = 5 if args.agg_policy == "sync" else 1
 
     if args.full:
         cfg = REGISTRY["bert-base"]
         args.seq = 128
+    elif args.tiny:
+        # conftest-sized smoke model: 2 layers, d=256
+        cfg = reduced(REGISTRY["bert-base"], n_layers=2, d_model=256)
+        cfg = cfg.with_(vocab_size=4096, max_position=32, dtype="float32")
+        args.seq = min(args.seq, 16)
+        args.batch = min(args.batch, 4)
+        args.n_train = min(args.n_train, 400)
     else:
         # bert-small-ish: 4 layers, d=512 -> ~29M params
         cfg = reduced(REGISTRY["bert-base"], n_layers=4, d_model=512)
@@ -58,6 +91,9 @@ def main():
     print(f"model: {cfg.name} ({cfg.param_count()/1e6:.0f}M params, "
           f"{cfg.n_layers} layers)  cuts={cuts}")
 
+    # validate EVERY schemes entry up front — an invalid late entry must not
+    # abort the script after earlier entries already burned training time
+    runs = []
     for entry in args.schemes.split(","):
         scheme, _, sched = entry.partition("-")
         sched = sched or "ours"
@@ -65,12 +101,24 @@ def main():
                            agg_interval=args.agg_interval,
                            batch_size=args.batch, seq_len=args.seq,
                            lr=args.lr, alpha=args.alpha, seed=args.seed,
-                           eval_every=max(args.rounds // 10, 1))
+                           eval_every=max(args.rounds // 10, 1),
+                           engine=args.engine, agg_policy=args.agg_policy,
+                           max_inflight_rounds=args.max_inflight_rounds,
+                           agg_buffer_k=args.agg_buffer_k,
+                           staleness_alpha=args.staleness_alpha)
+        try:   # surface the FedRunConfig validation matrix as argparse errors
+            validate_run_config(run, len(PAPER_CLIENTS))
+        except (KeyError, ValueError) as e:
+            ap.error(f"--schemes entry {entry!r}: {e}")
+        runs.append((entry, run))
+
+    for entry, run in runs:
         sim = Simulator(cfg, PAPER_CLIENTS, cuts, train, test, run)
         sim.run_training(verbose=True)
         acc, f1 = sim.evaluate()
         mem = sim.server_memory_report()
-        print(f"== {entry}: acc={acc:.4f} f1={f1:.4f} "
+        print(f"== {entry} [{args.engine}/{args.agg_policy}]: "
+              f"acc={acc:.4f} f1={f1:.4f} "
               f"sim_time={sim.sim_clock:.1f}s server_mem={mem.total_mb:.1f}MB\n")
 
 

@@ -1,10 +1,18 @@
 """Eqs. 6-9: dataset-size-weighted FedAvg of the full LoRA adapter lists,
 aggregating each A and each B matrix separately, then re-splitting at every
 client's (heterogeneous) cut point.
+
+Beyond the paper's synchronous Eq. 6-8 weights, this module also carries the
+async aggregation policy layer of the continuous-time engine: explicit-weight
+aggregation (:func:`aggregate_full_weighted`), polynomial staleness
+discounting of the Eq. 6-8 weights (:func:`staleness_weights`, the
+``(1+s)^-alpha`` family of async FL), and the anchored merge that folds a
+partial contributor buffer into the standing global adapters
+(:func:`merge_into_global`).
 """
 from __future__ import annotations
 
-from typing import Any, Sequence
+from typing import Any, List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +20,33 @@ import jax.numpy as jnp
 from repro.core import lora as lora_lib
 
 PyTree = Any
+
+
+def normalize_weights(weights: Sequence[float]) -> List[float]:
+    ws = [float(w) for w in weights]
+    if any(w < 0 for w in ws):
+        raise ValueError("aggregation weights must be non-negative")
+    total = sum(ws)
+    if total <= 0.0:
+        raise ValueError("aggregation weights must sum to > 0")
+    return [w / total for w in ws]
+
+
+def aggregate_full_weighted(full_loras: Sequence[PyTree],
+                            weights: Sequence[float]) -> PyTree:
+    """Leaf-wise convex combination of same-structure full adapter trees
+    with explicit (not necessarily normalized) non-negative weights."""
+    if len(full_loras) != len(weights):
+        raise ValueError("one weight per adapter tree required")
+    ws = normalize_weights(weights)
+
+    def wsum(*leaves):
+        acc = ws[0] * leaves[0].astype(jnp.float32)
+        for w, leaf in zip(ws[1:], leaves[1:]):
+            acc = acc + w * leaf.astype(jnp.float32)
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(wsum, *full_loras)
 
 
 def aggregate_full(full_loras: Sequence[PyTree], data_sizes: Sequence[int]) -> PyTree:
@@ -22,16 +57,46 @@ def aggregate_full(full_loras: Sequence[PyTree], data_sizes: Sequence[int]) -> P
     """
     if len(full_loras) != len(data_sizes):
         raise ValueError("one data size per client required")
-    total = float(sum(data_sizes))
-    ws = [float(d) / total for d in data_sizes]
+    return aggregate_full_weighted(full_loras, [float(d) for d in data_sizes])
 
-    def wsum(*leaves):
-        acc = ws[0] * leaves[0].astype(jnp.float32)
-        for w, leaf in zip(ws[1:], leaves[1:]):
-            acc = acc + w * leaf.astype(jnp.float32)
-        return acc.astype(leaves[0].dtype)
 
-    return jax.tree.map(wsum, *full_loras)
+def staleness_discount(staleness: int, alpha: float) -> float:
+    """Polynomial staleness discount ``(1 + s)^-alpha``: a contribution
+    computed against a model ``s`` commits old counts proportionally less.
+    ``alpha = 0`` disables discounting (the ``buffered`` policy)."""
+    if staleness < 0:
+        raise ValueError("staleness must be >= 0")
+    if alpha < 0:
+        raise ValueError("staleness_alpha must be >= 0")
+    return float((1.0 + staleness) ** (-alpha))
+
+
+def staleness_weights(data_sizes: Sequence[int], staleness: Sequence[int],
+                      alpha: float) -> List[float]:
+    """Eq. 6-8 dataset-size weights, discounted per contributor by its
+    staleness and renormalized to sum to one."""
+    if len(data_sizes) != len(staleness):
+        raise ValueError("one staleness value per contributor required")
+    raw = [float(d) * staleness_discount(s, alpha)
+           for d, s in zip(data_sizes, staleness)]
+    return normalize_weights(raw)
+
+
+def merge_into_global(global_full: PyTree, contrib_fulls: Sequence[PyTree],
+                      contrib_weights: Sequence[float],
+                      anchor_weight: float) -> PyTree:
+    """Async commit: fold a buffer of contributor adapters into the standing
+    global adapters.  ``anchor_weight`` is the data mass NOT represented in
+    the buffer — the stale global stands in for the absent clients, so a
+    full-cohort zero-staleness commit degenerates to exact Eq. 6-8 FedAvg.
+    """
+    if anchor_weight < 0:
+        raise ValueError("anchor_weight must be >= 0")
+    if not contrib_fulls:
+        raise ValueError("need at least one contribution to merge")
+    return aggregate_full_weighted(
+        [global_full] + list(contrib_fulls),
+        [float(anchor_weight)] + [float(w) for w in contrib_weights])
 
 
 def aggregation_round(client_loras: Sequence[PyTree],

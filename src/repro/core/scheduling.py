@@ -69,6 +69,17 @@ ONLINE_DISCIPLINES = {
 }
 
 
+def resolve_online(policy: str):
+    """Map an offline scheduler name to its (queue discipline, needs_pri)
+    pair for the event engine.  The continuous-time async engine admits ONLY
+    these — a fixed precomputed order is meaningless when uploads from
+    different local rounds interleave in the server queue."""
+    if policy not in ONLINE_DISCIPLINES:
+        raise KeyError(f"scheduler {policy!r} has no online queue-discipline "
+                       f"form (choose from {sorted(ONLINE_DISCIPLINES)})")
+    return ONLINE_DISCIPLINES[policy]
+
+
 def resolve_order(policy: str, times: Sequence[StepTimes],
                   n_client_layers: Sequence[int],
                   compute: Sequence[float]) -> List[int]:

@@ -1,6 +1,10 @@
 """Device fleet from the paper's §V simulation setup."""
 from __future__ import annotations
 
+from typing import List
+
+import numpy as np
+
 from repro.core.cost_model import DeviceProfile, LinkProfile
 
 # six heterogeneous clients (name, TFLOPS, memory GB) — paper §V
@@ -23,3 +27,24 @@ LINK = LinkProfile(rate_mbps=100.0)
 
 # TPU v5e (the production target of the systems plane)
 TPU_V5E = DeviceProfile("tpu-v5e", tflops=197.0, mem_gb=16.0, utilization=0.55)
+
+
+def make_fleet(n: int, seed: int = 0, jitter: float = 0.25) -> List[DeviceProfile]:
+    """A heterogeneous n-client fleet for beyond-paper cohorts: cycle the six
+    §V device profiles with a deterministic +/-``jitter`` TFLOPS spread so no
+    two clients pace identically (ragged arrivals are what the async
+    aggregation policies exploit)."""
+    if n < 1:
+        raise ValueError("fleet size must be >= 1")
+    if not 0.0 <= jitter < 1.0:
+        raise ValueError("jitter must be in [0, 1)")
+    rng = np.random.default_rng(seed)
+    fleet = []
+    for i in range(n):
+        base = PAPER_CLIENTS[i % len(PAPER_CLIENTS)]
+        scale = 1.0 + jitter * float(rng.uniform(-1.0, 1.0))
+        fleet.append(DeviceProfile(f"{base.name}#{i}",
+                                   tflops=base.tflops * scale,
+                                   mem_gb=base.mem_gb,
+                                   utilization=base.utilization))
+    return fleet

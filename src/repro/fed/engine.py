@@ -26,12 +26,14 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import itertools
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cost_model import StepTimes, chunked_service_time
 
-__all__ = ["Job", "ServiceRecord", "EngineResult", "jobs_from_times",
-           "simulate_round"]
+__all__ = ["AGG_POLICIES", "ClockConfig", "ClockResult", "CommitEvent",
+           "EngineResult", "FederationClock", "Job", "RoundPlan",
+           "ServeEvent", "ServiceRecord", "jobs_from_times", "simulate_round"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -232,3 +234,332 @@ def simulate_round(jobs: Sequence[Job], *, policy: str = "fifo",
     return EngineResult(round_time=round_time, service=service,
                         completion=completion, waits=waits, dropped=dropped,
                         events=events)
+
+
+# ===========================================================================
+# Continuous-time multi-round federation clock
+# ===========================================================================
+# ``simulate_round`` models ONE round and hands time back to its caller at
+# the barrier.  ``FederationClock`` owns time across rounds: under the
+# ``sync`` aggregation policy it replays the per-round DES as barrier waves
+# (bit-identical to the PR 1 engine), and under the async policies
+# (``buffered`` k-of-U and ``staleness``) it runs a genuinely continuous
+# event loop in which every client re-enters its next local round as soon
+# as its previous client-side backward finishes, bounded by a
+# ``max_inflight_rounds`` credit against the server's aggregation commits.
+# The server queue is live: uploads from different local rounds coexist and
+# the discipline re-sorts them at every dispatch.
+
+AGG_POLICIES = ("sync", "buffered", "staleness")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClockConfig:
+    """Knobs of the multi-round clock (the DES-side subset of FedRunConfig)."""
+    policy: str = "fifo"                 # online queue discipline
+    slots: int = 1                       # concurrent server executors
+    cohort_chunk: int = 1                # clients per batched dispatch
+    chunk_efficiency: float = 1.0        # k>1 chunk cost vs summed sequential
+    deadline: Optional[float] = None     # per-round straggler cut (sync only)
+    agg_policy: str = "sync"             # sync | buffered | staleness
+    agg_interval: int = 1                # sync: commit every I barriers
+    buffer_k: int = 1                    # async: commit at k distinct uploads
+    max_inflight_rounds: int = 1         # async: rounds past the last commit
+
+    def __post_init__(self):
+        if self.agg_policy not in AGG_POLICIES:
+            raise KeyError(f"unknown aggregation policy {self.agg_policy!r}")
+        if self.slots < 1 or self.cohort_chunk < 1:
+            raise ValueError("slots and cohort_chunk must be >= 1")
+        if not 0.0 < self.chunk_efficiency <= 1.0:
+            raise ValueError("chunk_efficiency must be in (0, 1]")
+        if self.agg_interval < 1 or self.buffer_k < 1:
+            raise ValueError("agg_interval and buffer_k must be >= 1")
+        if self.max_inflight_rounds < 1:
+            raise ValueError("max_inflight_rounds must be >= 1")
+        if self.agg_policy == "sync" and self.max_inflight_rounds != 1:
+            raise ValueError("sync aggregation is a barrier: "
+                             "max_inflight_rounds must be 1")
+        if self.agg_policy != "sync":
+            if self.policy not in DISCIPLINES:
+                raise KeyError(f"async policies need an online queue "
+                               f"discipline, got {self.policy!r}")
+            if self.deadline is not None:
+                raise ValueError("round deadlines are a synchronous-round "
+                                 "notion; async policies pace clients "
+                                 "individually instead")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeEvent:
+    """One server dispatch in global (cross-round) time."""
+    uids: Tuple[int, ...]
+    rounds: Tuple[int, ...]       # each uid's local round index
+    slot: int
+    start: float
+    end: float
+
+
+@dataclasses.dataclass(frozen=True)
+class CommitEvent:
+    """One aggregation commit: the server folded the buffered contributions
+    into global model version ``version``."""
+    time: float
+    version: int                   # version AFTER this commit (1-based)
+    contributors: Tuple[int, ...]
+    staleness: Tuple[int, ...]     # commits elapsed since each contributor's
+    forced: bool = False           # last model refresh; 0 under sync
+    overhead: float = 0.0          # redistribute transfer added by the driver
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """Driver-supplied plan for one sync barrier wave (cohort sampling,
+    per-round straggler rolls and fixed-order scheduling live with the
+    driver, not the clock)."""
+    jobs: List[Job]
+    policy: str = "fifo"
+    order: Optional[Sequence[int]] = None
+
+
+@dataclasses.dataclass
+class ClockResult:
+    makespan: float
+    serves: List[ServeEvent]
+    commits: List[CommitEvent]
+    rounds_completed: Dict[int, int]          # uid -> finished local rounds
+    dropped: List[Tuple[int, int]]            # (uid, round) deadline cuts
+    round_results: List[EngineResult]         # sync mode: one per barrier
+    events: List[Tuple[float, str, int]]      # (time, kind, uid) trace
+
+
+class FederationClock:
+    """Persistent multi-round event engine.
+
+    The driver owns the model math; the clock owns time.  It reports every
+    server dispatch via ``on_serve`` (the driver runs the real jitted
+    client-forward / server-step / client-backward there) and every
+    aggregation commit via ``on_commit`` (the driver aggregates and returns
+    the redistribute transfer time, which delays the contributors' next
+    local round).
+
+    ``times_fn(uid, local_round) -> StepTimes`` supplies per-round Eq. 10
+    phase durations (so stragglers can be re-rolled per client round);
+    ``priorities`` feeds the ``priority`` discipline (Alg. 2's N_c/C).
+    """
+
+    def __init__(self, n_clients: int, rounds: int, cfg: ClockConfig, *,
+                 times_fn: Optional[Callable[[int, int], StepTimes]] = None,
+                 priorities: Optional[Sequence[float]] = None):
+        if n_clients < 1 or rounds < 1:
+            raise ValueError("need at least one client and one round")
+        if cfg.agg_policy != "sync" and times_fn is None:
+            raise ValueError("async policies need times_fn(uid, round)")
+        if cfg.agg_policy != "sync" and cfg.buffer_k > n_clients:
+            raise ValueError("buffer_k cannot exceed the fleet size")
+        self.n, self.rounds, self.cfg = n_clients, rounds, cfg
+        self.times_fn, self.priorities = times_fn, priorities
+        self.now = 0.0
+        self.version = 0              # global model version (commit count)
+        self.serves: List[ServeEvent] = []
+        self.commits: List[CommitEvent] = []
+        self.round_results: List[EngineResult] = []
+        self.dropped: List[Tuple[int, int]] = []
+        self.trace: List[Tuple[float, str, int]] = []
+
+    # ------------------------------------------------------------------ run
+    def run(self, *, on_serve=None, on_commit=None, plan_fn=None,
+            on_round_end=None, on_round_start=None) -> ClockResult:
+        """Run the whole federation to completion.
+
+        sync:  ``plan_fn(rnd) -> RoundPlan`` builds each barrier wave;
+               ``on_round_end(rnd, EngineResult) -> bool|None`` may return
+               False to stop early (target-accuracy early exit).
+        async: jobs are generated internally from ``times_fn``; ``plan_fn``
+               and ``on_round_end`` are unused; ``on_round_start(uid, rnd,
+               t)`` fires when a client enters a local round (the driver
+               snapshots the client's model pull there).
+        """
+        if self.cfg.agg_policy == "sync":
+            self._run_sync(on_serve, on_commit, plan_fn, on_round_end)
+        else:
+            self._run_async(on_serve, on_commit, on_round_start)
+        self.trace.sort(key=lambda e: (e[0], e[1], e[2]))
+        done = {u: 0 for u in range(self.n)}
+        for ev in self.serves:
+            for u in ev.uids:
+                done[u] += 1
+        return ClockResult(makespan=self.now, serves=self.serves,
+                           commits=self.commits,
+                           rounds_completed=done, dropped=self.dropped,
+                           round_results=self.round_results,
+                           events=self.trace)
+
+    # ------------------------------------------------------------- sync mode
+    def _run_sync(self, on_serve, on_commit, plan_fn, on_round_end):
+        """Barrier waves: each round replays the single-round DES verbatim
+        (exact PR 1 / Eq. 10-12 parity), then time advances by the round
+        makespan plus any commit overhead before the next wave starts."""
+        if plan_fn is None:
+            raise ValueError("sync mode needs plan_fn(rnd) -> RoundPlan")
+        cfg = self.cfg
+        for rnd in range(self.rounds):
+            plan = plan_fn(rnd)
+            res = simulate_round(plan.jobs, policy=plan.policy,
+                                 order=plan.order, slots=cfg.slots,
+                                 cohort_chunk=cfg.cohort_chunk,
+                                 chunk_efficiency=cfg.chunk_efficiency,
+                                 deadline=cfg.deadline)
+            base = self.now
+            for rec in res.service:
+                ev = ServeEvent(uids=rec.uids, rounds=(rnd,) * len(rec.uids),
+                                slot=rec.slot, start=base + rec.start,
+                                end=base + rec.end)
+                self.serves.append(ev)
+                if on_serve is not None:
+                    on_serve(ev)
+            self.dropped.extend((u, rnd) for u in res.dropped)
+            self.trace.extend((base + t, kind, uid)
+                              for t, kind, uid in res.events)
+            self.now = base + res.round_time
+            self.round_results.append(res)
+            if (rnd + 1) % cfg.agg_interval == 0:
+                served = tuple(sorted(res.completion))
+                self._commit(served, (0,) * len(served), on_commit)
+            if on_round_end is not None and on_round_end(rnd, res) is False:
+                break
+
+    # ------------------------------------------------------------ async mode
+    def _run_async(self, on_serve, on_commit, on_round_start=None):
+        cfg = self.cfg
+        n, slots, chunk = self.n, cfg.slots, cfg.cohort_chunk
+        key_of = DISCIPLINES[cfg.policy]
+        heap: List[tuple] = []          # (time, seq, kind, payload)
+        seq = itertools.count()
+
+        def push(t, kind, payload):
+            heapq.heappush(heap, (t, next(seq), kind, payload))
+
+        started = [0] * n               # local rounds entered
+        finished = [0] * n              # local rounds fully completed
+        acked = [0] * n                 # finished rounds covered by a commit
+        model_version = [0] * n         # version of each client's model copy
+        release = [0.0] * n             # earliest next-round start (commit dl)
+        free_at = [0.0] * n             # previous round's client_done
+        blocked: set = set()            # out of inflight credit
+        jobs: Dict[Tuple[int, int], Job] = {}
+        queue: List[Tuple[int, int]] = []     # (uid, round) at the server
+        slot_free = [0.0] * slots
+        buffer: Dict[int, int] = {}     # uid -> latest finished local round
+
+        def start_round(u, t):
+            if started[u] >= self.rounds:
+                return
+            if started[u] - acked[u] >= cfg.max_inflight_rounds:
+                blocked.add(u)
+                return
+            rnd = started[u]
+            started[u] += 1
+            t0 = max(t, release[u], free_at[u])
+            st = self.times_fn(u, rnd)
+            pri = self.priorities[u] if self.priorities is not None else 0.0
+            job = Job(uid=u, t_f=st.t_f, t_fc=st.t_fc, t_s=st.t_s,
+                      t_bc=st.t_bc, t_b=st.t_b, arrival=t0, priority=pri)
+            jobs[(u, rnd)] = job
+            if on_round_start is not None:
+                on_round_start(u, rnd, t0)
+            self.trace.append((t0 + job.t_f, "fwd_done", u))
+            self.trace.append((job.ready, "uplink_done", u))
+            push(job.ready, "uplink", (u, rnd))
+
+        def try_dispatch(t):
+            while queue:
+                s = min(range(slots), key=lambda i: slot_free[i])
+                if slot_free[s] > t:
+                    return
+                queue.sort(key=lambda e: key_of(jobs[e]))
+                take = queue[:chunk]
+                del queue[:chunk]
+                span = chunked_service_time([jobs[e].t_s for e in take],
+                                            cfg.chunk_efficiency)
+                slot_free[s] = t + span
+                self.trace.append((t, "server_start", take[0][0]))
+                push(t + span, "served", (tuple(take), s, t))
+
+        def do_commit(t, forced):
+            contribs = tuple(sorted(buffer))
+            stal = tuple(self.version - model_version[u] for u in contribs)
+            overhead = self._commit(contribs, stal, on_commit, time=t,
+                                    forced=forced)
+            for u in contribs:
+                model_version[u] = self.version
+                acked[u] = finished[u]
+                release[u] = t + overhead
+            buffer.clear()
+            for u in sorted(blocked):
+                if started[u] - acked[u] < cfg.max_inflight_rounds:
+                    blocked.discard(u)
+                    start_round(u, t)
+
+        for u in range(n):
+            start_round(u, 0.0)
+
+        while True:
+            if not heap:
+                if buffer and (blocked
+                               or any(s < self.rounds for s in started)):
+                    # tail flush: the remaining runners can no longer fill
+                    # the buffer to k on their own — commit what's there so
+                    # blocked clients regain credit and finish their rounds
+                    do_commit(self.now, forced=True)
+                    if heap:
+                        continue
+                break
+            t, _, kind, payload = heapq.heappop(heap)
+            self.now = max(self.now, t)
+            if kind == "uplink":
+                queue.append(payload)
+                try_dispatch(t)
+            elif kind == "served":
+                take, s, t_start = payload
+                ev = ServeEvent(uids=tuple(u for u, _ in take),
+                                rounds=tuple(r for _, r in take),
+                                slot=s, start=t_start, end=t)
+                self.serves.append(ev)
+                self.trace.append((t, "server_done", take[0][0]))
+                if on_serve is not None:
+                    on_serve(ev)
+                for u, rnd in take:
+                    j = jobs[(u, rnd)]
+                    self.trace.append((t + j.t_bc, "downlink_done", u))
+                    self.trace.append((t + j.t_bc + j.t_b, "client_done", u))
+                    push(t + j.t_bc + j.t_b, "client_done", (u, rnd))
+                try_dispatch(t)
+            elif kind == "client_done":
+                u, rnd = payload
+                finished[u] += 1
+                free_at[u] = t
+                buffer[u] = rnd
+                if len(buffer) >= cfg.buffer_k:
+                    do_commit(t, forced=False)
+                if u not in blocked and started[u] == rnd + 1:
+                    start_round(u, t)
+        if buffer:
+            # final flush so the tail of the fleet reaches the global model
+            do_commit(self.now, forced=True)
+
+    # ---------------------------------------------------------------- commit
+    def _commit(self, contributors, staleness, on_commit, *, time=None,
+                forced=False) -> float:
+        t = self.now if time is None else time
+        self.version += 1
+        ev = CommitEvent(time=t, version=self.version,
+                         contributors=tuple(contributors),
+                         staleness=tuple(staleness), forced=forced)
+        overhead = 0.0
+        if on_commit is not None:
+            overhead = float(on_commit(ev) or 0.0)
+        ev = dataclasses.replace(ev, overhead=overhead)
+        self.commits.append(ev)
+        self.now = max(self.now, t + overhead)
+        return overhead

@@ -29,12 +29,14 @@ from repro.core import memory_model, splitfl
 from repro.core.cost_model import (DeviceProfile, LinkProfile, StepTimes,
                                    client_step_times, lora_upload_bytes,
                                    makespan)
-from repro.core.scheduling import (ONLINE_DISCIPLINES, alg2_priorities,
+from repro.core.scheduling import (ONLINE_DISCIPLINES, SCHEDULERS,
+                                   alg2_priorities, resolve_online,
                                    resolve_order)
 from repro.data import ClassificationLoader, EmotionDataset, dirichlet_partition
 from repro.fed import metrics as M
 from repro.fed.devices import LINK, SERVER
-from repro.fed.engine import jobs_from_times, simulate_round
+from repro.fed.engine import (AGG_POLICIES, ClockConfig, FederationClock,
+                              RoundPlan, jobs_from_times)
 from repro.models import build_model
 from repro.optim import AdamW
 
@@ -52,7 +54,11 @@ class FedRunConfig:
     lr: float = 1e-5
     alpha: float = 0.5              # dirichlet non-IID concentration
     seed: int = 0
-    eval_every: int = 5
+    eval_every: int = 5             # sync: barrier rounds between evals;
+    #                                 async: aggregation COMMITS between evals
+    #                                 (staleness with agg_buffer_k=1 commits
+    #                                 per upload — raise eval_every to keep
+    #                                 evaluation cost comparable)
     target_accuracy: Optional[float] = None   # early-stop => convergence round
     # -- beyond-paper system knobs (EXPERIMENTS.md §Perf / ablations) --------
     quantize_activations: bool = False   # int8+EF on the wireless links
@@ -69,6 +75,111 @@ class FedRunConfig:
     chunk_efficiency: float = 1.0        # k>1 chunk cost vs summed sequential
     server_slots: int = 1                # concurrent server executors
     round_deadline: Optional[float] = None  # drop stragglers mid-round
+    # -- continuous-time async federation (event engine only) ----------------
+    # "sync" is the paper's barrier round; "buffered" commits whenever
+    # agg_buffer_k distinct client uploads accumulate; "staleness" adds the
+    # polynomial (1+s)^-alpha discount to the Eq. 6-8 weights.
+    agg_policy: str = "sync"             # sync | buffered | staleness
+    max_inflight_rounds: int = 1         # local rounds a client may run past
+    #                                      its last aggregation commit
+    agg_buffer_k: Optional[int] = None   # commit threshold (default: U//2 for
+    #                                      buffered, 1 for staleness)
+    staleness_alpha: Optional[float] = None  # polynomial discount exponent
+    #                                      (staleness policy only; default 0.5)
+
+
+def validate_run_config(run: FedRunConfig, n_clients: Optional[int] = None) -> None:
+    """Exhaustive FedRunConfig validation matrix.
+
+    Every engine/scheme/policy knob combination is either meaningful or
+    rejected here — nothing is silently ignored.  Enum membership raises
+    KeyError; range and cross-knob violations raise ValueError.
+    """
+    # ---- enums ----
+    if run.scheme not in ("ours", "sfl", "sl"):
+        raise KeyError(f"unknown scheme {run.scheme!r}")
+    if run.scheduler not in SCHEDULERS:
+        raise KeyError(f"unknown scheduling policy {run.scheduler!r}")
+    if run.engine not in ("analytic", "event"):
+        raise KeyError(f"unknown engine {run.engine!r}")
+    if run.agg_policy not in AGG_POLICIES:
+        raise KeyError(f"unknown aggregation policy {run.agg_policy!r}")
+    # ---- scalar ranges ----
+    if run.rounds < 1 or run.agg_interval < 1 or run.eval_every < 1:
+        raise ValueError("rounds, agg_interval and eval_every must be >= 1")
+    if run.batch_size < 1 or run.seq_len < 1:
+        raise ValueError("batch_size and seq_len must be >= 1")
+    if run.lr <= 0 or run.alpha <= 0:
+        raise ValueError("lr and alpha must be > 0")
+    if not 0.0 < run.participation <= 1.0:
+        raise ValueError("participation must be in (0, 1]")
+    if not 0.0 <= run.straggler_prob <= 1.0:
+        raise ValueError("straggler_prob must be in [0, 1]")
+    if run.straggler_slowdown < 1.0:
+        raise ValueError("straggler_slowdown must be >= 1")
+    if run.cohort_chunk < 1 or run.server_slots < 1:
+        raise ValueError("cohort_chunk and server_slots must be >= 1")
+    if not 0.0 < run.chunk_efficiency <= 1.0:
+        raise ValueError("chunk_efficiency must be in (0, 1]")
+    if run.round_deadline is not None and run.round_deadline <= 0:
+        raise ValueError("round_deadline must be > 0 when set")
+    if run.max_inflight_rounds < 1:
+        raise ValueError("max_inflight_rounds must be >= 1")
+    if run.staleness_alpha is not None and run.staleness_alpha < 0:
+        raise ValueError("staleness_alpha must be >= 0")
+    if run.agg_buffer_k is not None:
+        if run.agg_buffer_k < 1:
+            raise ValueError("agg_buffer_k must be >= 1 when set")
+        if n_clients is not None and run.agg_buffer_k > n_clients:
+            raise ValueError("agg_buffer_k cannot exceed the fleet size")
+    # ---- engine cross-knob matrix ----
+    if run.engine == "analytic":
+        if (run.chunk_efficiency != 1.0 or run.server_slots != 1
+                or run.round_deadline is not None):
+            raise ValueError("chunk_efficiency / server_slots / "
+                             "round_deadline model the event-driven round "
+                             "clock; set engine='event' to use them")
+        if run.agg_policy != "sync" or run.max_inflight_rounds != 1:
+            raise ValueError("async federation (agg_policy, "
+                             "max_inflight_rounds) needs the "
+                             "continuous-time clock; set engine='event'")
+    else:   # event
+        if run.scheme != "ours":
+            # the DES models the paper's single shared-server queue; sfl
+            # (concurrent submodels) and sl (strictly sequential) keep
+            # their own closed-form time models
+            raise ValueError("engine='event' only models scheme='ours'")
+    # ---- aggregation-policy knob ownership (no knob silently ignored) ----
+    if run.agg_policy != "staleness" and run.staleness_alpha is not None:
+        raise ValueError("staleness_alpha is only read by "
+                         "agg_policy='staleness'")
+    if run.agg_policy == "sync":
+        if run.agg_buffer_k is not None:
+            raise ValueError("agg_buffer_k is the ASYNC commit threshold; "
+                             "sync commits every agg_interval barriers")
+        if run.max_inflight_rounds != 1:
+            raise ValueError("sync aggregation is a barrier: "
+                             "max_inflight_rounds must be 1")
+    else:
+        if run.agg_interval != 1:
+            raise ValueError("async commit cadence is agg_buffer_k uploads, "
+                             "not rounds; set agg_interval=1 (the sync-only "
+                             "knob would be silently ignored otherwise)")
+        if run.participation < 1.0:
+            raise ValueError("per-round cohort sampling is a synchronous "
+                             "notion; async policies pace every client "
+                             "continuously (set participation=1.0)")
+        if run.round_deadline is not None:
+            raise ValueError("round_deadline is a synchronous notion; async "
+                             "policies bound lag via max_inflight_rounds")
+        if run.scheduler not in ONLINE_DISCIPLINES:
+            raise ValueError(f"scheduler {run.scheduler!r} has no online "
+                             "form; async policies re-sort a live queue "
+                             f"(choose from {sorted(ONLINE_DISCIPLINES)})")
+        if run.target_accuracy is not None:
+            raise ValueError("target_accuracy early-stop is defined on "
+                             "barrier rounds; not supported under async "
+                             "aggregation policies")
 
 
 @dataclasses.dataclass
@@ -86,21 +197,7 @@ class Simulator:
                  test: EmotionDataset, run: FedRunConfig,
                  link: LinkProfile = LINK, server: DeviceProfile = SERVER):
         assert len(devices) == len(cuts)
-        if run.engine not in ("analytic", "event"):
-            raise KeyError(f"unknown engine {run.engine!r}")
-        if not 0.0 < run.chunk_efficiency <= 1.0:
-            raise ValueError("chunk_efficiency must be in (0, 1]")
-        if run.engine == "analytic" and (run.chunk_efficiency != 1.0
-                                         or run.server_slots != 1
-                                         or run.round_deadline is not None):
-            raise ValueError("chunk_efficiency / server_slots / "
-                             "round_deadline model the event-driven round "
-                             "clock; set engine='event' to use them")
-        if run.engine == "event" and run.scheme != "ours":
-            # the DES models the paper's single shared-server queue; sfl
-            # (concurrent submodels) and sl (strictly sequential) keep
-            # their own closed-form time models
-            raise ValueError("engine='event' only models scheme='ours'")
+        validate_run_config(run, len(devices))
         self.cfg, self.run = cfg, run
         self.devices, self.cuts = list(devices), [int(c) for c in cuts]
         self.link, self.server_dev = link, server
@@ -165,8 +262,35 @@ class Simulator:
         self._round_rng = np.random.default_rng(run.seed + 7777)
         self._ef_residual = [None] * self.u      # uplink error feedback
         self._active: List[int] = list(range(self.u))
+        # continuous-time engine state: the standing global model (updated at
+        # every aggregation commit; the async policies merge INTO it), the
+        # per-serve loss trace for wall-clock curves, and the per-client-round
+        # straggler rng (the sync path re-rolls per barrier wave instead)
+        self._global_full = base_lora
+        self._global_head = head0
+        self.loss_events: List[tuple] = []   # (t_server_done, uid, round, loss)
+        self._clock: Optional[FederationClock] = None
+        self._wave_losses: List[float] = []
+        self._async_rng = np.random.default_rng(run.seed + 4242)
+        self._quant_ratio: Optional[float] = None
+        # causal consistency for in-flight async rounds: the client-side
+        # state each (uid, round) pulled at round start, a per-client commit
+        # counter, and the local updates discarded because a commit
+        # refreshed the client while its round was still in flight
+        self._round_pull: dict = {}
+        self._client_version = [0] * self.u
+        self.discarded_updates: List[tuple] = []   # (uid, round)
 
     # ------------------------------------------------------------------ time
+    def _transport_ratio(self) -> float:
+        """int8+EF wireless shrink factor (cached; same every round)."""
+        if self._quant_ratio is None:
+            from repro.comm import transport_bytes
+            shape = (self.run.batch_size, self.run.seq_len, self.cfg.d_model)
+            self._quant_ratio = (transport_bytes(shape, True)
+                                 / transport_bytes(shape, False))
+        return self._quant_ratio
+
     def _adjusted_times(self) -> List[StepTimes]:
         """Per-round Eq.10 terms: stragglers slow client compute; int8+EF
         transport shrinks both wireless transfers ~4x."""
@@ -179,61 +303,62 @@ class Simulator:
                 t_f *= run.straggler_slowdown
                 t_b *= run.straggler_slowdown
             if run.quantize_activations:
-                from repro.comm import transport_bytes
-                shape = (run.batch_size, run.seq_len, self.cfg.d_model)
-                ratio = transport_bytes(shape, True) / transport_bytes(shape, False)
+                ratio = self._transport_ratio()
                 t_fc *= ratio
                 t_bc *= ratio
             out.append(dataclasses.replace(st, t_f=t_f, t_b=t_b,
                                            t_fc=t_fc, t_bc=t_bc))
         return out
 
-    def _service_plan(self):
-        """Decide this round's server dispatch groups (and, for the event
-        engine, the round clock outcome).
+    def _async_times(self, u: int, rnd: int) -> StepTimes:
+        """Eq.10 terms for ONE client's local round ``rnd`` — the async
+        clock's per-(client, round) counterpart of ``_adjusted_times``
+        (stragglers re-roll per local round on an independent stream)."""
+        run = self.run
+        st = self.times[u]
+        t_f, t_b, t_fc, t_bc = st.t_f, st.t_b, st.t_fc, st.t_bc
+        if run.straggler_prob > 0 and \
+                self._async_rng.random() < run.straggler_prob:
+            t_f *= run.straggler_slowdown
+            t_b *= run.straggler_slowdown
+        if run.quantize_activations:
+            ratio = self._transport_ratio()
+            t_fc *= ratio
+            t_bc *= ratio
+        return dataclasses.replace(st, t_f=t_f, t_b=t_b, t_fc=t_fc, t_bc=t_bc)
 
-        Returns (groups, dropped): ``groups`` is a list of uid-chunks served
-        in order — each chunk of size>1 runs through the batched vmapped
-        server step; ``dropped`` are clients cut off by the round deadline.
+    def _service_plan(self):
+        """Decide this round's server dispatch groups under the closed-form
+        analytic engine (the event engine's dispatch groups come from the
+        FederationClock's serve events instead).
+
+        Returns a list of uid-chunks served in order — each chunk of size>1
+        runs through the batched vmapped server step.
         """
         run = self.run
         t = self._times_this_round
         tfl = [d.tflops for d in self.devices]
         chunk = max(1, int(run.cohort_chunk))
-        if run.engine == "analytic" or run.scheme != "ours":
-            order = resolve_order(run.scheduler, t, self.cuts, tfl)
-            order = [u for u in order if u in self._active]
-            self._last_event = None
-            return ([order[i:i + chunk] for i in range(0, len(order), chunk)],
-                    [])
-        if run.engine != "event":
-            raise KeyError(f"unknown engine {run.engine!r}")
+        order = resolve_order(run.scheduler, t, self.cuts, tfl)
+        order = [u for u in order if u in self._active]
+        self._last_event = None
+        return [order[i:i + chunk] for i in range(0, len(order), chunk)]
 
-        uids = sorted(self._active)
-        if run.scheduler in ONLINE_DISCIPLINES:
-            policy, needs_pri = ONLINE_DISCIPLINES[run.scheduler]
-            pri = alg2_priorities(self.cuts, tfl) if needs_pri else None
-            jobs = jobs_from_times(t, uids, priorities=pri)
-            res = simulate_round(jobs, policy=policy, slots=run.server_slots,
-                                 cohort_chunk=chunk,
-                                 chunk_efficiency=run.chunk_efficiency,
-                                 deadline=run.round_deadline)
-        else:   # e.g. "optimal": no online form — replay its fixed order
-            order = [u for u in resolve_order(run.scheduler, t, self.cuts, tfl)
-                     if u in self._active]
-            jobs = jobs_from_times(t, uids)
-            res = simulate_round(jobs, order=order, slots=run.server_slots,
-                                 cohort_chunk=chunk,
-                                 chunk_efficiency=run.chunk_efficiency,
-                                 deadline=run.round_deadline)
-        self._last_event = res
-        return [list(rec.uids) for rec in res.service], list(res.dropped)
+    def _sample_cohort(self) -> None:
+        """Partial participation: sample this round's client cohort into
+        ``self._active`` (one rng draw per sampled round, shared by the
+        analytic loop and the sync barrier waves for stream parity)."""
+        run = self.run
+        if run.participation < 1.0 and run.scheme != "sl":
+            k = max(1, int(round(run.participation * self.u)))
+            self._active = sorted(self._round_rng.choice(
+                self.u, size=k, replace=False).tolist())
+        else:
+            self._active = list(range(self.u))
 
     def _round_time(self, order: Sequence[int]) -> float:
         t = self._times_this_round
         if self.run.scheme == "ours":
-            if self._last_event is not None:     # event-driven round clock
-                return self._last_event.round_time
             span, _, _ = makespan(t, order)
             return span
         if self.run.scheme == "sfl":
@@ -256,15 +381,14 @@ class Simulator:
 
     # ------------------------------------------------------------------ round
     def run_round(self, rnd: int) -> RoundRecord:
+        """One closed-form (analytic-engine) barrier round.  Event-engine
+        rounds are driven by the FederationClock inside ``run_training``."""
         run = self.run
+        if run.engine == "event":
+            raise RuntimeError("engine='event' rounds are owned by the "
+                               "FederationClock; call run_training()")
         self._times_this_round = self._adjusted_times()
-        # partial participation: sample the round's client cohort
-        if run.participation < 1.0 and run.scheme != "sl":
-            k = max(1, int(round(run.participation * self.u)))
-            self._active = sorted(self._round_rng.choice(
-                self.u, size=k, replace=False).tolist())
-        else:
-            self._active = list(range(self.u))
+        self._sample_cohort()
         if run.scheme == "sl":
             losses, order = self._round_sl()
         else:
@@ -273,28 +397,7 @@ class Simulator:
 
         # aggregation phase (not for SL)
         if run.scheme in ("ours", "sfl") and (rnd + 1) % run.agg_interval == 0:
-            servers_split = [lora_lib.split_lora(self.server_lora[u], self.cuts[u])[1]
-                             for u in range(self.u)]
-            new_c, new_s, _ = agg_lib.aggregation_round(
-                self.client_lora, servers_split, self.cuts, self.data_sizes)
-            self.client_lora = new_c
-            self.server_lora = [
-                lora_lib.embed_in_full_shape(s, self.lora_spec, cut, "server")
-                for s, cut in zip(new_s, self.cuts)]
-            # heads: dataset-weighted FedAvg
-            w = np.array(self.data_sizes, np.float64)
-            w /= w.sum()
-            self.heads = [jax.tree.map(
-                lambda *hs: sum(float(wi) * h for wi, h in zip(w, hs)),
-                *self.heads)] * self.u
-            # aggregation upload/download time
-            up = max(self.link.transfer_s(lora_upload_bytes(self.cfg, cut))
-                     for cut in self.cuts)
-            self.sim_clock += 2 * up
-            # optimizer states reset to match redistributed adapters
-            self.client_opt = [self.opt.init(c) for c in self.client_lora]
-            self.server_opt = [self.opt.init({"lora": s, "head": self.heads[u]})
-                               for u, s in enumerate(self.server_lora)]
+            self.sim_clock += self._commit_sync(None)
 
         # a deadline can cut every client out of a round -> no losses
         mean_loss = float(np.mean(losses)) if losses else float("nan")
@@ -306,16 +409,27 @@ class Simulator:
     def _round_parallel(self):
         """ours / sfl: parallel client forwards, then scheduled server
         updates on the single full model — sequential per-client dispatches
-        or cohort-chunked batched dispatches, as the round clock decides."""
+        or cohort-chunked batched dispatches, per the service plan."""
+        groups = self._service_plan()
+        losses, order = [], []
+        for grp in groups:
+            if not grp:
+                continue
+            order.extend(grp)
+            losses.extend(self._serve_group(list(grp)))
+        return losses, order
+
+    def _serve_group(self, grp: List[int]) -> List[float]:
+        """Run the real jitted math for one server dispatch group: per-client
+        batch draw + client forward (with optional int8+EF uplink), then the
+        sequential server step (size-1 group) or ONE batched vmapped dispatch
+        (size>1), then each client's backward.  Shared by the analytic round
+        body and the FederationClock's serve events."""
         run = self.run
-        groups, _dropped = self._service_plan()
-        # the round clock only reads the analytic times, so it runs FIRST:
-        # deadline-dropped clients never execute their (real, jitted)
-        # forward, and their uplink error-feedback state stays untouched
-        served = sorted({u for grp in groups for u in grp})
         batches, acts = {}, {}
-        for u in served:
-            batch = {k: jnp.asarray(v) for k, v in self.loaders[u].next_batch().items()}
+        for u in grp:
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.loaders[u].next_batch().items()}
             batches[u] = batch
             fwd, _ = self._cli_steps[self.cuts[u]]
             v = fwd(self.client_params[u], self.client_lora[u], batch)
@@ -327,39 +441,32 @@ class Simulator:
                 v = dequantize(qx, v.dtype)
             acts[u] = v
 
-        losses, order = [], []
-        for grp in groups:
-            grp = [u for u in grp if u in acts]
-            if not grp:
-                continue
-            order.extend(grp)
-            if len(grp) == 1:
-                u = grp[0]
-                cut = self.cuts[u]
-                loss, new_lora, new_head, new_opt, dv = self._srv_steps[cut](
-                    self.params, self.server_lora[u], self.heads[u],
-                    self.server_opt[u], acts[u], batches[u])
-                losses.append(float(loss))
-                self._apply_server_update(u, new_lora, new_head, new_opt)
-                self._client_backward(u, batches[u], dv)
-                continue
-            # batched cohort chunk: one vmapped dispatch for the whole group
-            loss_g, nl, nh, no, dv_g = self._srv_step_batched(
-                self.params,
-                lora_lib.stack_trees([self.server_lora[u] for u in grp]),
-                jnp.stack([self.heads[u] for u in grp]),
-                lora_lib.stack_trees([self.server_opt[u] for u in grp]),
-                jnp.stack([acts[u] for u in grp]),
-                lora_lib.stack_trees([batches[u] for u in grp]),
-                jnp.asarray([self.cuts[u] for u in grp]))
-            nls, nos = lora_lib.unstack_tree(nl), lora_lib.unstack_tree(no)
-            for i, u in enumerate(grp):
-                losses.append(float(loss_g[i]))
-                self._apply_server_update(u, nls[i], nh[i], nos[i])
-                self._client_backward(u, batches[u], dv_g[i])
-        # deadline-cut stragglers are simply absent from ``groups``: they
-        # keep last round's adapters and rejoin the sampling pool next round
-        return losses, order
+        losses: List[float] = []
+        if len(grp) == 1:
+            u = grp[0]
+            cut = self.cuts[u]
+            loss, new_lora, new_head, new_opt, dv = self._srv_steps[cut](
+                self.params, self.server_lora[u], self.heads[u],
+                self.server_opt[u], acts[u], batches[u])
+            losses.append(float(loss))
+            self._apply_server_update(u, new_lora, new_head, new_opt)
+            self._client_backward(u, batches[u], dv)
+            return losses
+        # batched cohort chunk: one vmapped dispatch for the whole group
+        loss_g, nl, nh, no, dv_g = self._srv_step_batched(
+            self.params,
+            lora_lib.stack_trees([self.server_lora[u] for u in grp]),
+            jnp.stack([self.heads[u] for u in grp]),
+            lora_lib.stack_trees([self.server_opt[u] for u in grp]),
+            jnp.stack([acts[u] for u in grp]),
+            lora_lib.stack_trees([batches[u] for u in grp]),
+            jnp.asarray([self.cuts[u] for u in grp]))
+        nls, nos = lora_lib.unstack_tree(nl), lora_lib.unstack_tree(no)
+        for i, u in enumerate(grp):
+            losses.append(float(loss_g[i]))
+            self._apply_server_update(u, nls[i], nh[i], nos[i])
+            self._client_backward(u, batches[u], dv_g[i])
+        return losses
 
     def _apply_server_update(self, u: int, new_lora, new_head, new_opt):
         self.server_lora[u] = new_lora
@@ -413,11 +520,228 @@ class Simulator:
                 merged[key] = sub
         self.server_lora[0] = merged
 
+    # ---------------------------------------------------- event-engine driver
+    # Under engine="event" the FederationClock owns time and the simulator is
+    # a thin driver: the clock calls back into ``_serve_group`` for the real
+    # jitted math at every server dispatch and into a commit handler at every
+    # aggregation, and the driver folds the results into history/loss_events.
+
+    def _resolved_buffer_k(self) -> int:
+        run = self.run
+        if run.agg_buffer_k is not None:
+            return run.agg_buffer_k
+        # buffered: semi-sync half-cohort; staleness: fully async (every
+        # upload commits, the discount keeps stale ones from dominating)
+        return 1 if run.agg_policy == "staleness" else max(1, self.u // 2)
+
+    def _run_event(self, verbose: bool = False):
+        run = self.run
+        tfl = [d.tflops for d in self.devices]
+        if run.agg_policy == "sync":
+            policy = "fifo"              # per-wave RoundPlan carries the real
+            pri = None                   # discipline / fixed order
+        else:
+            policy, needs_pri = resolve_online(run.scheduler)
+            pri = alg2_priorities(self.cuts, tfl) if needs_pri else None
+        ccfg = ClockConfig(policy=policy, slots=run.server_slots,
+                           cohort_chunk=max(1, int(run.cohort_chunk)),
+                           chunk_efficiency=run.chunk_efficiency,
+                           deadline=run.round_deadline,
+                           agg_policy=run.agg_policy,
+                           agg_interval=run.agg_interval,
+                           buffer_k=self._resolved_buffer_k(),
+                           max_inflight_rounds=run.max_inflight_rounds)
+        clock = FederationClock(self.u, run.rounds, ccfg,
+                                times_fn=self._async_times, priorities=pri)
+        self._clock = clock
+        self._wave_losses = []
+        if run.agg_policy == "sync":
+            clock.run(plan_fn=self._plan_wave, on_serve=self._on_serve,
+                      on_commit=self._commit_sync,
+                      on_round_end=lambda rnd, res:
+                          self._on_round_end(rnd, res, verbose))
+        else:
+            clock.run(on_serve=self._on_serve,
+                      on_commit=lambda ev: self._commit_async(ev, verbose),
+                      on_round_start=self._on_round_start)
+            # final-state evaluation (the async analogue of the sync path's
+            # last-round eval)
+            if self.history and self.history[-1].accuracy is None:
+                rec = self.history[-1]
+                rec.accuracy, rec.f1 = self.evaluate()
+                if verbose:
+                    print(f"[{run.scheme}/{run.scheduler}/{run.agg_policy}] "
+                          f"final t={rec.sim_time_s:9.1f}s "
+                          f"acc={rec.accuracy:.4f} f1={rec.f1:.4f}")
+        self.sim_clock = clock.now
+        return self.history
+
+    def _on_round_start(self, u: int, rnd: int, t: float) -> None:
+        """A client pulls its model copy when it ENTERS a local round; the
+        lazily-executed math must use that copy, not whatever a later commit
+        redistributed mid-flight."""
+        self._round_pull[(u, rnd)] = (self.client_lora[u], self.client_opt[u],
+                                      self._client_version[u])
+
+    def _on_serve(self, ev):
+        # run each client's round on the state it pulled at round start
+        swapped = {}
+        for u, r in zip(ev.uids, ev.rounds):
+            pull = self._round_pull.pop((u, r), None)
+            if pull is not None:
+                swapped[u] = (r, pull[2], self.client_lora[u],
+                              self.client_opt[u])
+                self.client_lora[u], self.client_opt[u] = pull[0], pull[1]
+        losses = self._serve_group(list(ev.uids))
+        for u, (r, pull_version, cur_lora, cur_opt) in swapped.items():
+            if self._client_version[u] != pull_version:
+                # a commit refreshed u while this round was in flight: the
+                # stale local update loses the race — u continues from the
+                # redistributed global (its server-side half already serves
+                # from the post-commit state)
+                self.client_lora[u], self.client_opt[u] = cur_lora, cur_opt
+                self.discarded_updates.append((u, r))
+        self._wave_losses.extend(losses)
+        for u, r, ls in zip(ev.uids, ev.rounds, losses):
+            self.loss_events.append((ev.end, u, r, ls))
+
+    def _plan_wave(self, rnd: int) -> RoundPlan:
+        """One sync barrier wave: re-roll stragglers, sample the cohort, and
+        hand the clock this round's jobs + discipline (or fixed order) —
+        exactly the PR 1 per-round plan, so sync parity is by construction."""
+        run = self.run
+        self._times_this_round = self._adjusted_times()
+        self._sample_cohort()
+        t = self._times_this_round
+        tfl = [d.tflops for d in self.devices]
+        uids = sorted(self._active)
+        if run.scheduler in ONLINE_DISCIPLINES:
+            policy, needs_pri = ONLINE_DISCIPLINES[run.scheduler]
+            pri = alg2_priorities(self.cuts, tfl) if needs_pri else None
+            return RoundPlan(jobs=jobs_from_times(t, uids, priorities=pri),
+                             policy=policy)
+        # e.g. "optimal": no online form — replay its fixed order
+        order = [u for u in resolve_order(run.scheduler, t, self.cuts, tfl)
+                 if u in self._active]
+        return RoundPlan(jobs=jobs_from_times(t, uids), order=order)
+
+    def _on_round_end(self, rnd: int, res, verbose: bool) -> bool:
+        self._last_event = res
+        self.sim_clock = self._clock.now
+        losses, self._wave_losses = self._wave_losses, []
+        mean_loss = float(np.mean(losses)) if losses else float("nan")
+        rec = RoundRecord(rnd, self.sim_clock, mean_loss)
+        self.history.append(rec)
+        return not self._maybe_eval(rnd, rec, verbose)
+
+    def _commit_sync(self, ev) -> float:
+        """Barrier aggregation (Alg. 1 l.17-30, Eqs. 5-9) over the WHOLE
+        fleet, as in the paper — returns the adapter up+download transfer
+        time.  Shared by the analytic round loop and the sync clock."""
+        servers_split = [lora_lib.split_lora(self.server_lora[u],
+                                             self.cuts[u])[1]
+                         for u in range(self.u)]
+        new_c, new_s, agg_full = agg_lib.aggregation_round(
+            self.client_lora, servers_split, self.cuts, self.data_sizes)
+        self.client_lora = new_c
+        self.server_lora = [
+            lora_lib.embed_in_full_shape(s, self.lora_spec, cut, "server")
+            for s, cut in zip(new_s, self.cuts)]
+        # heads: dataset-weighted FedAvg
+        w = np.array(self.data_sizes, np.float64)
+        w /= w.sum()
+        head = jax.tree.map(
+            lambda *hs: sum(float(wi) * h for wi, h in zip(w, hs)),
+            *self.heads)
+        self.heads = [head] * self.u
+        self._global_full, self._global_head = agg_full, head
+        # optimizer states reset to match redistributed adapters
+        self.client_opt = [self.opt.init(c) for c in self.client_lora]
+        self.server_opt = [self.opt.init({"lora": s, "head": self.heads[u]})
+                           for u, s in enumerate(self.server_lora)]
+        # aggregation upload/download time
+        up = max(self.link.transfer_s(lora_upload_bytes(self.cfg, cut))
+                 for cut in self.cuts)
+        return 2 * up
+
+    def _commit_async(self, ev, verbose: bool = False) -> float:
+        """Async commit: fold the buffered contributors into the standing
+        global adapters with staleness-discounted Eq. 6-8 weights, anchor
+        the absent data mass on the current global, and redistribute to the
+        contributors only (they re-enter at the new version; the rest keep
+        training until their own next commit)."""
+        run = self.run
+        contribs = list(ev.contributors)
+        fulls = [lora_lib.assemble_full(
+                     self.client_lora[u],
+                     lora_lib.split_lora(self.server_lora[u], self.cuts[u])[1],
+                     self.cuts[u])
+                 for u in contribs]
+        alpha = 0.0
+        if run.agg_policy == "staleness":
+            alpha = 0.5 if run.staleness_alpha is None else run.staleness_alpha
+        w = [self.data_sizes[u] * agg_lib.staleness_discount(s, alpha)
+             for u, s in zip(contribs, ev.staleness)]
+        anchor = float(sum(self.data_sizes)
+                       - sum(self.data_sizes[u] for u in contribs))
+        self._global_full = agg_lib.merge_into_global(
+            self._global_full, fulls, w, anchor)
+        self._global_head = agg_lib.aggregate_full_weighted(
+            [self._global_head] + [self.heads[u] for u in contribs],
+            [anchor] + w)
+        for u in contribs:
+            c, s = lora_lib.split_lora(self._global_full, self.cuts[u])
+            self.client_lora[u] = c
+            self.server_lora[u] = lora_lib.embed_in_full_shape(
+                s, self.lora_spec, self.cuts[u], "server")
+            self.heads[u] = self._global_head
+            self.client_opt[u] = self.opt.init(c)
+            self.server_opt[u] = self.opt.init(
+                {"lora": self.server_lora[u], "head": self._global_head})
+            self._client_version[u] += 1   # in-flight rounds of u now race
+        up = max(self.link.transfer_s(lora_upload_bytes(self.cfg,
+                                                        self.cuts[u]))
+                 for u in contribs)
+        overhead = 2 * up
+        # one history record per commit (wall-clock-indexed, NOT per round)
+        losses, self._wave_losses = self._wave_losses, []
+        mean_loss = float(np.mean(losses)) if losses else float("nan")
+        self.sim_clock = ev.time + overhead
+        rec = RoundRecord(len(self.history), self.sim_clock, mean_loss)
+        self.history.append(rec)
+        if len(self.history) % run.eval_every == 0:
+            rec.accuracy, rec.f1 = self.evaluate()
+            if verbose:
+                print(f"[{run.scheme}/{run.scheduler}/{run.agg_policy}] "
+                      f"commit {ev.version:4d} t={rec.sim_time_s:9.1f}s "
+                      f"loss={rec.mean_loss:.4f} acc={rec.accuracy:.4f} "
+                      f"f1={rec.f1:.4f} "
+                      f"stale={float(np.mean(ev.staleness)):.2f}")
+        return overhead
+
+    def _maybe_eval(self, rnd: int, rec: RoundRecord, verbose: bool) -> bool:
+        """Shared per-round eval/early-stop; True means stop training."""
+        run = self.run
+        if (rnd + 1) % run.eval_every == 0 or rnd == run.rounds - 1:
+            rec.accuracy, rec.f1 = self.evaluate()
+            if verbose:
+                print(f"[{run.scheme}/{run.scheduler}] round {rnd+1:4d} "
+                      f"t={rec.sim_time_s:9.1f}s loss={rec.mean_loss:.4f} "
+                      f"acc={rec.accuracy:.4f} f1={rec.f1:.4f}")
+            if (run.target_accuracy is not None
+                    and rec.accuracy >= run.target_accuracy):
+                return True
+        return False
+
     # ------------------------------------------------------------------ eval
     def evaluate(self, max_batches: int = 32):
-        """Global model = aggregate of current full adapters (ours/sfl) or the
-        traveling set (sl); evaluated centrally on the held-out set."""
-        if self.run.scheme == "sl":
+        """Global model = aggregate of current full adapters (ours/sfl), the
+        traveling set (sl), or the standing async global (buffered/staleness
+        policies); evaluated centrally on the held-out set."""
+        if self.run.agg_policy != "sync":
+            full = self._global_full
+            head = self._global_head
+        elif self.run.scheme == "sl":
             full = self.server_lora[0]
             head = self.heads[0]
         else:
@@ -449,23 +773,22 @@ class Simulator:
     # ------------------------------------------------------------------ driver
     def run_training(self, verbose: bool = False):
         run = self.run
+        if run.engine == "event":
+            # time is owned by the FederationClock; this loop's per-round
+            # stepping is the analytic closed-form path only
+            return self._run_event(verbose)
         for rnd in range(run.rounds):
             rec = self.run_round(rnd)
-            if (rnd + 1) % run.eval_every == 0 or rnd == run.rounds - 1:
-                rec.accuracy, rec.f1 = self.evaluate()
-                if verbose:
-                    print(f"[{run.scheme}/{run.scheduler}] round {rnd+1:4d} "
-                          f"t={rec.sim_time_s:9.1f}s loss={rec.mean_loss:.4f} "
-                          f"acc={rec.accuracy:.4f} f1={rec.f1:.4f}")
-                if (run.target_accuracy is not None
-                        and rec.accuracy >= run.target_accuracy):
-                    break
+            if self._maybe_eval(rnd, rec, verbose):
+                break
         return self.history
 
     # ------------------------------------------------------------------ state
     def state_dict(self) -> dict:
         """Whole-fleet training state (adapters, heads, optimizers, clock)
-        for CheckpointManager.save / resume."""
+        for CheckpointManager.save / resume.  Async runs resume at WHOLE-RUN
+        boundaries only (the in-flight event heap is not serialized), but
+        the standing global model and the wall-clock loss trace survive."""
         return {
             "round": np.int64(len(self.history)),
             "sim_clock": np.float64(self.sim_clock),
@@ -476,6 +799,11 @@ class Simulator:
             "server_opt": [tuple(o) for o in self.server_opt],
             "loader_state": np.asarray([ld.state() for ld in self.loaders],
                                        np.int64),
+            "global_full": self._global_full,
+            "global_head": self._global_head,
+            "loss_events": (np.asarray(self.loss_events, np.float64)
+                            if self.loss_events
+                            else np.zeros((0, 4), np.float64)),
         }
 
     def load_state_dict(self, st: dict) -> int:
@@ -489,6 +817,11 @@ class Simulator:
         if "loader_state" in st:
             for ld, s in zip(self.loaders, np.asarray(st["loader_state"])):
                 ld.restore(s)
+        if "global_full" in st:   # async-engine state (absent in old saves)
+            self._global_full = st["global_full"]
+            self._global_head = st["global_head"]
+            self.loss_events = [(float(t), int(u), int(r), float(ls))
+                                for t, u, r, ls in np.asarray(st["loss_events"])]
         return int(st["round"])
 
     # ------------------------------------------------------------------ memory

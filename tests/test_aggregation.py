@@ -83,6 +83,100 @@ def test_heterogeneous_aggregation_round(setup):
                      re, expect)
 
 
+def test_aggregation_round_weight_conserving_property(setup):
+    """Property (random cuts/sizes): assemble -> aggregate -> re-split loses
+    nothing — re-assembling every client's split reproduces the aggregate
+    exactly, and the aggregate equals the explicit dataset-weighted mean."""
+    cfg, model = setup
+    rng = np.random.default_rng(0)
+    n_layers = cfg.n_layers
+    for trial in range(5):
+        n = int(rng.integers(2, 6))
+        cuts = rng.integers(1, n_layers, size=n).tolist()
+        sizes = rng.integers(1, 50, size=n).tolist()
+        fulls = [_rand_lora(model, 10 * trial + i) for i in range(n)]
+        clients, servers = zip(*[lora_lib.split_lora(f, c)
+                                 for f, c in zip(fulls, cuts)])
+        new_c, new_s, agg_full = agg.aggregation_round(
+            list(clients), list(servers), cuts, sizes)
+        ws = np.asarray(sizes, np.float64)
+        ws /= ws.sum()
+        expect = jax.tree.map(
+            lambda *ls: sum(w * l for w, l in zip(ws, ls)), *fulls)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=1e-5),
+                     agg_full, expect)
+        for c, s, cut in zip(new_c, new_s, cuts):
+            re = lora_lib.assemble_full(c, s, cut)
+            jax.tree.map(
+                lambda a, b: np.testing.assert_allclose(a, b, atol=1e-6),
+                re, agg_full)
+
+
+def test_aggregation_round_idempotent(setup):
+    """Identical inputs are a fixed point: aggregating U copies of one
+    adapter set returns it, and re-aggregating an aggregation's own output
+    (same cuts/sizes) changes nothing."""
+    cfg, model = setup
+    cuts = [1, 2, 3]
+    sizes = [5, 7, 11]
+    x = _rand_lora(model, 42)
+    clients, servers = zip(*[lora_lib.split_lora(x, c) for c in cuts])
+    new_c, new_s, agg_full = agg.aggregation_round(
+        list(clients), list(servers), cuts, sizes)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=1e-6),
+                 agg_full, x)
+    c2, s2, agg2 = agg.aggregation_round(new_c, list(new_s), cuts, sizes)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=1e-6),
+                 agg2, agg_full)
+    for a, b in zip(c2, new_c):
+        jax.tree.map(lambda x_, y_: np.testing.assert_allclose(x_, y_,
+                                                               atol=1e-6),
+                     a, b)
+
+
+def test_staleness_weights_normalized():
+    sizes = [10, 20, 30]
+    # alpha = 0: pure Eq. 6-8 dataset weights
+    w0 = agg.staleness_weights(sizes, [0, 3, 7], alpha=0.0)
+    np.testing.assert_allclose(w0, np.asarray(sizes) / 60.0)
+    # any alpha: normalized, non-negative, staler => relatively lighter
+    w = agg.staleness_weights([10, 10, 10], [0, 1, 4], alpha=0.5)
+    assert sum(w) == pytest.approx(1.0)
+    assert w[0] > w[1] > w[2] > 0
+    np.testing.assert_allclose(
+        w[1] / w[0], agg.staleness_discount(1, 0.5), rtol=1e-12)
+    with pytest.raises(ValueError):
+        agg.staleness_weights(sizes, [0, 1], alpha=0.5)
+    with pytest.raises(ValueError):
+        agg.staleness_discount(-1, 0.5)
+    with pytest.raises(ValueError):
+        agg.staleness_discount(1, -0.5)
+
+
+def test_merge_into_global_anchoring(setup):
+    """Full-cohort zero-staleness merge with zero anchor mass degenerates to
+    exact Eq. 6-8 FedAvg; a zero-weight buffer pull leaves the global put."""
+    cfg, model = setup
+    g = _rand_lora(model, 77)
+    loras = [_rand_lora(model, s) for s in range(3)]
+    sizes = [3, 4, 5]
+    merged = agg.merge_into_global(g, loras, [float(s) for s in sizes],
+                                   anchor_weight=0.0)
+    expect = agg.aggregate_full(loras, sizes)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=1e-6),
+                 merged, expect)
+    # heavy anchor pulls the merge toward the standing global
+    heavy = agg.merge_into_global(g, loras, [1e-9] * 3, anchor_weight=1.0)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=1e-5),
+                 heavy, g)
+    with pytest.raises(ValueError):
+        agg.merge_into_global(g, loras, [1.0] * 3, anchor_weight=-1.0)
+    with pytest.raises(ValueError):
+        agg.merge_into_global(g, [], [], anchor_weight=1.0)
+    with pytest.raises(ValueError):
+        agg.normalize_weights([0.0, 0.0])
+
+
 def test_aggregation_a_b_separate(setup):
     """A and B are averaged separately (Eqs. 6-7), i.e. the aggregate of
     products != product of aggregates in general — verify we do the former."""

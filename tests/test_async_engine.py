@@ -1,0 +1,405 @@
+"""Continuous-time multi-round federation clock (fed/engine.py
+FederationClock): sync-barrier degeneracy, buffered/staleness commit
+semantics, inflight credit gating, the simulator's async driver, the
+exhaustive FedRunConfig validation matrix, and wall-clock metrics."""
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.core.cost_model import StepTimes
+from repro.data import make_emotion_dataset
+from repro.fed import (ClockConfig, FedRunConfig, FederationClock,
+                       PAPER_CLIENTS, RoundPlan, Simulator, jobs_from_times,
+                       validate_run_config)
+from repro.fed import metrics as M
+
+
+def _times(rng, u):
+    out = []
+    for _ in range(u):
+        t_f = rng.uniform(0.05, 0.4)
+        out.append(StepTimes(t_f=t_f, t_fc=rng.uniform(0.02, 0.1),
+                             t_s=rng.uniform(0.05, 0.8),
+                             t_bc=rng.uniform(0.02, 0.1), t_b=2 * t_f))
+    return out
+
+
+def _clock(times, rounds, **kw):
+    cfg = ClockConfig(**kw)
+    return FederationClock(len(times), rounds, cfg,
+                           times_fn=lambda u, r: times[u])
+
+
+# -- clock config validation --------------------------------------------------
+
+def test_clock_config_validation():
+    with pytest.raises(KeyError):
+        ClockConfig(agg_policy="bogus")
+    with pytest.raises(KeyError):
+        ClockConfig(agg_policy="buffered", policy="nope")
+    with pytest.raises(ValueError):
+        ClockConfig(agg_policy="sync", max_inflight_rounds=2)
+    with pytest.raises(ValueError):
+        ClockConfig(agg_policy="buffered", deadline=1.0)
+    with pytest.raises(ValueError):
+        ClockConfig(max_inflight_rounds=0)
+    with pytest.raises(ValueError):
+        ClockConfig(buffer_k=0)
+    times = _times(np.random.default_rng(0), 3)
+    with pytest.raises(ValueError):   # async needs times_fn
+        FederationClock(3, 2, ClockConfig(agg_policy="buffered"))
+    with pytest.raises(ValueError):   # buffer_k > fleet
+        _clock(times, 2, agg_policy="buffered", buffer_k=5)
+
+
+# -- sync degeneracy ----------------------------------------------------------
+
+def test_async_barrier_degenerates_to_sync():
+    """buffered with buffer_k=U and max_inflight=1 IS the barrier round:
+    commit times must equal the sync clock's cumulative round makespans."""
+    rng = np.random.default_rng(1)
+    for trial in range(5):
+        times = _times(rng, int(rng.integers(3, 7)))
+        n, rounds, overhead = len(times), 3, 0.25
+
+        sync = _clock(times, rounds, agg_policy="sync", agg_interval=1)
+        sync.run(plan_fn=lambda rnd: RoundPlan(
+                     jobs=jobs_from_times(times, range(n)), policy="fifo"),
+                 on_commit=lambda ev: overhead)
+
+        asy = _clock(times, rounds, agg_policy="buffered", policy="fifo",
+                     buffer_k=n, max_inflight_rounds=1)
+        res = asy.run(on_commit=lambda ev: overhead)
+
+        assert len(sync.commits) == len(asy.commits) == rounds
+        for a, b in zip(sync.commits, asy.commits):
+            assert b.time == pytest.approx(a.time, abs=1e-12)
+            assert b.contributors == tuple(range(n))
+            assert all(s == 0 for s in b.staleness)
+            assert not b.forced
+        assert res.rounds_completed == {u: rounds for u in range(n)}
+
+
+# -- buffered / staleness semantics ------------------------------------------
+
+def test_buffered_commit_cadence():
+    """Non-forced commits fire at exactly buffer_k distinct contributors;
+    commit times are monotone; per-slot service never overlaps."""
+    rng = np.random.default_rng(2)
+    times = _times(rng, 5)
+    clk = _clock(times, 3, agg_policy="buffered", policy="fifo", buffer_k=2,
+                 max_inflight_rounds=2)
+    res = clk.run()
+    assert res.rounds_completed == {u: 3 for u in range(5)}
+    assert [c.time for c in res.commits] == sorted(c.time for c in res.commits)
+    for c in res.commits:
+        assert all(s >= 0 for s in c.staleness)
+        if not c.forced:
+            assert len(c.contributors) == 2
+    per_slot = {}
+    for ev in res.serves:
+        per_slot.setdefault(ev.slot, []).append(ev)
+    for evs in per_slot.values():
+        evs.sort(key=lambda e: e.start)
+        for a, b in zip(evs, evs[1:]):
+            assert a.end <= b.start + 1e-12
+    # every client-round is served exactly once
+    seen = sorted((u, r) for ev in res.serves
+                  for u, r in zip(ev.uids, ev.rounds))
+    assert seen == [(u, r) for u in range(5) for r in range(3)]
+
+
+def test_inflight_credit_gates_reentry():
+    """max_inflight_rounds=1 pins the fast client to the commit cadence;
+    raising it lets the client run ahead of the server's aggregation."""
+    fast = StepTimes(t_f=1.0, t_fc=0.0, t_s=0.5, t_bc=0.0, t_b=1.0)
+    slow = StepTimes(t_f=20.0, t_fc=0.0, t_s=0.5, t_bc=0.0, t_b=1.0)
+    times = [fast, slow]
+
+    gated = _clock(times, 2, agg_policy="buffered", policy="fifo",
+                   buffer_k=2, max_inflight_rounds=1).run()
+    # client 0's round-1 upload cannot enter service before the first commit
+    first_commit = gated.commits[0].time
+    r1 = [ev for ev in gated.serves if (0, 1) in zip(ev.uids, ev.rounds)]
+    assert r1 and r1[0].start >= first_commit - 1e-12
+
+    free = _clock(times, 2, agg_policy="buffered", policy="fifo",
+                  buffer_k=2, max_inflight_rounds=2).run()
+    r1f = [ev for ev in free.serves
+           if any(u == 0 and r == 1 for u, r in zip(ev.uids, ev.rounds))]
+    assert r1f and r1f[0].start < free.commits[0].time
+    # unbarriered federation finishes no later than the gated one
+    assert free.makespan <= gated.makespan + 1e-9
+
+
+def test_forced_tail_flush_releases_stragglers():
+    """When the remaining runners can no longer fill the buffer, the clock
+    force-commits so blocked clients regain credit and everyone finishes."""
+    rng = np.random.default_rng(3)
+    times = _times(rng, 3)
+    clk = _clock(times, 1, agg_policy="buffered", policy="fifo", buffer_k=2,
+                 max_inflight_rounds=1)
+    res = clk.run()
+    assert res.rounds_completed == {0: 1, 1: 1, 2: 1}
+    assert res.commits[-1].forced
+    assert len(res.commits[-1].contributors) == 1
+
+
+def test_staleness_counts_commits_since_refresh():
+    """With buffer_k=1 every upload commits; a contributor's staleness is
+    exactly the number of commits since its own last one."""
+    rng = np.random.default_rng(4)
+    times = _times(rng, 4)
+    res = _clock(times, 3, agg_policy="staleness", policy="fifo", buffer_k=1,
+                 max_inflight_rounds=1).run()
+    assert len(res.commits) == 4 * 3        # one commit per client round
+    last_commit_of = {}
+    for i, c in enumerate(res.commits):
+        (u,) = c.contributors
+        expect = i - last_commit_of[u] - 1 if u in last_commit_of else i
+        assert c.staleness == (expect,)
+        last_commit_of[u] = i
+
+
+# -- FedRunConfig validation matrix ------------------------------------------
+
+BAD_CONFIGS = [
+    (KeyError, dict(scheme="bogus")),
+    (KeyError, dict(scheduler="bogus")),
+    (KeyError, dict(engine="bogus")),
+    (KeyError, dict(agg_policy="bogus")),
+    (ValueError, dict(rounds=0)),
+    (ValueError, dict(agg_interval=0)),
+    (ValueError, dict(eval_every=0)),
+    (ValueError, dict(batch_size=0)),
+    (ValueError, dict(lr=0.0)),
+    (ValueError, dict(alpha=0.0)),
+    (ValueError, dict(participation=0.0)),
+    (ValueError, dict(participation=1.5)),
+    (ValueError, dict(straggler_prob=1.5)),
+    (ValueError, dict(straggler_slowdown=0.5)),
+    (ValueError, dict(cohort_chunk=0)),
+    (ValueError, dict(server_slots=0)),
+    (ValueError, dict(chunk_efficiency=0.0)),
+    (ValueError, dict(chunk_efficiency=1.5)),
+    (ValueError, dict(engine="event", round_deadline=0.0)),
+    (ValueError, dict(max_inflight_rounds=0)),
+    (ValueError, dict(staleness_alpha=-1.0)),
+    (ValueError, dict(engine="event", agg_policy="buffered", agg_buffer_k=0)),
+    (ValueError, dict(engine="event", agg_policy="buffered", agg_buffer_k=99)),
+    # event-only knobs under the closed-form engine
+    (ValueError, dict(engine="analytic", chunk_efficiency=0.8)),
+    (ValueError, dict(engine="analytic", server_slots=2)),
+    (ValueError, dict(engine="analytic", round_deadline=1.0)),
+    # async federation needs the continuous-time clock
+    (ValueError, dict(engine="analytic", agg_policy="buffered")),
+    (ValueError, dict(engine="analytic", max_inflight_rounds=2)),
+    (ValueError, dict(engine="analytic", agg_buffer_k=2)),
+    # the DES models the shared-server queue of scheme="ours" only
+    (ValueError, dict(engine="event", scheme="sfl")),
+    (ValueError, dict(engine="event", scheme="sl")),
+    # sync is a barrier; its knob set excludes the async ones
+    (ValueError, dict(engine="event", max_inflight_rounds=2)),
+    (ValueError, dict(engine="event", agg_buffer_k=3)),
+    (ValueError, dict(engine="event", staleness_alpha=0.5)),
+    # async cross-knob rejections (agg_interval=1 keeps them async-valid
+    # so each case isolates the knob under test)
+    (ValueError, dict(engine="event", agg_policy="buffered",
+                      agg_interval=1, participation=0.5)),
+    (ValueError, dict(engine="event", agg_policy="buffered",
+                      agg_interval=1, round_deadline=1.0)),
+    (ValueError, dict(engine="event", agg_policy="buffered",
+                      agg_interval=1, scheduler="optimal")),
+    (ValueError, dict(engine="event", agg_policy="staleness",
+                      agg_interval=1, target_accuracy=0.9)),
+    # staleness_alpha is owned by the staleness policy; agg_interval is
+    # owned by sync — neither may be silently ignored
+    (ValueError, dict(engine="event", agg_policy="buffered",
+                      agg_interval=1, staleness_alpha=0.5)),
+    (ValueError, dict(engine="event", agg_policy="buffered",
+                      agg_interval=5)),
+]
+
+
+@pytest.mark.parametrize("exc,kw", BAD_CONFIGS,
+                         ids=[f"{i}-{sorted(kw)[0]}"
+                              for i, (_, kw) in enumerate(BAD_CONFIGS)])
+def test_validation_matrix_rejects(exc, kw):
+    with pytest.raises(exc):
+        validate_run_config(FedRunConfig(**kw), n_clients=6)
+
+
+def test_validation_matrix_accepts_valid_combos():
+    for kw in (dict(),
+               dict(engine="event"),
+               dict(engine="event", scheduler="optimal"),
+               dict(engine="event", server_slots=2, round_deadline=5.0),
+               dict(engine="event", agg_policy="buffered", agg_interval=1,
+                    max_inflight_rounds=2, agg_buffer_k=3),
+               dict(engine="event", agg_policy="staleness", agg_interval=1,
+                    max_inflight_rounds=4, staleness_alpha=1.0),
+               dict(scheme="sfl"), dict(scheme="sl"),
+               dict(participation=0.5, straggler_prob=0.3)):
+        validate_run_config(FedRunConfig(**kw), n_clients=6)
+
+
+# -- wall-clock metrics -------------------------------------------------------
+
+def test_running_mean_and_step_interp():
+    v = np.array([4.0, 2.0, 6.0, 0.0])
+    np.testing.assert_allclose(M.running_mean(v, 2), [4.0, 3.0, 4.0, 3.0])
+    np.testing.assert_allclose(M.running_mean(v, 1), v)
+    t = np.array([1.0, 2.0, 4.0])
+    vv = np.array([10.0, 20.0, 40.0])
+    out = M.step_interp(t, vv, np.array([0.5, 1.0, 3.0, 9.0]))
+    assert np.isnan(out[0])
+    np.testing.assert_allclose(out[1:], [10.0, 20.0, 40.0])
+
+
+def test_time_to_target_and_align():
+    t = np.array([1.0, 2.0, 3.0, 4.0])
+    v = np.array([5.0, 4.0, 2.0, 1.0])
+    assert M.time_to_target(t, v, 2.0) == 3.0
+    assert M.time_to_target(t, v, 6.0, mode="ge") is None
+    assert M.time_to_target(t, -v, -2.0, mode="ge") == 3.0
+    grid, aligned = M.align_curves({"a": (t, v), "b": (t + 1, v)}, n_points=5)
+    assert grid[0] == 1.0 and grid[-1] == 5.0
+    assert set(aligned) == {"a", "b"}
+    tt, vv = M.wallclock_curve([(2.0, 1, 0, 7.0), (1.0, 0, 0, 9.0)])
+    np.testing.assert_allclose(tt, [1.0, 2.0])
+    np.testing.assert_allclose(vv, [9.0, 7.0])
+
+
+# -- simulator integration ----------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sim_setup():
+    cfg = tiny("bert-base", n_layers=2, d_model=256)
+    cfg = cfg.with_(vocab_size=4096, max_position=32)
+    train = make_emotion_dataset(400, seq_len=16, vocab_size=4096, seed=0)
+    test = make_emotion_dataset(100, seq_len=16, vocab_size=4096, seed=1)
+    return cfg, train, test
+
+
+def _run_sim(sim_setup, rounds=3, **kw):
+    cfg, train, test = sim_setup
+    rc = FedRunConfig(scheme="ours", rounds=rounds, agg_interval=1,
+                      batch_size=4, seq_len=16, lr=3e-3, eval_every=100, **kw)
+    sim = Simulator(cfg, PAPER_CLIENTS[:4], [1, 1, 1, 1], train, test, rc)
+    sim.run_training()
+    return sim
+
+
+def test_sync_fixed_order_regression(sim_setup):
+    """Acceptance: sync + max_inflight_rounds=1 + fixed order through the
+    FederationClock reproduces the closed-form (= PR 1 event engine)
+    per-round makespans and losses."""
+    a = _run_sim(sim_setup, scheduler="optimal", engine="analytic")
+    b = _run_sim(sim_setup, scheduler="optimal", engine="event",
+                 agg_policy="sync", max_inflight_rounds=1)
+    ta = np.array([r.sim_time_s for r in a.history])
+    tb = np.array([r.sim_time_s for r in b.history])
+    np.testing.assert_allclose(np.diff(np.insert(tb, 0, 0.0)),
+                               np.diff(np.insert(ta, 0, 0.0)), rtol=1e-9)
+    np.testing.assert_allclose([r.mean_loss for r in b.history],
+                               [r.mean_loss for r in a.history], atol=1e-5)
+
+
+def test_async_barrier_matches_sync_simulator(sim_setup):
+    """buffered with buffer_k=U and max_inflight=1 run through the REAL
+    math must reproduce the sync barrier's commit times and losses."""
+    a = _run_sim(sim_setup, scheduler="ours", engine="event")
+    b = _run_sim(sim_setup, scheduler="ours", engine="event",
+                 agg_policy="buffered", agg_buffer_k=4,
+                 max_inflight_rounds=1)
+    assert len(a.history) == len(b.history)
+    np.testing.assert_allclose([r.sim_time_s for r in b.history],
+                               [r.sim_time_s for r in a.history], rtol=1e-9)
+    np.testing.assert_allclose([r.mean_loss for r in b.history],
+                               [r.mean_loss for r in a.history], atol=1e-4)
+
+
+def test_async_staleness_end_to_end(sim_setup):
+    sim = _run_sim(sim_setup, scheduler="ours", engine="event",
+                   agg_policy="staleness", max_inflight_rounds=2,
+                   staleness_alpha=0.5)
+    clk = sim._clock
+    assert clk is not None and clk.commits and clk.serves
+    assert sim.sim_clock > 0
+    # every client finished all local rounds
+    done = {u: 0 for u in range(4)}
+    for ev in clk.serves:
+        for u in ev.uids:
+            done[u] += 1
+    assert done == {u: 3 for u in range(4)}
+    # loss trace is wall-clock ordered and finite
+    t, v = M.wallclock_curve(sim.loss_events)
+    assert len(t) == 12 and np.all(np.isfinite(v))
+    assert np.all(np.diff(t) >= 0)
+    acc, f1 = sim.evaluate()
+    assert 0.0 <= acc <= 1.0 and 0.0 <= f1 <= 1.0
+    # run_round stepping is analytic-only now
+    with pytest.raises(RuntimeError):
+        sim.run_round(0)
+
+
+def test_inflight_round_uses_pulled_state_and_discards_on_race(sim_setup):
+    """Causal consistency: a local round executes on the model state the
+    client pulled at round START; if a commit refreshes the client while
+    that round is still in flight, the stale local update is discarded.
+
+    Deterministic timeline (buffer_k=2, max_inflight=2):
+      A: t_f=1 t_fc=6  -> r0 done t=10, r1 starts t=10, r1 served t=17
+      B: t_f=11 t_fc=1 -> r0 done t=15 => commit {A(r0), B(r0)} at t=15
+    The commit lands inside A's in-flight r1 (10 < 15 < 17) => (0, 1) is
+    discarded; nothing else is."""
+    cfg, train, test = sim_setup
+    rc = FedRunConfig(scheme="ours", scheduler="fifo", rounds=2,
+                      agg_interval=1, batch_size=4, seq_len=16, lr=3e-3,
+                      eval_every=100, engine="event", agg_policy="buffered",
+                      agg_buffer_k=2, max_inflight_rounds=2)
+    sim = Simulator(cfg, PAPER_CLIENTS[:2], [1, 1], train, test, rc)
+    sim.times = [StepTimes(t_f=1.0, t_fc=6.0, t_s=1.0, t_bc=1.0, t_b=1.0),
+                 StepTimes(t_f=11.0, t_fc=1.0, t_s=1.0, t_bc=1.0, t_b=1.0)]
+    sim.run_training()
+    assert sim.discarded_updates == [(0, 1)]
+    assert sim._clock.commits[0].time == pytest.approx(15.0)
+    # with max_inflight=1 a commit can never intervene mid-round
+    sim1 = Simulator(cfg, PAPER_CLIENTS[:2], [1, 1], train, test,
+                     FedRunConfig(scheme="ours", scheduler="fifo", rounds=2,
+                                  agg_interval=1, batch_size=4, seq_len=16,
+                                  lr=3e-3, eval_every=100, engine="event",
+                                  agg_policy="buffered", agg_buffer_k=2,
+                                  max_inflight_rounds=1))
+    sim1.run_training()
+    assert sim1.discarded_updates == []
+
+
+def test_async_state_dict_round_trips_global_model(sim_setup):
+    """Checkpointing an async run must carry the standing global model and
+    the wall-clock loss trace, or a resumed Simulator would evaluate the
+    untrained init adapters."""
+    import jax
+    sim = _run_sim(sim_setup, scheduler="fifo", engine="event",
+                   agg_policy="buffered", agg_buffer_k=2,
+                   max_inflight_rounds=2)
+    st = sim.state_dict()
+    cfg, train, test = sim_setup
+    fresh = Simulator(cfg, PAPER_CLIENTS[:4], [1, 1, 1, 1], train, test,
+                      sim.run)
+    fresh.load_state_dict(st)
+    for a, b in zip(jax.tree.leaves(fresh._global_full),
+                    jax.tree.leaves(sim._global_full)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    assert fresh.loss_events == sim.loss_events
+    np.testing.assert_allclose(fresh.evaluate()[0], sim.evaluate()[0])
+
+
+def test_async_buffered_inflight(sim_setup):
+    sim = _run_sim(sim_setup, scheduler="fifo", engine="event",
+                   agg_policy="buffered", agg_buffer_k=2,
+                   max_inflight_rounds=2)
+    assert all(np.isfinite(r.sim_time_s) for r in sim.history)
+    times = [r.sim_time_s for r in sim.history]
+    assert times == sorted(times)
+    assert sim._clock.version == len(sim._clock.commits)
