@@ -9,6 +9,7 @@ import numpy as np
 from repro.configs import REGISTRY, reduced
 from repro.data import make_emotion_dataset
 from repro.fed import FedRunConfig, PAPER_CLIENTS, Simulator
+from repro.fed import metrics as M
 
 ROUNDS = 24
 SCHEMES = (("ours", "ours"), ("sfl", "ours"), ("sl", "ours"),
@@ -39,10 +40,38 @@ def run(csv=False, rounds=ROUNDS, seed=0):
             print(f"{key:12s} t={sim.sim_clock:9.1f}s acc={acc:.4f} f1={f1:.4f}")
     if not csv:
         # trend checks mirrored from the paper's Fig. 2
-        t_at = {k: curves[k][-1][0] for k in curves}
         print("\nfinal accuracy-vs-time points:")
         for k, v in curves.items():
             print(f"  {k:12s} " + " ".join(f"({t:.0f}s,{a:.3f})" for t, a, _ in v))
+
+    # -- WALL-CLOCK accuracy curves (fed/metrics.align_curves) ---------------
+    # Round-indexed curves hide the schemes' very different round times; the
+    # paper's Fig. 2 x-axis is simulated seconds.  Step-interpolate every
+    # scheme's (t, accuracy) trace onto one shared wall-clock grid and read
+    # off (a) accuracy at common checkpoints and (b) time-to-target-accuracy.
+    acc_curves = {k: (np.asarray([t for t, _, _ in v], np.float64),
+                      np.asarray([a for _, a, _ in v], np.float64))
+                  for k, v in curves.items() if v}
+    grid, aligned = M.align_curves(acc_curves, n_points=9)
+    if not csv and len(grid):
+        print("\nwall-clock-aligned accuracy (shared grid):")
+        hdr = "  ".join(f"{t:8.0f}s" for t in grid)
+        print(f"  {'scheme':12s} {hdr}")
+        for k, vals in aligned.items():
+            row = "  ".join("     ---" if np.isnan(x) else f"{x:8.3f}"
+                            for x in vals)
+            print(f"  {k:12s} {row}")
+    # shared target: the worst scheme's final accuracy, so everyone hits it
+    finals = {k: float(v[1][-1]) for k, v in acc_curves.items()}
+    target = min(finals.values())
+    for k, (t, a) in acc_curves.items():
+        hit = M.time_to_target(t, a, target, mode="ge")
+        if not csv:
+            print(f"  {k:12s} t_to_acc>={target:.3f}: "
+                  f"{'n/a' if hit is None else f'{hit:8.1f}s'}")
+        out.append((f"fig2_tta_{k.replace('/', '_')}",
+                    0.0 if hit is None else hit * 1e6,
+                    f"target={target:.4f};final={finals[k]:.4f}"))
     return out
 
 

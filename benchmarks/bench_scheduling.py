@@ -13,11 +13,15 @@ import time
 import numpy as np
 
 from repro.configs import REGISTRY, reduced
-from repro.core.cost_model import StepTimes, client_step_times, makespan
+from repro.core.cost_model import (LinkProfile, StepTimes, client_step_times,
+                                   makespan)
 from repro.core.scheduling import (ONLINE_DISCIPLINES, alg2_priorities,
                                    resolve_order)
-from repro.fed.devices import LINK, PAPER_CLIENTS, PAPER_CUTS, SERVER
-from repro.fed.engine import jobs_from_times, simulate_round
+from repro.fed.devices import (LINK, PAPER_CLIENTS, PAPER_CUTS, SERVER,
+                               make_fleet, make_link_fleet)
+from repro.fed.engine import (ClockConfig, FederationClock, RoundPlan,
+                              jobs_from_times, simulate_round)
+from repro.net import NetworkPlane
 
 POLICIES = ("ours", "fifo", "wf", "optimal")
 
@@ -212,6 +216,110 @@ def async_vs_sync(n_clients=16, rounds=3, csv=False):
     return out
 
 
+def _ragged_fleet(n_clients, seed=0):
+    """Ragged n-client fleet + per-client Eq.10 terms (BERT-base, §V sizes)."""
+    cfg = REGISTRY["bert-base"]
+    devices = make_fleet(n_clients, seed=seed)
+    cuts = [PAPER_CUTS[i % len(PAPER_CUTS)] for i in range(n_clients)]
+    times = [client_step_times(cfg, c, d, SERVER, LINK, 16, 128)
+             for c, d in zip(cuts, devices)]
+    return cuts, times
+
+
+def server_autoscaling(n_clients=16, rounds=3, csv=False):
+    """ROADMAP item: server_slots sweep under the buffered async policy on a
+    ragged fleet (pure DES).  Reports the knee — the last slot count whose
+    extra executor still buys >= 5% makespan."""
+    _, times = _ragged_fleet(n_clients)
+    spans = {}
+    for slots in (1, 2, 4, 8):
+        ccfg = ClockConfig(policy="fifo", slots=slots, agg_policy="buffered",
+                           buffer_k=max(2, n_clients // 4),
+                           max_inflight_rounds=2)
+        res = FederationClock(n_clients, rounds, ccfg,
+                              times_fn=lambda u, r: times[u]).run()
+        spans[slots] = res.makespan
+    knee, prev = 1, spans[1]
+    for slots in (2, 4, 8):
+        if spans[slots] < prev * 0.95:
+            knee = slots
+        prev = spans[slots]
+    out = []
+    for slots, span in spans.items():
+        speedup = spans[1] / span
+        if not csv:
+            print(f"autoscale[slots={slots}] makespan {span:8.2f}s  "
+                  f"speedup vs 1 slot {speedup:5.2f}x"
+                  + ("   <-- knee" if slots == knee else ""))
+        out.append((f"autoscale_slots{slots}", span * 1e6,
+                    f"speedup={speedup:.3f};knee={knee}"))
+    return out
+
+
+def network_plane(n_clients=16, rounds=8, csv=False):
+    """Acceptance: on per-client FADING trace links, the bandwidth-aware
+    online discipline (bw: serve the longest predicted download+backward
+    tail first) vs the bandwidth-blind baselines (fifo, wf), over barrier
+    waves through the network plane (pure DES; every wave samples a
+    different fade phase on the global clock).  Plus a shared-medium run
+    where the fleet's transfers contend for one cell."""
+    cfg = REGISTRY["bert-base"]
+    devices = make_fleet(n_clients, seed=0)
+    cuts = [PAPER_CUTS[i % len(PAPER_CUTS)] for i in range(n_clients)]
+    links = make_link_fleet(n_clients, seed=1, model="trace")
+    # a multi-tenant edge server at 1/8 effective throughput: per-client
+    # service is then commensurate with the wireless terms, so the server
+    # queue actually forms and the DISPATCH ORDER matters (with the
+    # unloaded §V RTX the queue never builds and every discipline ties)
+    import dataclasses as _dc
+    server = _dc.replace(SERVER, utilization=SERVER.utilization / 8)
+    # Eq.10 nominal terms follow each client's OWN mean link rate
+    times = [client_step_times(cfg, c, d, server,
+                               LinkProfile(l.nominal_mbps), 16, 128)
+             for c, d, l in zip(cuts, devices, links)]
+    plane = NetworkPlane(links)
+    jobs = jobs_from_times(times, range(n_clients))
+    spans = {}
+    for pol in ("fifo", "wf", "bw"):
+        ccfg = ClockConfig(agg_policy="sync", agg_interval=1)
+        clk = FederationClock(n_clients, rounds, ccfg, network=plane)
+        clk.run(plan_fn=lambda rnd: RoundPlan(jobs=jobs, policy=pol))
+        spans[pol] = clk.now
+    gap_fifo = spans["fifo"] / spans["bw"] - 1
+    gap_wf = spans["wf"] / spans["bw"] - 1
+    out = []
+    for pol, span in spans.items():
+        if not csv:
+            print(f"netplane[{pol:4s}] fading-trace makespan {span:8.2f}s")
+        out.append((f"netplane_{pol}", span * 1e6, ""))
+    if not csv:
+        print(f"bandwidth-aware gap: vs fifo {gap_fifo:+.1%}, "
+              f"vs wf {gap_wf:+.1%}")
+    out.append(("netplane_bw_gap", 0.0,
+                f"vs_fifo={gap_fifo:.4f};vs_wf={gap_wf:.4f}"))
+
+    # shared medium: the same fleet contending for one uplink/downlink cell
+    # at a quarter of the aggregate nominal demand
+    cap = sum(l.nominal_mbps for l in links) / 4.0
+    sh_plane = NetworkPlane(links, shared=True, capacity_mbps=cap)
+    clk = FederationClock(n_clients, rounds,
+                          ClockConfig(agg_policy="sync", agg_interval=1),
+                          network=sh_plane)
+    clk.run(plan_fn=lambda rnd: RoundPlan(jobs=jobs, policy="fifo"))
+    slowdown = clk.now / spans["fifo"]
+    if not csv:
+        print(f"netplane[shared medium, C={cap:.0f} Mbps] makespan "
+              f"{clk.now:8.2f}s ({slowdown:.2f}x vs dedicated fifo)")
+    out.append(("netplane_shared_fifo", clk.now * 1e6,
+                f"capacity_mbps={cap:.1f};slowdown={slowdown:.3f}"))
+    return out
+
+
+def run_network(csv=False):
+    """Standalone network-plane bench (own BENCH_network.json artifact)."""
+    return network_plane(csv=csv)
+
+
 def run(csv=False):
     spans = paper_fleet_spans()
     red_fifo = 1 - spans["ours"] / spans["fifo"]
@@ -256,6 +364,12 @@ def run(csv=False):
     out.append(("server_batched_speedup", 0.0,
                 f"vs_scan={tp['scan']/tp['batched']:.3f};"
                 f"vs_sliced={tp['sliced']/tp['batched']:.3f}"))
+
+    # -- server autoscaling sweep (ROADMAP) ----------------------------------
+    out.extend(server_autoscaling(csv=csv))
+
+    # -- network plane: bandwidth-aware vs blind under fading links ----------
+    out.extend(network_plane(csv=csv))
 
     # -- continuous-time async vs sync federation ----------------------------
     out.extend(async_vs_sync(csv=csv))

@@ -73,6 +73,7 @@ def main() -> None:
     benches = [
         ("table1", bench_table1.run),
         ("scheduling", bench_scheduling.run),
+        ("network", bench_scheduling.run_network),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]

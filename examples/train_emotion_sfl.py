@@ -24,7 +24,7 @@ from repro.configs import REGISTRY, reduced
 from repro.core.partition import assign_cuts
 from repro.data import make_emotion_dataset
 from repro.fed import (AGG_POLICIES, FedRunConfig, PAPER_CLIENTS, PAPER_CUTS,
-                       Simulator, validate_run_config)
+                       Simulator, make_link_fleet, validate_run_config)
 
 
 def main():
@@ -57,6 +57,16 @@ def main():
     ap.add_argument("--staleness-alpha", type=float, default=None,
                     help="polynomial (1+s)^-alpha discount exponent "
                     "(staleness policy only; default 0.5)")
+    # -- network plane (repro/net; README "Network plane") --------------------
+    ap.add_argument("--link-model", choices=("constant", "trace", "gilbert"),
+                    default="constant",
+                    help="per-client link process (trace = deep-fade "
+                    "make_link_fleet traces; gilbert = seeded good/bad "
+                    "Markov fading; both need --engine event)")
+    ap.add_argument("--shared-medium", action="store_true",
+                    help="concurrent transfers split one cell per direction")
+    ap.add_argument("--medium-capacity-mbps", type=float, default=None,
+                    help="cell capacity (required with --shared-medium)")
     args = ap.parse_args()
     if args.agg_interval is None:
         args.agg_interval = 5 if args.agg_policy == "sync" else 1
@@ -93,6 +103,15 @@ def main():
 
     # validate EVERY schemes entry up front — an invalid late entry must not
     # abort the script after earlier entries already burned training time
+    # "trace" rides the deep-fade make_link_fleet traces via link_model=
+    # "custom" (FedRunConfig's "trace" takes explicit per-client traces)
+    links = None
+    link_model = args.link_model
+    if args.link_model == "trace":
+        link_model = "custom"
+        links = make_link_fleet(len(PAPER_CLIENTS), seed=args.seed,
+                                model="trace")
+
     runs = []
     for entry in args.schemes.split(","):
         scheme, _, sched = entry.partition("-")
@@ -105,7 +124,10 @@ def main():
                            engine=args.engine, agg_policy=args.agg_policy,
                            max_inflight_rounds=args.max_inflight_rounds,
                            agg_buffer_k=args.agg_buffer_k,
-                           staleness_alpha=args.staleness_alpha)
+                           staleness_alpha=args.staleness_alpha,
+                           link_model=link_model,
+                           shared_medium=args.shared_medium,
+                           medium_capacity_mbps=args.medium_capacity_mbps)
         try:   # surface the FedRunConfig validation matrix as argparse errors
             validate_run_config(run, len(PAPER_CLIENTS))
         except (KeyError, ValueError) as e:
@@ -113,7 +135,8 @@ def main():
         runs.append((entry, run))
 
     for entry, run in runs:
-        sim = Simulator(cfg, PAPER_CLIENTS, cuts, train, test, run)
+        sim = Simulator(cfg, PAPER_CLIENTS, cuts, train, test, run,
+                        links=links)
         sim.run_training(verbose=True)
         acc, f1 = sim.evaluate()
         mem = sim.server_memory_report()

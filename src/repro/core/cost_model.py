@@ -25,10 +25,25 @@ class DeviceProfile:
 
 @dataclasses.dataclass(frozen=True)
 class LinkProfile:
+    """Scalar NOMINAL link rate — what the closed-form Eq. 10 model plans
+    with.  Time-varying links live in ``repro.net`` (the network plane);
+    a LinkProfile is the degenerate constant case."""
     rate_mbps: float = 100.0   # paper §V: 100 Mbps up/down
 
     def transfer_s(self, num_bytes: float) -> float:
         return num_bytes * 8.0 / (self.rate_mbps * 1e6)
+
+
+#: wire bytes per element for the activation dtypes the configs use
+DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "float64": 8}
+
+
+def dtype_nbytes(dtype: str) -> int:
+    try:
+        return DTYPE_BYTES[dtype]
+    except KeyError:
+        raise KeyError(f"unknown activation dtype {dtype!r} "
+                       f"(known: {sorted(DTYPE_BYTES)})") from None
 
 
 # ---------------------------------------------------------------------------
@@ -69,12 +84,22 @@ BWD_FACTOR = 2.0   # backward ~ 2x forward (dgrad through frozen + LoRA wgrad)
 
 @dataclasses.dataclass(frozen=True)
 class StepTimes:
-    """All Eq. 10 terms for one client (seconds); T^w filled by the scheduler."""
+    """All Eq. 10 terms for one client (seconds); T^w filled by the scheduler.
+
+    ``t_fc``/``t_bc`` are the NOMINAL-rate transfer durations the analytic
+    closed form (``makespan``) and the offline schedulers plan with.
+    ``fc_bytes``/``bc_bytes`` are the payload sizes those durations were
+    derived from — the network plane (``repro.net``) integrates BYTES over
+    its time-varying rates, so the event engines treat the byte counts as
+    authoritative whenever a plane is attached and fall back to the nominal
+    seconds otherwise (raw jobs built without payload sizes)."""
     t_f: float     # client-side forward
-    t_fc: float    # activation upload
+    t_fc: float    # activation upload (nominal-rate seconds)
     t_s: float     # server fwd+bwd for this client's remaining layers
-    t_bc: float    # activation-gradient download
+    t_bc: float    # activation-gradient download (nominal-rate seconds)
     t_b: float     # client-side backward
+    fc_bytes: float = 0.0   # uplink payload (0 = unknown, use t_fc)
+    bc_bytes: float = 0.0   # downlink payload (0 = unknown, use t_bc)
 
     @property
     def ready(self) -> float:
@@ -85,14 +110,18 @@ class StepTimes:
 
 
 def activation_bytes(cfg: ModelConfig, batch: int, seq_len: int,
-                     dtype_bytes: int = 4) -> float:
+                     dtype_bytes: Optional[int] = None) -> float:
+    """Cut-activation payload; element width follows ``cfg.dtype`` unless
+    overridden (bf16 halves the wireless bytes vs the old fp32 constant)."""
+    if dtype_bytes is None:
+        dtype_bytes = dtype_nbytes(cfg.dtype)
     return float(batch) * seq_len * cfg.d_model * dtype_bytes
 
 
 def client_step_times(cfg: ModelConfig, cut: int, device: DeviceProfile,
                       server: DeviceProfile, link: LinkProfile,
                       batch: int, seq_len: int,
-                      dtype_bytes: int = 4) -> StepTimes:
+                      dtype_bytes: Optional[int] = None) -> StepTimes:
     """Eq. 10 terms for client u with N_c^u = cut layers."""
     tokens = float(batch) * seq_len
     lf = layer_fwd_flops_per_token(cfg, seq_len) + lora_flops_per_token_per_layer(cfg)
@@ -107,7 +136,8 @@ def client_step_times(cfg: ModelConfig, cut: int, device: DeviceProfile,
     t_b = BWD_FACTOR * t_f
     t_s = (1.0 + BWD_FACTOR) * s_flops / (server.tflops * 1e12 * server.utilization)
     return StepTimes(t_f=t_f, t_fc=link.transfer_s(act), t_s=t_s,
-                     t_bc=link.transfer_s(act), t_b=t_b)
+                     t_bc=link.transfer_s(act), t_b=t_b,
+                     fc_bytes=act, bc_bytes=act)
 
 
 def lora_upload_bytes(cfg: ModelConfig, cut: int, dtype_bytes: int = 4) -> float:

@@ -31,6 +31,18 @@ def schedule_workload_first(times: Sequence[StepTimes]) -> List[int]:
     return sorted(range(len(times)), key=lambda u: (-times[u].t_s, u))
 
 
+def schedule_bandwidth_aware(times: Sequence[StepTimes]) -> List[int]:
+    """Bandwidth-aware: largest gradient-download + client-backward tail
+    (T^bc + T^b) first.  Alg. 2 hides client BACKWARD under the server's
+    sequential work using compute ratios only; once per-client links vary,
+    the downlink is part of that same hideable tail — so order by the whole
+    tail.  Offline form uses the NOMINAL t_bc; the event engines re-predict
+    t_bc from the live network state at every dispatch (see
+    ``fed.engine``'s net-aware "bw" discipline)."""
+    return sorted(range(len(times)),
+                  key=lambda u: (-(times[u].t_bc + times[u].t_b), u))
+
+
 def schedule_optimal(times: Sequence[StepTimes], limit: int = 8) -> List[int]:
     """Exhaustive min-makespan (tests / small U only)."""
     n = len(times)
@@ -56,6 +68,7 @@ SCHEDULERS = {
     "ours": None,        # needs (n_layers, compute); see resolve_order
     "fifo": schedule_fifo,
     "wf": schedule_workload_first,
+    "bw": schedule_bandwidth_aware,
     "optimal": schedule_optimal,
 }
 
@@ -66,6 +79,7 @@ ONLINE_DISCIPLINES = {
     "ours": ("priority", True),
     "fifo": ("fifo", False),
     "wf": ("wf", False),
+    "bw": ("bw", False),
 }
 
 

@@ -1,15 +1,15 @@
 from repro.fed.devices import (LINK, PAPER_CLIENTS, PAPER_CUTS, SERVER,
-                               TPU_V5E, make_fleet)
+                               TPU_V5E, make_fleet, make_link_fleet)
 from repro.fed.engine import (AGG_POLICIES, ClockConfig, ClockResult,
                               CommitEvent, EngineResult, FederationClock,
                               Job, RoundPlan, ServeEvent, ServiceRecord,
                               jobs_from_times, simulate_round)
-from repro.fed.simulator import (FedRunConfig, RoundRecord, Simulator,
-                                 validate_run_config)
+from repro.fed.simulator import (LINK_MODELS, FedRunConfig, RoundRecord,
+                                 Simulator, validate_run_config)
 
 __all__ = ["AGG_POLICIES", "ClockConfig", "ClockResult", "CommitEvent",
            "EngineResult", "FedRunConfig", "FederationClock", "Job", "LINK",
-           "PAPER_CLIENTS", "PAPER_CUTS", "RoundPlan", "RoundRecord",
-           "SERVER", "ServeEvent", "ServiceRecord", "Simulator", "TPU_V5E",
-           "jobs_from_times", "make_fleet", "simulate_round",
-           "validate_run_config"]
+           "LINK_MODELS", "PAPER_CLIENTS", "PAPER_CUTS", "RoundPlan",
+           "RoundRecord", "SERVER", "ServeEvent", "ServiceRecord",
+           "Simulator", "TPU_V5E", "jobs_from_times", "make_fleet",
+           "make_link_fleet", "simulate_round", "validate_run_config"]

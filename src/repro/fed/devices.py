@@ -1,11 +1,14 @@
 """Device fleet from the paper's §V simulation setup."""
 from __future__ import annotations
 
+import math
 from typing import List
 
 import numpy as np
 
 from repro.core.cost_model import DeviceProfile, LinkProfile
+from repro.net import (ConstantLink, GilbertElliottLink, LinkModel,
+                       TraceLink)
 
 # six heterogeneous clients (name, TFLOPS, memory GB) — paper §V
 JETSON_NANO = DeviceProfile("jetson-nano", tflops=0.472, mem_gb=4.0)
@@ -48,3 +51,51 @@ def make_fleet(n: int, seed: int = 0, jitter: float = 0.25) -> List[DeviceProfil
                                    mem_gb=base.mem_gb,
                                    utilization=base.utilization))
     return fleet
+
+
+def make_link_fleet(n: int, seed: int = 0, *, model: str = "gilbert",
+                    base_mbps: float = LINK.rate_mbps,
+                    jitter: float = 0.3,
+                    dwell_s: float = 0.5,
+                    horizon_s: float = 120.0) -> List[LinkModel]:
+    """Heterogeneous per-client links for the network plane — the wireless
+    counterpart of ``make_fleet`` (same deterministic-jitter idea).
+
+    model="constant"  per-client fixed rates with a +/- ``jitter`` spread;
+    model="trace"     piecewise traces: a slow sinusoidal fade with
+                      per-client phase plus per-segment jitter, sampled
+                      every ``dwell_s`` over ``horizon_s`` (the last rate
+                      holds beyond the horizon);
+    model="gilbert"   seeded two-state fading channels whose good rate
+                      carries the jitter spread (bad = good / 10).
+
+    Feed the result to ``Simulator(links=..., run.link_model="custom")`` or
+    directly into a ``NetworkPlane``.
+    """
+    if n < 1:
+        raise ValueError("fleet size must be >= 1")
+    if not 0.0 <= jitter < 1.0:
+        raise ValueError("jitter must be in [0, 1)")
+    rng = np.random.default_rng(seed)
+    links: List[LinkModel] = []
+    for i in range(n):
+        rate = base_mbps * (1.0 + jitter * float(rng.uniform(-1.0, 1.0)))
+        if model == "constant":
+            links.append(ConstantLink(rate))
+        elif model == "trace":
+            phase = float(rng.uniform(0.0, 2.0 * math.pi))
+            period = float(rng.uniform(8.0, 20.0)) * dwell_s
+            ts = np.arange(0.0, horizon_s, dwell_s)
+            # deep fades: troughs reach ~1/8 of the client's peak rate
+            fade = 0.125 + 0.875 * (0.5 + 0.5 * np.sin(
+                2.0 * math.pi * ts / period + phase))
+            noise = 1.0 + 0.2 * rng.uniform(-1.0, 1.0, size=ts.size)
+            rates = np.maximum(rate * fade * noise, base_mbps * 0.02)
+            links.append(TraceLink(ts.tolist(), rates.tolist()))
+        elif model == "gilbert":
+            links.append(GilbertElliottLink(
+                rate, rate * 0.1, dwell_s=dwell_s,
+                seed=int(rng.integers(0, 2 ** 31))))
+        else:
+            raise KeyError(f"unknown link fleet model {model!r}")
+    return links

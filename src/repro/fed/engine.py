@@ -21,6 +21,15 @@ rounds), and a deadline may cut stragglers out mid-round.
 With ``slots=1``, ``cohort_chunk=1`` and a fixed ``order``, the engine
 reproduces ``cost_model.makespan`` exactly (tested) — the analytic model is
 the degenerate case of this clock.
+
+Transfers may be delegated to a **network plane** (``repro.net``): when a
+``NetworkPlane`` is attached, the uplink/downlink completions are computed
+by integrating each job's PAYLOAD BYTES over the per-client time-varying
+link rates (and, in shared-medium mode, over the contended cell shares)
+instead of adding the fixed nominal-rate ``t_fc``/``t_bc`` durations.  A
+constant-rate dedicated plane reproduces the plane-less timelines
+bit-for-bit (regression-tested) — the legacy arithmetic is the degenerate
+case of the plane.
 """
 from __future__ import annotations
 
@@ -30,6 +39,7 @@ import itertools
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cost_model import StepTimes, chunked_service_time
+from repro.net import NetworkPlane, shared_finish_times
 
 __all__ = ["AGG_POLICIES", "ClockConfig", "ClockResult", "CommitEvent",
            "EngineResult", "FederationClock", "Job", "RoundPlan",
@@ -41,16 +51,18 @@ class Job:
     """One client's Eq. 10 phase durations for this round."""
     uid: int
     t_f: float      # client forward
-    t_fc: float     # activation uplink
+    t_fc: float     # activation uplink (nominal-rate fallback seconds)
     t_s: float      # server fwd+bwd (this client's remaining layers)
-    t_bc: float     # activation-gradient downlink
+    t_bc: float     # activation-gradient downlink (nominal-rate fallback)
     t_b: float      # client backward
     arrival: float = 0.0   # round-relative start offset (async rounds)
     priority: float = 0.0  # policy="priority" key (e.g. Alg. 2's N_c/C)
+    fc_bytes: float = 0.0  # uplink payload for the network plane (0 = t_fc)
+    bc_bytes: float = 0.0  # downlink payload for the network plane (0 = t_bc)
 
     @property
     def ready(self) -> float:
-        """When the job enters the server queue."""
+        """When the job enters the server queue (nominal-rate links)."""
         return self.arrival + self.t_f + self.t_fc
 
 
@@ -90,7 +102,8 @@ def jobs_from_times(times: Sequence[StepTimes], uids: Sequence[int], *,
         out.append(Job(uid=u, t_f=st.t_f, t_fc=st.t_fc, t_s=st.t_s,
                        t_bc=st.t_bc, t_b=st.t_b,
                        arrival=arrivals[u] if arrivals is not None else 0.0,
-                       priority=priorities[u] if priorities is not None else 0.0))
+                       priority=priorities[u] if priorities is not None else 0.0,
+                       fc_bytes=st.fc_bytes, bc_bytes=st.bc_bytes))
     return out
 
 
@@ -113,21 +126,105 @@ def _key_priority(job: Job):
     return (-job.priority, job.uid)
 
 
+def _key_bw(job: Job):
+    """Bandwidth-aware: largest downlink + client-backward tail first.
+    This static key uses the NOMINAL t_bc; with a network plane attached
+    the engines re-predict the downlink from the live link state at every
+    dispatch instead (see ``_net_bw_key``)."""
+    return (-(job.t_bc + job.t_b), job.uid)
+
+
 DISCIPLINES: Dict[str, Callable[[Job], tuple]] = {
     "fifo": _key_fifo,
     "wf": _key_wf,
     "priority": _key_priority,
+    "bw": _key_bw,
 }
+
+
+def _net_bw_key(network: NetworkPlane, t: float, job: Job,
+                concurrent: int = 0):
+    """Live-network form of the "bw" discipline key at dispatch time ``t``
+    (GLOBAL clock): predicted downlink duration + client backward."""
+    if job.bc_bytes > 0:
+        dl = network.predict_downlink(job.uid, t, job.bc_bytes,
+                                      concurrent=concurrent) - t
+    else:
+        dl = job.t_bc
+    return (-(dl + job.t_b), job.uid)
+
+
+# -- network-plane transfer resolution ---------------------------------------
+# Round-relative engines hand the plane GLOBAL instants (t_origin + local);
+# a constant-rate plane skips the conversion entirely so the arithmetic —
+# and therefore every timeline float — is bit-identical to the plane-less
+# legacy path.
+
+def _uplink_ready(jobs: Sequence[Job], network: Optional[NetworkPlane],
+                  t_origin: float) -> Dict[int, float]:
+    """Round-relative uplink-completion instant per uid."""
+    ready: Dict[int, float] = {}
+    shared: List[Job] = []
+    for j in jobs:
+        if network is None or j.fc_bytes <= 0:
+            ready[j.uid] = j.ready
+        elif network.shared:
+            shared.append(j)
+        elif network.constant_rate:
+            ready[j.uid] = network.uplink_finish(
+                j.uid, j.arrival + j.t_f, j.fc_bytes)
+        else:
+            ready[j.uid] = network.uplink_finish(
+                j.uid, t_origin + (j.arrival + j.t_f), j.fc_bytes) - t_origin
+    if shared:
+        fins = shared_finish_times(
+            network.capacity_mbps, network.uplinks,
+            [(j.uid, t_origin + (j.arrival + j.t_f), j.fc_bytes)
+             for j in shared])
+        for j, f in zip(shared, fins):
+            ready[j.uid] = f - t_origin
+    return ready
+
+
+def _downlink_done(served: Sequence[Tuple[int, float]],
+                   by_uid: Dict[int, Job],
+                   network: Optional[NetworkPlane],
+                   t_origin: float) -> Dict[int, float]:
+    """Round-relative downlink-completion instant for ``(uid, server_end)``
+    pairs.  Downlink finishes never feed back into the round's dispatch
+    decisions, so even the shared-medium case resolves in one batch."""
+    out: Dict[int, float] = {}
+    shared: List[Tuple[int, float]] = []
+    for u, end in served:
+        j = by_uid[u]
+        if network is None or j.bc_bytes <= 0:
+            out[u] = end + j.t_bc
+        elif network.shared:
+            shared.append((u, end))
+        elif network.constant_rate:
+            out[u] = network.downlink_finish(u, end, j.bc_bytes)
+        else:
+            out[u] = network.downlink_finish(
+                u, t_origin + end, j.bc_bytes) - t_origin
+    if shared:
+        fins = shared_finish_times(
+            network.capacity_mbps, network.downlinks,
+            [(u, t_origin + end, by_uid[u].bc_bytes) for u, end in shared])
+        for (u, _end), f in zip(shared, fins):
+            out[u] = f - t_origin
+    return out
 
 
 def simulate_round(jobs: Sequence[Job], *, policy: str = "fifo",
                    order: Optional[Sequence[int]] = None, slots: int = 1,
                    cohort_chunk: int = 1, chunk_efficiency: float = 1.0,
-                   deadline: Optional[float] = None) -> EngineResult:
+                   deadline: Optional[float] = None,
+                   network: Optional[NetworkPlane] = None,
+                   t_origin: float = 0.0) -> EngineResult:
     """Run one round through the event clock.
 
-    policy           online discipline ("fifo" | "wf" | "priority") — ignored
-                     when ``order`` is given;
+    policy           online discipline ("fifo" | "wf" | "priority" | "bw") —
+                     ignored when ``order`` is given;
     order            fixed uid sequence (the analytic / brute-force-optimal
                      mode): slots serve exactly this order, waiting for each
                      job's activations like ``cost_model.makespan`` does;
@@ -135,7 +232,14 @@ def simulate_round(jobs: Sequence[Job], *, policy: str = "fifo",
     cohort_chunk     max clients dispatched together (batched server step);
     chunk_efficiency fraction of the summed sequential service time a k>1
                      chunk costs (1.0 = no batching win);
-    deadline         jobs not dispatched by this time are dropped mid-round.
+    deadline         jobs not dispatched by this time are dropped mid-round;
+    network          optional network plane: transfer completions integrate
+                     payload bytes over per-client (possibly time-varying,
+                     possibly shared-medium-contended) link rates instead of
+                     the jobs' fixed nominal durations;
+    t_origin         GLOBAL instant this round's t=0 corresponds to (the
+                     multi-round clock passes its current time so traced
+                     links fade on the global timeline).
     """
     if slots < 1 or cohort_chunk < 1:
         raise ValueError("slots and cohort_chunk must be >= 1")
@@ -145,8 +249,10 @@ def simulate_round(jobs: Sequence[Job], *, policy: str = "fifo",
         raise KeyError(f"unknown queue discipline {policy!r}")
 
     by_uid = {j.uid: j for j in jobs}
+    ready = _uplink_ready(jobs, network, t_origin)
     events: List[Tuple[float, str, int]] = []
     service: List[ServiceRecord] = []
+    served: List[Tuple[int, float]] = []   # (uid, server_end) dispatch order
     completion: Dict[int, float] = {}
     waits: Dict[int, float] = {}
     dropped: List[int] = []
@@ -155,8 +261,8 @@ def simulate_round(jobs: Sequence[Job], *, policy: str = "fifo",
     heap: List[Tuple[float, int, int]] = []
     for seq, j in enumerate(jobs):
         events.append((j.arrival + j.t_f, "fwd_done", j.uid))
-        events.append((j.ready, "uplink_done", j.uid))
-        heapq.heappush(heap, (j.ready, seq, j.uid))
+        events.append((ready[j.uid], "uplink_done", j.uid))
+        heapq.heappush(heap, (ready[j.uid], seq, j.uid))
 
     slot_free = [0.0] * slots
     queue: List[int] = []            # uids with activations at the server
@@ -167,16 +273,21 @@ def simulate_round(jobs: Sequence[Job], *, policy: str = "fifo",
             _, _, uid = heapq.heappop(heap)
             queue.append(uid)
 
+    def sort_queue(now: float):
+        if policy == "bw" and network is not None:
+            queue.sort(key=lambda u: _net_bw_key(network, t_origin + now,
+                                                 by_uid[u]))
+        else:
+            key = DISCIPLINES[policy]
+            queue.sort(key=lambda u: key(by_uid[u]))
+
     def finish(uids: Sequence[int], slot: int, start: float, end: float):
         service.append(ServiceRecord(slot, tuple(uids), start, end))
         events.append((start, "server_start", uids[0]))
         events.append((end, "server_done", uids[0]))
         for u in uids:
-            j = by_uid[u]
-            waits[u] = start - j.ready
-            events.append((end + j.t_bc, "downlink_done", u))
-            completion[u] = end + j.t_bc + j.t_b
-            events.append((completion[u], "client_done", u))
+            waits[u] = start - ready[u]
+            served.append((u, end))
 
     n_left = len(jobs)
     while n_left > 0:
@@ -188,7 +299,7 @@ def simulate_round(jobs: Sequence[Job], *, policy: str = "fifo",
             # fixed-order mode: take the next uids in sequence, wait for them
             take = pending[:cohort_chunk]
             pending[:cohort_chunk] = []
-            start = max(now, max(by_uid[u].ready for u in take))
+            start = max(now, max(ready[u] for u in take))
             if deadline is not None and start > deadline:
                 dropped.extend(take)
                 n_left -= len(take)
@@ -209,8 +320,7 @@ def simulate_round(jobs: Sequence[Job], *, policy: str = "fifo",
                     slot_free[s] = max(slot_free[s], nxt)
                 drain_arrivals(nxt)
                 continue
-            key = DISCIPLINES[policy]
-            queue.sort(key=lambda u: key(by_uid[u]))
+            sort_queue(now)
             take = queue[:cohort_chunk]
             queue[:cohort_chunk] = []
             start = now
@@ -224,6 +334,14 @@ def simulate_round(jobs: Sequence[Job], *, policy: str = "fifo",
         finish(take, slot, start, start + span)
         slot_free[slot] = start + span
         n_left -= len(take)
+
+    # downlinks resolve after dispatch (they never feed back into it);
+    # under a shared medium the whole batch contends in one cell
+    dl = _downlink_done(served, by_uid, network, t_origin)
+    for u, _end in served:
+        events.append((dl[u], "downlink_done", u))
+        completion[u] = dl[u] + by_uid[u].t_b
+        events.append((completion[u], "client_done", u))
 
     events.sort(key=lambda e: (e[0], e[1], e[2]))
     round_time = max(completion.values()) if completion else 0.0
@@ -345,20 +463,28 @@ class FederationClock:
 
     ``times_fn(uid, local_round) -> StepTimes`` supplies per-round Eq. 10
     phase durations (so stragglers can be re-rolled per client round);
-    ``priorities`` feeds the ``priority`` discipline (Alg. 2's N_c/C).
+    ``priorities`` feeds the ``priority`` discipline (Alg. 2's N_c/C);
+    ``network`` attaches a network plane — transfer completions then
+    integrate payload bytes over the per-client link-rate processes on the
+    clock's GLOBAL timeline (a traced link that fades at t=50s fades in
+    whatever round is in flight then).
     """
 
     def __init__(self, n_clients: int, rounds: int, cfg: ClockConfig, *,
                  times_fn: Optional[Callable[[int, int], StepTimes]] = None,
-                 priorities: Optional[Sequence[float]] = None):
+                 priorities: Optional[Sequence[float]] = None,
+                 network: Optional[NetworkPlane] = None):
         if n_clients < 1 or rounds < 1:
             raise ValueError("need at least one client and one round")
         if cfg.agg_policy != "sync" and times_fn is None:
             raise ValueError("async policies need times_fn(uid, round)")
         if cfg.agg_policy != "sync" and cfg.buffer_k > n_clients:
             raise ValueError("buffer_k cannot exceed the fleet size")
+        if network is not None and network.n_clients != n_clients:
+            raise ValueError("network plane must carry one link per client")
         self.n, self.rounds, self.cfg = n_clients, rounds, cfg
         self.times_fn, self.priorities = times_fn, priorities
+        self.network = network
         self.now = 0.0
         self.version = 0              # global model version (commit count)
         self.serves: List[ServeEvent] = []
@@ -405,12 +531,13 @@ class FederationClock:
         cfg = self.cfg
         for rnd in range(self.rounds):
             plan = plan_fn(rnd)
+            base = self.now
             res = simulate_round(plan.jobs, policy=plan.policy,
                                  order=plan.order, slots=cfg.slots,
                                  cohort_chunk=cfg.cohort_chunk,
                                  chunk_efficiency=cfg.chunk_efficiency,
-                                 deadline=cfg.deadline)
-            base = self.now
+                                 deadline=cfg.deadline,
+                                 network=self.network, t_origin=base)
             for rec in res.service:
                 ev = ServeEvent(uids=rec.uids, rounds=(rnd,) * len(rec.uids),
                                 slot=rec.slot, start=base + rec.start,
@@ -434,11 +561,23 @@ class FederationClock:
         cfg = self.cfg
         n, slots, chunk = self.n, cfg.slots, cfg.cohort_chunk
         key_of = DISCIPLINES[cfg.policy]
+        net = self.network
+        shared = net is not None and net.shared
+        up_cell = net.make_cell("up") if shared else None
+        down_cell = net.make_cell("down") if shared else None
         heap: List[tuple] = []          # (time, seq, kind, payload)
         seq = itertools.count()
 
         def push(t, kind, payload):
             heapq.heappush(heap, (t, next(seq), kind, payload))
+
+        def sched_cell(cell, kind):
+            """(Re)schedule the cell's next predicted completion.  The
+            version stamp invalidates predictions that an add/remove has
+            re-timed since they were pushed."""
+            nc = cell.next_completion()
+            if nc is not None:
+                push(nc, kind, cell.version)
 
         started = [0] * n               # local rounds entered
         finished = [0] * n              # local rounds fully completed
@@ -464,20 +603,38 @@ class FederationClock:
             st = self.times_fn(u, rnd)
             pri = self.priorities[u] if self.priorities is not None else 0.0
             job = Job(uid=u, t_f=st.t_f, t_fc=st.t_fc, t_s=st.t_s,
-                      t_bc=st.t_bc, t_b=st.t_b, arrival=t0, priority=pri)
+                      t_bc=st.t_bc, t_b=st.t_b, arrival=t0, priority=pri,
+                      fc_bytes=st.fc_bytes, bc_bytes=st.bc_bytes)
             jobs[(u, rnd)] = job
             if on_round_start is not None:
                 on_round_start(u, rnd, t0)
             self.trace.append((t0 + job.t_f, "fwd_done", u))
-            self.trace.append((job.ready, "uplink_done", u))
-            push(job.ready, "uplink", (u, rnd))
+            if net is not None and job.fc_bytes > 0:
+                if shared:
+                    # the uplink contends in the cell from fwd_done on;
+                    # its completion is a cell event, not a fixed offset
+                    push(t0 + job.t_f, "up_start", (u, rnd))
+                    return
+                ready = net.uplink_finish(u, t0 + job.t_f, job.fc_bytes)
+            else:
+                ready = job.ready
+            self.trace.append((ready, "uplink_done", u))
+            push(ready, "uplink", (u, rnd))
+
+        def sort_queue(t):
+            if cfg.policy == "bw" and net is not None:
+                conc = len(down_cell.active) if shared else 0
+                queue.sort(key=lambda e: _net_bw_key(net, t, jobs[e],
+                                                     concurrent=conc))
+            else:
+                queue.sort(key=lambda e: key_of(jobs[e]))
 
         def try_dispatch(t):
             while queue:
                 s = min(range(slots), key=lambda i: slot_free[i])
                 if slot_free[s] > t:
                     return
-                queue.sort(key=lambda e: key_of(jobs[e]))
+                sort_queue(t)
                 take = queue[:chunk]
                 del queue[:chunk]
                 span = chunked_service_time([jobs[e].t_s for e in take],
@@ -520,6 +677,20 @@ class FederationClock:
             if kind == "uplink":
                 queue.append(payload)
                 try_dispatch(t)
+            elif kind == "up_start":
+                u, rnd = payload
+                up_cell.add(t, payload, u, jobs[payload].fc_bytes)
+                sched_cell(up_cell, "up_net")
+            elif kind == "up_net":
+                if payload != up_cell.version:
+                    continue        # contention re-timed this prediction
+                done = up_cell.advance(t)
+                for tc, tid, uid in done:
+                    self.trace.append((tc, "uplink_done", uid))
+                    queue.append(tid)
+                if done:
+                    try_dispatch(t)
+                sched_cell(up_cell, "up_net")
             elif kind == "served":
                 take, s, t_start = payload
                 ev = ServeEvent(uids=tuple(u for u, _ in take),
@@ -531,10 +702,28 @@ class FederationClock:
                     on_serve(ev)
                 for u, rnd in take:
                     j = jobs[(u, rnd)]
-                    self.trace.append((t + j.t_bc, "downlink_done", u))
-                    self.trace.append((t + j.t_bc + j.t_b, "client_done", u))
-                    push(t + j.t_bc + j.t_b, "client_done", (u, rnd))
+                    if net is not None and j.bc_bytes > 0:
+                        if shared:
+                            down_cell.add(t, (u, rnd), u, j.bc_bytes)
+                            continue
+                        dl = net.downlink_finish(u, t, j.bc_bytes)
+                    else:
+                        dl = t + j.t_bc
+                    self.trace.append((dl, "downlink_done", u))
+                    self.trace.append((dl + j.t_b, "client_done", u))
+                    push(dl + j.t_b, "client_done", (u, rnd))
+                if shared and down_cell.active:
+                    sched_cell(down_cell, "down_net")
                 try_dispatch(t)
+            elif kind == "down_net":
+                if payload != down_cell.version:
+                    continue        # contention re-timed this prediction
+                for tc, tid, uid in down_cell.advance(t):
+                    j = jobs[tid]
+                    self.trace.append((tc, "downlink_done", uid))
+                    self.trace.append((tc + j.t_b, "client_done", uid))
+                    push(tc + j.t_b, "client_done", tid)
+                sched_cell(down_cell, "down_net")
             elif kind == "client_done":
                 u, rnd = payload
                 finished[u] += 1

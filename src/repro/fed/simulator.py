@@ -27,8 +27,10 @@ from repro.core import aggregation as agg_lib
 from repro.core import lora as lora_lib
 from repro.core import memory_model, splitfl
 from repro.core.cost_model import (DeviceProfile, LinkProfile, StepTimes,
-                                   client_step_times, lora_upload_bytes,
-                                   makespan)
+                                   client_step_times, dtype_nbytes,
+                                   lora_upload_bytes, makespan)
+from repro.net import (ConstantLink, GilbertElliottLink, LinkModel,
+                       NetworkPlane, TraceLink)
 from repro.core.scheduling import (ONLINE_DISCIPLINES, SCHEDULERS,
                                    alg2_priorities, resolve_online,
                                    resolve_order)
@@ -41,6 +43,14 @@ from repro.models import build_model
 from repro.optim import AdamW
 
 SFL_FRAGMENTATION = 1.04   # multi-model GPU contention overhead (paper §V-B)
+
+LINK_MODELS = ("constant", "trace", "gilbert", "custom")
+
+# Gilbert–Elliott defaults for link_model="gilbert": the bad state drops to
+# a tenth of the nominal rate; dwell/transition values give ~1/3 bad time
+# at the 100 Mbps / ~0.5 s-transfer scale of the paper's setup
+GE_BAD_FRACTION = 0.1
+GE_P_GB, GE_P_BG, GE_DWELL_S = 0.2, 0.4, 0.5
 
 
 @dataclasses.dataclass
@@ -86,6 +96,15 @@ class FedRunConfig:
     #                                      buffered, 1 for staleness)
     staleness_alpha: Optional[float] = None  # polynomial discount exponent
     #                                      (staleness policy only; default 0.5)
+    # -- network plane (repro/net; time-varying links need engine='event') ----
+    # "constant" is byte-exact parity with the legacy fixed-rate arithmetic;
+    # "trace" drives each client from a piecewise bandwidth trace
+    # (link_traces); "gilbert" gives each client a seeded two-state fading
+    # channel; "custom" takes LinkModels via Simulator(links=...).
+    link_model: str = "constant"         # constant | trace | gilbert | custom
+    link_traces: Optional[Sequence] = None  # per-client (breakpoints, rates)
+    shared_medium: bool = False          # concurrent transfers split a cell
+    medium_capacity_mbps: Optional[float] = None  # cell capacity per direction
 
 
 def validate_run_config(run: FedRunConfig, n_clients: Optional[int] = None) -> None:
@@ -104,6 +123,8 @@ def validate_run_config(run: FedRunConfig, n_clients: Optional[int] = None) -> N
         raise KeyError(f"unknown engine {run.engine!r}")
     if run.agg_policy not in AGG_POLICIES:
         raise KeyError(f"unknown aggregation policy {run.agg_policy!r}")
+    if run.link_model not in LINK_MODELS:
+        raise KeyError(f"unknown link model {run.link_model!r}")
     # ---- scalar ranges ----
     if run.rounds < 1 or run.agg_interval < 1 or run.eval_every < 1:
         raise ValueError("rounds, agg_interval and eval_every must be >= 1")
@@ -132,6 +153,24 @@ def validate_run_config(run: FedRunConfig, n_clients: Optional[int] = None) -> N
             raise ValueError("agg_buffer_k must be >= 1 when set")
         if n_clients is not None and run.agg_buffer_k > n_clients:
             raise ValueError("agg_buffer_k cannot exceed the fleet size")
+    # ---- network-plane knob ownership ----
+    if (run.link_model == "trace") != (run.link_traces is not None):
+        raise ValueError("link_traces and link_model='trace' go together: "
+                         "traces drive exactly that model")
+    if run.link_traces is not None and n_clients is not None \
+            and len(run.link_traces) != n_clients:
+        raise ValueError("need one (breakpoints, rates) trace per client")
+    if run.shared_medium:
+        if run.medium_capacity_mbps is None or run.medium_capacity_mbps <= 0:
+            raise ValueError("shared_medium needs medium_capacity_mbps > 0")
+    elif run.medium_capacity_mbps is not None:
+        raise ValueError("medium_capacity_mbps is only read with "
+                         "shared_medium=True")
+    if run.engine == "analytic" and (run.link_model != "constant"
+                                     or run.shared_medium):
+        raise ValueError("time-varying / contended links are integrated by "
+                         "the event engines; the closed form only knows the "
+                         "nominal scalar rate — set engine='event'")
     # ---- engine cross-knob matrix ----
     if run.engine == "analytic":
         if (run.chunk_efficiency != 1.0 or run.server_slots != 1
@@ -195,13 +234,17 @@ class Simulator:
     def __init__(self, cfg: ModelConfig, devices: Sequence[DeviceProfile],
                  cuts: Sequence[int], train: EmotionDataset,
                  test: EmotionDataset, run: FedRunConfig,
-                 link: LinkProfile = LINK, server: DeviceProfile = SERVER):
+                 link: LinkProfile = LINK, server: DeviceProfile = SERVER,
+                 links: Optional[Sequence[LinkModel]] = None):
         assert len(devices) == len(cuts)
         validate_run_config(run, len(devices))
         self.cfg, self.run = cfg, run
         self.devices, self.cuts = list(devices), [int(c) for c in cuts]
         self.link, self.server_dev = link, server
         self.u = len(devices)
+        # the network plane: per-client link models + optional shared medium
+        # (run.link_model="constant" is byte-exact legacy parity)
+        self.network = self._build_network(links)
         self.model = build_model(cfg)
         rng = jax.random.PRNGKey(run.seed)
         self.params = self.model.init_params(rng)
@@ -251,11 +294,14 @@ class Simulator:
             self.model, self.opt)
         self._last_event = None   # EngineResult of the last event-driven round
 
-        # analytic per-step Eq.10 terms (fixed per client)
+        # analytic per-step Eq.10 terms (fixed per client); wireless terms
+        # use each client's NOMINAL link rate — the event engines re-time
+        # the transfers through the network plane from the payload bytes
         self.times: List[StepTimes] = [
-            client_step_times(cfg, cut, dev, server, link,
+            client_step_times(cfg, cut, dev, server,
+                              LinkProfile(self.network.nominal_mbps(u)),
                               run.batch_size, run.seq_len)
-            for cut, dev in zip(self.cuts, self.devices)]
+            for u, (cut, dev) in enumerate(zip(self.cuts, self.devices))]
         self.history: List[RoundRecord] = []
         self.sim_clock = 0.0
         # beyond-paper transport/participation state
@@ -281,14 +327,43 @@ class Simulator:
         self._client_version = [0] * self.u
         self.discarded_updates: List[tuple] = []   # (uid, round)
 
+    # --------------------------------------------------------------- network
+    def _build_network(self, links: Optional[Sequence[LinkModel]]) -> NetworkPlane:
+        """Materialize the run's network plane from the link knobs (or the
+        caller-supplied LinkModels under link_model='custom')."""
+        run = self.run
+        if run.link_model == "custom":
+            if links is None:
+                raise ValueError("link_model='custom' needs Simulator("
+                                 "links=[LinkModel, ...])")
+            if len(links) != self.u:
+                raise ValueError("need one LinkModel per client")
+            ups = list(links)
+        elif links is not None:
+            raise ValueError("explicit links= require link_model='custom'")
+        elif run.link_model == "constant":
+            ups = [ConstantLink(self.link.rate_mbps) for _ in range(self.u)]
+        elif run.link_model == "trace":
+            ups = [TraceLink(bp, rates) for bp, rates in run.link_traces]
+        else:   # gilbert
+            base = self.link.rate_mbps
+            ups = [GilbertElliottLink(base, base * GE_BAD_FRACTION,
+                                      p_gb=GE_P_GB, p_bg=GE_P_BG,
+                                      dwell_s=GE_DWELL_S,
+                                      seed=run.seed * 7919 + u)
+                   for u in range(self.u)]
+        return NetworkPlane(ups, shared=run.shared_medium,
+                            capacity_mbps=run.medium_capacity_mbps)
+
     # ------------------------------------------------------------------ time
     def _transport_ratio(self) -> float:
         """int8+EF wireless shrink factor (cached; same every round)."""
         if self._quant_ratio is None:
             from repro.comm import transport_bytes
             shape = (self.run.batch_size, self.run.seq_len, self.cfg.d_model)
-            self._quant_ratio = (transport_bytes(shape, True)
-                                 / transport_bytes(shape, False))
+            nb = dtype_nbytes(self.cfg.dtype)
+            self._quant_ratio = (transport_bytes(shape, True, nb)
+                                 / transport_bytes(shape, False, nb))
         return self._quant_ratio
 
     def _adjusted_times(self) -> List[StepTimes]:
@@ -298,6 +373,7 @@ class Simulator:
         out = []
         for u, st in enumerate(self.times):
             t_f, t_b, t_fc, t_bc = st.t_f, st.t_b, st.t_fc, st.t_bc
+            fcb, bcb = st.fc_bytes, st.bc_bytes
             if run.straggler_prob > 0 and \
                     self._round_rng.random() < run.straggler_prob:
                 t_f *= run.straggler_slowdown
@@ -306,8 +382,11 @@ class Simulator:
                 ratio = self._transport_ratio()
                 t_fc *= ratio
                 t_bc *= ratio
+                fcb *= ratio    # the network plane integrates BYTES, so the
+                bcb *= ratio    # int8+EF shrink applies to the payload too
             out.append(dataclasses.replace(st, t_f=t_f, t_b=t_b,
-                                           t_fc=t_fc, t_bc=t_bc))
+                                           t_fc=t_fc, t_bc=t_bc,
+                                           fc_bytes=fcb, bc_bytes=bcb))
         return out
 
     def _async_times(self, u: int, rnd: int) -> StepTimes:
@@ -317,6 +396,7 @@ class Simulator:
         run = self.run
         st = self.times[u]
         t_f, t_b, t_fc, t_bc = st.t_f, st.t_b, st.t_fc, st.t_bc
+        fcb, bcb = st.fc_bytes, st.bc_bytes
         if run.straggler_prob > 0 and \
                 self._async_rng.random() < run.straggler_prob:
             t_f *= run.straggler_slowdown
@@ -325,7 +405,10 @@ class Simulator:
             ratio = self._transport_ratio()
             t_fc *= ratio
             t_bc *= ratio
-        return dataclasses.replace(st, t_f=t_f, t_b=t_b, t_fc=t_fc, t_bc=t_bc)
+            fcb *= ratio
+            bcb *= ratio
+        return dataclasses.replace(st, t_f=t_f, t_b=t_b, t_fc=t_fc, t_bc=t_bc,
+                                   fc_bytes=fcb, bc_bytes=bcb)
 
     def _service_plan(self):
         """Decide this round's server dispatch groups under the closed-form
@@ -552,7 +635,8 @@ class Simulator:
                            buffer_k=self._resolved_buffer_k(),
                            max_inflight_rounds=run.max_inflight_rounds)
         clock = FederationClock(self.u, run.rounds, ccfg,
-                                times_fn=self._async_times, priorities=pri)
+                                times_fn=self._async_times, priorities=pri,
+                                network=self.network)
         self._clock = clock
         self._wave_losses = []
         if run.agg_policy == "sync":

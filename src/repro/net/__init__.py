@@ -1,0 +1,6 @@
+from repro.net.links import (ConstantLink, GilbertElliottLink, LinkModel,
+                             TraceLink)
+from repro.net.plane import NetworkPlane, SharedCell, shared_finish_times
+
+__all__ = ["ConstantLink", "GilbertElliottLink", "LinkModel", "NetworkPlane",
+           "SharedCell", "TraceLink", "shared_finish_times"]

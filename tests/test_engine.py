@@ -267,4 +267,4 @@ def test_simulator_alg2_priorities_consistent():
     pri = alg2_priorities(PAPER_CUTS, tfl)
     offline = resolve_order("ours", None, PAPER_CUTS, tfl)
     assert offline == sorted(range(6), key=lambda u: (-pri[u], u))
-    assert set(ONLINE_DISCIPLINES) == {"ours", "fifo", "wf"}
+    assert set(ONLINE_DISCIPLINES) == {"ours", "fifo", "wf", "bw"}

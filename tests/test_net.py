@@ -1,0 +1,412 @@
+"""Network plane (repro/net): constant-link parity with the PR-2 clock,
+piecewise trace integration, Gilbert–Elliott determinism, shared-medium
+capacity conservation, and the simulator-level link knobs."""
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.core.cost_model import LinkProfile, StepTimes
+from repro.data import make_emotion_dataset
+from repro.fed import (ClockConfig, FedRunConfig, FederationClock,
+                       PAPER_CLIENTS, Simulator, jobs_from_times,
+                       make_link_fleet, simulate_round, validate_run_config)
+from repro.net import (ConstantLink, GilbertElliottLink, NetworkPlane,
+                       SharedCell, TraceLink, shared_finish_times)
+
+RATE = 100.0     # Mbps
+
+
+def _times(rng, u, nbytes=6.25e6):
+    """Random Eq.10 terms whose nominal transfer seconds are DERIVED from
+    the payload bytes at RATE (what client_step_times produces)."""
+    link = LinkProfile(RATE)
+    out = []
+    for _ in range(u):
+        t_f = rng.uniform(0.05, 0.4)
+        nb = nbytes * rng.uniform(0.5, 1.5)
+        out.append(StepTimes(t_f=t_f, t_fc=link.transfer_s(nb),
+                             t_s=rng.uniform(0.05, 0.8),
+                             t_bc=link.transfer_s(nb), t_b=2 * t_f,
+                             fc_bytes=nb, bc_bytes=nb))
+    return out
+
+
+# -- link models --------------------------------------------------------------
+
+def test_constant_link_matches_link_profile_bitwise():
+    link = ConstantLink(RATE)
+    prof = LinkProfile(RATE)
+    for t0 in (0.0, 1.75, 1234.5):
+        for nb in (1.0, 6.25e6, 1e9):
+            assert link.finish_time(t0, nb) == t0 + prof.transfer_s(nb)
+    assert link.finish_time(5.0, 0.0) == 5.0
+    with pytest.raises(ValueError):
+        ConstantLink(0.0)
+
+
+def test_trace_integration_hand_computed():
+    # 100 Mbps on [0,10), 50 on [10,20), 200 after
+    link = TraceLink([0.0, 10.0, 20.0], [100.0, 50.0, 200.0])
+    # start t=5: 5s@100Mbps = 5e8 bits, then 10s@50Mbps = 5e8 bits
+    # -> exactly 1e9 bits (125 MB) land at t=20
+    assert link.finish_time(5.0, 125e6) == pytest.approx(20.0, abs=1e-9)
+    # 7.5e8 bits: 5e8 by t=10, remaining 2.5e8 at 50 Mbps -> 5 s
+    assert link.finish_time(5.0, 7.5e8 / 8) == pytest.approx(15.0, abs=1e-9)
+    # entirely inside one segment behaves like a constant link
+    assert link.finish_time(0.0, 12.5e6) == pytest.approx(1.0, abs=1e-12)
+    # mid-trace outage stalls until the next segment
+    out = TraceLink([0.0, 1.0, 2.0], [100.0, 0.0, 100.0])
+    assert out.finish_time(0.5, 12.5e6 * 0.75) == pytest.approx(2.25, abs=1e-9)
+    with pytest.raises(ValueError):
+        TraceLink([1.0, 2.0], [10.0, 10.0])        # must start at 0
+    with pytest.raises(ValueError):
+        TraceLink([0.0, 1.0], [10.0, 0.0])         # final rate must be > 0
+    with pytest.raises(ValueError):
+        TraceLink([0.0, 1.0, 1.0], [1.0, 1.0, 1.0])  # strictly increasing
+
+
+def test_gilbert_elliott_deterministic_under_seed():
+    kw = dict(p_gb=0.3, p_bg=0.4, dwell_s=0.5)
+    a = GilbertElliottLink(100.0, 10.0, seed=7, **kw)
+    b = GilbertElliottLink(100.0, 10.0, seed=7, **kw)
+    c = GilbertElliottLink(100.0, 10.0, seed=8, **kw)
+    queries = [(t0, nb) for t0 in (0.0, 3.3, 17.0)
+               for nb in (1e5, 6.25e6, 5e7)]
+    fa = [a.finish_time(t0, nb) for t0, nb in queries]
+    fb = [b.finish_time(t0, nb) for t0, nb in queries]
+    assert fa == fb
+    # query ORDER must not matter: probe b out of order first
+    b2 = GilbertElliottLink(100.0, 10.0, seed=7, **kw)
+    _ = b2.rate_bps_at(40.0)
+    assert [b2.finish_time(t0, nb) for t0, nb in queries] == fa
+    fc = [c.finish_time(t0, nb) for t0, nb in queries]
+    assert fc != fa
+    # the chain actually fades under these params
+    assert any(not a.state_at(i * 0.5) for i in range(100))
+
+
+def test_gilbert_non_dyadic_dwell_terminates():
+    """Regression: non-dyadic dwell_s (e.g. 0.1) puts float slot boundaries
+    AT the query instant — next_change must still advance strictly, or
+    finish_time and the shared-cell integrator spin forever."""
+    link = GilbertElliottLink(100.0, 10.0, dwell_s=0.1, seed=0)
+    for slot in range(200):
+        t = slot * 0.1
+        assert link.next_change(t) > t
+    f = link.finish_time(4.25, 2.5e6)          # hung before the fix
+    assert 4.25 < f < 1e3
+    cell = SharedCell(50.0, [GilbertElliottLink(100.0, 10.0, dwell_s=0.3,
+                                                seed=s) for s in range(3)])
+    fins = shared_finish_times(50.0, cell.links,
+                               [(u, 0.0, 1e6) for u in range(3)])
+    assert all(np.isfinite(f) and f > 0 for f in fins)
+
+
+# -- shared medium ------------------------------------------------------------
+
+def test_shared_cell_hand_computed_fair_share():
+    """cap 8 Mbps = 1e6 B/s; A(1.5 MB)@t=0, B(1.0 MB)@t=1: A alone gets
+    1 MB in [0,1); then 0.5 MB/s each: A done at 2.0, B (0.5 MB left,
+    alone at 1 MB/s) at 2.5."""
+    links = [ConstantLink(1000.0), ConstantLink(1000.0)]  # own links no cap
+    fins = shared_finish_times(8.0, links, [(0, 0.0, 1.5e6), (1, 1.0, 1.0e6)])
+    assert fins[0] == pytest.approx(2.0, abs=1e-9)
+    assert fins[1] == pytest.approx(2.5, abs=1e-9)
+    # n equal transfers starting together all finish at total_bits/cap
+    n, nb = 4, 1.0e6
+    fins = shared_finish_times(8.0, [ConstantLink(1000.0)] * n,
+                               [(u, 0.0, nb) for u in range(n)])
+    for f in fins:
+        assert f == pytest.approx(n * nb * 8.0 / 8e6, abs=1e-9)
+
+
+def test_shared_cell_capacity_conservation():
+    """Delivered bits over the busy period never exceed capacity * time,
+    and equal it when the cell is never idle (property over random loads)."""
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        n = int(rng.integers(2, 7))
+        cap = float(rng.uniform(5.0, 50.0))
+        links = [ConstantLink(float(rng.uniform(cap / 2, cap * 2)))
+                 for _ in range(n)]
+        reqs = [(u, 0.0, float(rng.uniform(1e5, 5e6))) for u in range(n)]
+        fins = shared_finish_times(cap, links, reqs)
+        total_bits = sum(nb * 8.0 for _, _, nb in reqs)
+        busy = max(fins)
+        assert total_bits <= cap * 1e6 * busy * (1 + 1e-9)
+        # per-client own-rate cap respected: no transfer beats its own link
+        for (u, t0, nb), f in zip(reqs, fins):
+            assert f >= t0 + links[u].finish_time(t0, nb) - t0 - 1e-9
+    # all-links-faster-than-cap and always busy => exact conservation
+    fins = shared_finish_times(10.0, [ConstantLink(1000.0)] * 3,
+                               [(u, 0.0, 2e6) for u in range(3)])
+    assert max(fins) == pytest.approx(3 * 2e6 * 8.0 / 10e6, rel=1e-9)
+
+
+def test_shared_cell_retimes_inflight_on_contention_change():
+    cell = SharedCell(8.0, [ConstantLink(1000.0)] * 2)
+    cell.add(0.0, "a", 0, 1.5e6)
+    v0 = cell.version
+    first = cell.next_completion()
+    assert first == pytest.approx(1.5)          # alone: 1 MB/s
+    cell.add(1.0, "b", 1, 1.0e6)
+    assert cell.version > v0                     # prediction invalidated
+    assert cell.next_completion() == pytest.approx(2.0)   # re-timed
+    done = cell.advance(2.0)
+    assert [(t, tid) for t, tid, _ in done] == [(pytest.approx(2.0), "a")]
+    assert cell.next_completion() == pytest.approx(2.5)
+
+
+# -- engine parity ------------------------------------------------------------
+
+def test_constant_plane_reproduces_engine_bitwise():
+    """Acceptance: a constant-rate dedicated plane reproduces the plane-less
+    (PR-2) round timelines bit-for-bit — times, waits, events, everything."""
+    rng = np.random.default_rng(1)
+    plane6 = NetworkPlane.constant(RATE, 6)
+    for policy in ("fifo", "wf", "bw"):
+        for slots, chunk in ((1, 1), (2, 2)):
+            times = _times(rng, 6)
+            jobs = jobs_from_times(times, range(6))
+            a = simulate_round(jobs, policy=policy, slots=slots,
+                               cohort_chunk=chunk)
+            b = simulate_round(jobs, policy=policy, slots=slots,
+                               cohort_chunk=chunk, network=plane6,
+                               t_origin=rng.uniform(0, 1e3))
+            assert a.round_time == b.round_time         # bitwise, no approx
+            assert a.completion == b.completion
+            assert a.waits == b.waits
+            assert a.events == b.events
+            assert a.service == b.service
+
+
+def test_constant_plane_reproduces_async_clock_bitwise():
+    rng = np.random.default_rng(2)
+    times = _times(rng, 5)
+    kw = dict(policy="fifo", agg_policy="buffered", buffer_k=2,
+              max_inflight_rounds=2)
+    a = FederationClock(5, 3, ClockConfig(**kw),
+                        times_fn=lambda u, r: times[u]).run()
+    b = FederationClock(5, 3, ClockConfig(**kw),
+                        times_fn=lambda u, r: times[u],
+                        network=NetworkPlane.constant(RATE, 5)).run()
+    assert a.makespan == b.makespan
+    assert a.serves == b.serves
+    assert a.events == b.events
+    assert [c.time for c in a.commits] == [c.time for c in b.commits]
+
+
+def test_fading_plane_slows_the_round():
+    """A plane whose links fade below nominal can only delay transfers."""
+    rng = np.random.default_rng(3)
+    times = _times(rng, 6)
+    jobs = jobs_from_times(times, range(6))
+    base = simulate_round(jobs, policy="fifo")
+    # every link halves after 0.2s -> strictly slower round
+    fade = NetworkPlane([TraceLink([0.0, 0.2], [RATE, RATE / 2])
+                         for _ in range(6)])
+    slow = simulate_round(jobs, policy="fifo", network=fade)
+    assert slow.round_time > base.round_time
+    # shared cell at half the aggregate demand also slows the round
+    sh = NetworkPlane([ConstantLink(RATE)] * 6, shared=True,
+                      capacity_mbps=3 * RATE)
+    contended = simulate_round(jobs, policy="fifo", network=sh)
+    assert contended.round_time >= base.round_time - 1e-12
+
+
+def test_shared_plane_async_clock_completes_all_rounds():
+    rng = np.random.default_rng(4)
+    times = _times(rng, 5)
+    plane = NetworkPlane([ConstantLink(RATE)] * 5, shared=True,
+                         capacity_mbps=2 * RATE)
+    res = FederationClock(5, 3,
+                          ClockConfig(policy="fifo", agg_policy="buffered",
+                                      buffer_k=2, max_inflight_rounds=2),
+                          times_fn=lambda u, r: times[u],
+                          network=plane).run()
+    assert res.rounds_completed == {u: 3 for u in range(5)}
+    # serves never overlap per slot, time is monotone
+    evs = sorted(res.serves, key=lambda e: e.start)
+    for x, y in zip(evs, evs[1:]):
+        assert x.end <= y.start + 1e-12 or x.slot != y.slot
+    free = FederationClock(5, 3,
+                           ClockConfig(policy="fifo", agg_policy="buffered",
+                                       buffer_k=2, max_inflight_rounds=2),
+                           times_fn=lambda u, r: times[u],
+                           network=NetworkPlane.constant(RATE, 5)).run()
+    assert res.makespan >= free.makespan - 1e-9
+
+
+# -- bandwidth-aware discipline ----------------------------------------------
+
+def test_bw_discipline_beats_blind_under_asymmetric_fades():
+    """One client's DOWNLINK collapses (uplinks stay healthy): the
+    net-aware bw discipline serves it first, hiding the long predicted
+    download under the other clients' server time; FIFO ignores the
+    network and pays the tail at the end."""
+    link_ok = ConstantLink(RATE)
+    link_bad = TraceLink([0.0], [RATE / 20.0])    # 5 Mbps throughout
+    nb = 6.25e6
+    times = []
+    for u in range(4):
+        times.append(StepTimes(t_f=0.01, t_fc=LinkProfile(RATE).transfer_s(nb),
+                               t_s=0.6, t_bc=LinkProfile(RATE).transfer_s(nb),
+                               t_b=0.02, fc_bytes=nb, bc_bytes=nb))
+    plane = NetworkPlane([link_ok] * 4,
+                         [link_ok, link_ok, link_ok, link_bad])
+    jobs = jobs_from_times(times, range(4))
+    blind = simulate_round(jobs, policy="fifo", network=plane)
+    aware = simulate_round(jobs, policy="bw", network=plane)
+    assert aware.round_time < blind.round_time - 1e-6
+    # the bw engine served the bad-link client first
+    assert aware.order[0] == 3
+
+
+# -- network plane / simulator knobs ------------------------------------------
+
+def test_network_plane_validation():
+    with pytest.raises(ValueError):
+        NetworkPlane([])
+    with pytest.raises(ValueError):
+        NetworkPlane([ConstantLink(10.0)], [ConstantLink(10.0)] * 2)
+    with pytest.raises(ValueError):
+        NetworkPlane([ConstantLink(10.0)], shared=True)      # no capacity
+    with pytest.raises(ValueError):
+        NetworkPlane([ConstantLink(10.0)], capacity_mbps=5.0)  # not shared
+    plane = NetworkPlane([ConstantLink(10.0)], shared=True, capacity_mbps=5.0)
+    with pytest.raises(RuntimeError):
+        plane.uplink_finish(0, 0.0, 1.0)
+    with pytest.raises(RuntimeError):
+        NetworkPlane([ConstantLink(10.0)]).make_cell("up")
+    with pytest.raises(ValueError):
+        FederationClock(2, 1, ClockConfig(),
+                        network=NetworkPlane.constant(10.0, 3))
+
+
+BAD_NET_CONFIGS = [
+    (KeyError, dict(link_model="bogus")),
+    (ValueError, dict(engine="event", link_model="trace")),   # traces missing
+    (ValueError, dict(link_traces=[([0.0], [10.0])] * 6)),    # not "trace"
+    (ValueError, dict(engine="event", link_model="trace",
+                      link_traces=[([0.0], [10.0])] * 2)),    # wrong length
+    (ValueError, dict(engine="event", shared_medium=True)),   # no capacity
+    (ValueError, dict(engine="event", medium_capacity_mbps=100.0)),
+    (ValueError, dict(link_model="gilbert")),                 # analytic
+    (ValueError, dict(shared_medium=True, medium_capacity_mbps=100.0)),
+]
+
+
+@pytest.mark.parametrize("exc,kw", BAD_NET_CONFIGS,
+                         ids=[f"{i}" for i in range(len(BAD_NET_CONFIGS))])
+def test_net_knob_validation_matrix(exc, kw):
+    with pytest.raises(exc):
+        validate_run_config(FedRunConfig(**kw), n_clients=6)
+
+
+def test_net_knob_validation_accepts():
+    for kw in (dict(engine="event", link_model="gilbert"),
+               dict(engine="event", link_model="trace",
+                    link_traces=[([0.0], [50.0])] * 6),
+               dict(engine="event", shared_medium=True,
+                    medium_capacity_mbps=200.0),
+               dict(scheduler="bw"),
+               dict(engine="event", scheduler="bw", link_model="gilbert")):
+        validate_run_config(FedRunConfig(**kw), n_clients=6)
+
+
+def test_make_link_fleet_models_and_determinism():
+    for model in ("constant", "trace", "gilbert"):
+        a = make_link_fleet(8, seed=3, model=model)
+        b = make_link_fleet(8, seed=3, model=model)
+        assert len(a) == 8
+        fa = [l.finish_time(0.0, 1e6) for l in a]
+        fb = [l.finish_time(0.0, 1e6) for l in b]
+        assert fa == fb
+        assert len(set(round(f, 12) for f in fa)) > 1   # heterogeneous
+    with pytest.raises(KeyError):
+        make_link_fleet(4, model="bogus")
+
+
+# -- simulator integration ----------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sim_setup():
+    cfg = tiny("bert-base", n_layers=2, d_model=256)
+    cfg = cfg.with_(vocab_size=4096, max_position=32)
+    train = make_emotion_dataset(400, seq_len=16, vocab_size=4096, seed=0)
+    test = make_emotion_dataset(100, seq_len=16, vocab_size=4096, seed=1)
+    return cfg, train, test
+
+
+def _run_sim(sim_setup, rounds=2, links=None, **kw):
+    cfg, train, test = sim_setup
+    rc = FedRunConfig(scheme="ours", rounds=rounds, agg_interval=1,
+                      batch_size=4, seq_len=16, lr=3e-3, eval_every=100,
+                      engine="event", **kw)
+    sim = Simulator(cfg, PAPER_CLIENTS[:4], [1, 1, 1, 1], train, test, rc,
+                    links=links)
+    sim.run_training()
+    return sim
+
+
+def test_simulator_constant_link_model_is_bitwise_parity(sim_setup):
+    """Acceptance: link_model='constant' (the plane) reproduces the PR-2
+    event timeline EXACTLY — same floats in every history record, for the
+    sync barrier and for an async policy."""
+    for extra in (dict(),
+                  dict(agg_policy="buffered", agg_buffer_k=2,
+                       max_inflight_rounds=2)):
+        a = _run_sim(sim_setup, scheduler="fifo", **extra)
+        b = _run_sim(sim_setup, scheduler="fifo", link_model="constant",
+                     **extra)
+        assert [r.sim_time_s for r in a.history] == \
+               [r.sim_time_s for r in b.history]
+        assert [t for t, *_ in a.loss_events] == \
+               [t for t, *_ in b.loss_events]
+
+
+def test_simulator_time_varying_links_end_to_end(sim_setup):
+    """Gilbert links + shared medium both run the REAL math end to end and
+    only ever slow wall-clock vs the constant plane."""
+    base = _run_sim(sim_setup, scheduler="fifo")
+    ge = _run_sim(sim_setup, scheduler="fifo", link_model="gilbert")
+    assert ge.sim_clock >= base.sim_clock - 1e-9
+    assert all(np.isfinite(r.mean_loss) for r in ge.history)
+    sh = _run_sim(sim_setup, scheduler="fifo", shared_medium=True,
+                  medium_capacity_mbps=2 * RATE,
+                  agg_policy="buffered", agg_buffer_k=2,
+                  max_inflight_rounds=2)
+    assert sh.sim_clock > 0 and len(sh.loss_events) == 4 * 2
+    custom = _run_sim(sim_setup, scheduler="bw", link_model="custom",
+                      links=make_link_fleet(4, seed=1, model="trace"))
+    assert all(np.isfinite(r.mean_loss) for r in custom.history)
+
+
+def test_simulator_custom_links_require_custom_model(sim_setup):
+    cfg, train, test = sim_setup
+    rc = FedRunConfig(scheme="ours", engine="event")
+    with pytest.raises(ValueError):
+        Simulator(cfg, PAPER_CLIENTS[:2], [1, 1], train, test, rc,
+                  links=make_link_fleet(2, model="constant"))
+    rc2 = FedRunConfig(scheme="ours", engine="event", link_model="custom")
+    with pytest.raises(ValueError):
+        Simulator(cfg, PAPER_CLIENTS[:2], [1, 1], train, test, rc2)
+
+
+def test_activation_dtype_plumbs_into_links(sim_setup):
+    """bf16 halves the wire payload, so the wireless Eq.10 terms halve too
+    (they were hard-coded fp32 before)."""
+    from repro.core.cost_model import client_step_times
+    from repro.fed import LINK, SERVER
+    cfg, _, _ = sim_setup
+    t32 = client_step_times(cfg.with_(dtype="float32"), 1, PAPER_CLIENTS[0],
+                            SERVER, LINK, 4, 16)
+    t16 = client_step_times(cfg.with_(dtype="bfloat16"), 1, PAPER_CLIENTS[0],
+                            SERVER, LINK, 4, 16)
+    assert t16.t_fc == pytest.approx(t32.t_fc / 2)
+    assert t16.fc_bytes == pytest.approx(t32.fc_bytes / 2)
+    assert t16.t_f == t32.t_f                       # compute unchanged
+    explicit = client_step_times(cfg.with_(dtype="bfloat16"), 1,
+                                 PAPER_CLIENTS[0], SERVER, LINK, 4, 16,
+                                 dtype_bytes=4)
+    assert explicit.t_fc == t32.t_fc
