@@ -216,43 +216,71 @@ def async_vs_sync(n_clients=16, rounds=3, csv=False):
     return out
 
 
-def _ragged_fleet(n_clients, seed=0):
+def _ragged_fleet(n_clients, seed=0, jitter=0.25):
     """Ragged n-client fleet + per-client Eq.10 terms (BERT-base, §V sizes)."""
     cfg = REGISTRY["bert-base"]
-    devices = make_fleet(n_clients, seed=seed)
+    devices = make_fleet(n_clients, seed=seed, jitter=jitter)
     cuts = [PAPER_CUTS[i % len(PAPER_CUTS)] for i in range(n_clients)]
     times = [client_step_times(cfg, c, d, SERVER, LINK, 16, 128)
              for c, d in zip(cuts, devices)]
     return cuts, times
 
 
-def server_autoscaling(n_clients=16, rounds=3, csv=False):
-    """ROADMAP item: server_slots sweep under the buffered async policy on a
-    ragged fleet (pure DES).  Reports the knee — the last slot count whose
-    extra executor still buys >= 5% makespan."""
-    _, times = _ragged_fleet(n_clients)
+SLOT_SWEEP = (1, 2, 4, 8)
+
+
+def _slots_knee(times, n_clients, rounds, chunk_efficiency):
+    """Makespan per slot count + the knee (last slot count whose extra
+    executor still buys >= 5% makespan) for one fleet shape."""
     spans = {}
-    for slots in (1, 2, 4, 8):
-        ccfg = ClockConfig(policy="fifo", slots=slots, agg_policy="buffered",
+    for slots in SLOT_SWEEP:
+        ccfg = ClockConfig(policy="fifo", slots=slots,
+                           cohort_chunk=2 if chunk_efficiency < 1.0 else 1,
+                           chunk_efficiency=chunk_efficiency,
+                           agg_policy="buffered",
                            buffer_k=max(2, n_clients // 4),
                            max_inflight_rounds=2)
         res = FederationClock(n_clients, rounds, ccfg,
                               times_fn=lambda u, r: times[u]).run()
         spans[slots] = res.makespan
     knee, prev = 1, spans[1]
-    for slots in (2, 4, 8):
+    for slots in SLOT_SWEEP[1:]:
         if spans[slots] < prev * 0.95:
             knee = slots
         prev = spans[slots]
+    return spans, knee
+
+
+def server_autoscaling(rounds=3, csv=False):
+    """ROADMAP item: map the server_slots autoscaling FRONTIER — sweep
+    fleet size x raggedness (device jitter) x chunk_efficiency under the
+    buffered async policy (pure DES) and report each shape's knee: the
+    last slot count whose extra executor still buys >= 5% makespan."""
     out = []
-    for slots, span in spans.items():
-        speedup = spans[1] / span
-        if not csv:
-            print(f"autoscale[slots={slots}] makespan {span:8.2f}s  "
-                  f"speedup vs 1 slot {speedup:5.2f}x"
-                  + ("   <-- knee" if slots == knee else ""))
-        out.append((f"autoscale_slots{slots}", span * 1e6,
-                    f"speedup={speedup:.3f};knee={knee}"))
+    frontier = []
+    for n_clients in (8, 16, 32):
+        for jitter in (0.1, 0.45):
+            for eff in (1.0, 0.7):
+                _, times = _ragged_fleet(n_clients, jitter=jitter)
+                spans, knee = _slots_knee(times, n_clients, rounds, eff)
+                speedup = spans[1] / spans[knee]
+                frontier.append((n_clients, jitter, eff, knee))
+                if not csv:
+                    print(f"autoscale[n={n_clients:2d} jitter={jitter:.2f} "
+                          f"eff={eff:.1f}] knee={knee} "
+                          f"({speedup:4.2f}x vs 1 slot)  spans "
+                          + " ".join(f"s{s}={spans[s]:7.2f}"
+                                     for s in SLOT_SWEEP))
+                out.append((
+                    f"autoscale_n{n_clients}_j{int(jitter*100)}"
+                    f"_e{int(eff*100)}",
+                    spans[knee] * 1e6,
+                    f"knee={knee};speedup={speedup:.3f};"
+                    + ";".join(f"s{s}={spans[s]:.4f}" for s in SLOT_SWEEP)))
+    # one summary row: the frontier as (shape -> knee) pairs
+    out.append(("autoscale_frontier", 0.0,
+                "|".join(f"n{n}_j{int(j*100)}_e{int(e*100)}:k{k}"
+                         for n, j, e, k in frontier)))
     return out
 
 

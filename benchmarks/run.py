@@ -3,6 +3,7 @@
 
   bench_table1      — paper Table I (memory / round time / convergence)
   bench_scheduling  — §V scheduling comparison (ours/FIFO/WF/optimal)
+  bench_control     — adaptive cut control plane vs static on deep fades
   bench_kernels     — Pallas kernel wrappers + arithmetic-intensity deltas
   bench_fig2        — Fig. 2 accuracy/F1-vs-time curves (real reduced run)
   roofline          — §Roofline aggregation of the dry-run records
@@ -68,12 +69,14 @@ def main() -> None:
                     help="write BENCH_<name>.json per bench here")
     args = ap.parse_args()
 
-    from benchmarks import (bench_ablations, bench_fig2, bench_kernels,
-                            bench_scheduling, bench_table1, roofline)
+    from benchmarks import (bench_ablations, bench_control, bench_fig2,
+                            bench_kernels, bench_scheduling, bench_table1,
+                            roofline)
     benches = [
         ("table1", bench_table1.run),
         ("scheduling", bench_scheduling.run),
         ("network", bench_scheduling.run_network),
+        ("control", bench_control.run),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]

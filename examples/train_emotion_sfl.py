@@ -24,7 +24,7 @@ from repro.configs import REGISTRY, reduced
 from repro.core.partition import assign_cuts
 from repro.data import make_emotion_dataset
 from repro.fed import (AGG_POLICIES, FedRunConfig, PAPER_CLIENTS, PAPER_CUTS,
-                       Simulator, make_link_fleet, validate_run_config)
+                       Simulator, validate_run_config)
 
 
 def main():
@@ -60,13 +60,28 @@ def main():
     # -- network plane (repro/net; README "Network plane") --------------------
     ap.add_argument("--link-model", choices=("constant", "trace", "gilbert"),
                     default="constant",
-                    help="per-client link process (trace = deep-fade "
-                    "make_link_fleet traces; gilbert = seeded good/bad "
-                    "Markov fading; both need --engine event)")
+                    help="per-client link process (trace = the bundled "
+                    "measured-style 4G/5G bandwidth trace, per-client "
+                    "time-rotated; gilbert = seeded good/bad Markov "
+                    "fading; both need --engine event)")
     ap.add_argument("--shared-medium", action="store_true",
                     help="concurrent transfers split one cell per direction")
     ap.add_argument("--medium-capacity-mbps", type=float, default=None,
                     help="cell capacity (required with --shared-medium)")
+    # -- adaptive control plane (repro/control; README "Control plane") -------
+    ap.add_argument("--controller", choices=("static", "periodic", "reactive"),
+                    default="static",
+                    help="online cut re-assignment at commit boundaries "
+                    "(needs --engine event)")
+    ap.add_argument("--resolve-every", type=int, default=1,
+                    help="periodic controller: commits between re-solves")
+    ap.add_argument("--hysteresis", type=float, default=None,
+                    help="reactive controller: relative rate band "
+                    "(default 0.25)")
+    ap.add_argument("--agg-transport", choices=("nominal", "plane"),
+                    default="nominal",
+                    help="route adapter syncs through the network plane "
+                    "instead of the scalar nominal link")
     args = ap.parse_args()
     if args.agg_interval is None:
         args.agg_interval = 5 if args.agg_policy == "sync" else 1
@@ -103,14 +118,17 @@ def main():
 
     # validate EVERY schemes entry up front — an invalid late entry must not
     # abort the script after earlier entries already burned training time
-    # "trace" rides the deep-fade make_link_fleet traces via link_model=
-    # "custom" (FedRunConfig's "trace" takes explicit per-client traces)
+    # "trace" drives every client from the bundled measured-style 4G/5G
+    # bandwidth trace, time-rotated per client so fades hit at different
+    # instants (FedRunConfig's native link_model="trace" path)
     links = None
     link_model = args.link_model
+    link_traces = None
     if args.link_model == "trace":
-        link_model = "custom"
-        links = make_link_fleet(len(PAPER_CLIENTS), seed=args.seed,
-                                model="trace")
+        from repro.net import bundled_trace
+        bp, rates = bundled_trace()
+        link_traces = [(bp, np.roll(rates, 17 * i).tolist())
+                       for i in range(len(PAPER_CLIENTS))]
 
     runs = []
     for entry in args.schemes.split(","):
@@ -126,8 +144,13 @@ def main():
                            agg_buffer_k=args.agg_buffer_k,
                            staleness_alpha=args.staleness_alpha,
                            link_model=link_model,
+                           link_traces=link_traces,
                            shared_medium=args.shared_medium,
-                           medium_capacity_mbps=args.medium_capacity_mbps)
+                           medium_capacity_mbps=args.medium_capacity_mbps,
+                           controller=args.controller,
+                           resolve_every=args.resolve_every,
+                           hysteresis=args.hysteresis,
+                           agg_transport=args.agg_transport)
         try:   # surface the FedRunConfig validation matrix as argparse errors
             validate_run_config(run, len(PAPER_CLIENTS))
         except (KeyError, ValueError) as e:

@@ -1,0 +1,17 @@
+# Adaptive cut/rank/batch control plane: the setup-phase assignment
+# (core.partition) made LIVE — telemetry-driven online re-assignment at
+# aggregation commit boundaries, with migration priced through the network
+# plane (repro.net) and hysteresis against fading-channel flap.
+from repro.control.controller import (CONTROLLERS, Controller,
+                                      PeriodicController, ReactiveController,
+                                      StaticController, make_controller)
+from repro.control.loop import ControlLoop, ReassignEvent
+from repro.control.solver import (Assignment, predicted_span, predicted_times,
+                                  solve_assignment)
+from repro.control.telemetry import ClientSample, TelemetryStore
+
+__all__ = ["Assignment", "CONTROLLERS", "ClientSample", "ControlLoop",
+           "Controller", "PeriodicController", "ReactiveController",
+           "ReassignEvent", "StaticController", "TelemetryStore",
+           "make_controller", "predicted_span", "predicted_times",
+           "solve_assignment"]

@@ -10,7 +10,7 @@ and the simulator both consume it.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 
@@ -74,9 +74,12 @@ def head_fwd_flops_per_token(cfg: ModelConfig) -> float:
     return 2.0 * cfg.d_model * out_dim
 
 
-def lora_flops_per_token_per_layer(cfg: ModelConfig) -> float:
-    # two rank-r matmuls per adapted projection; coarse: 4 targets
-    return 2.0 * len(cfg.lora.targets) * cfg.lora.rank * 2 * cfg.d_model
+def lora_flops_per_token_per_layer(cfg: ModelConfig,
+                                   rank: Optional[int] = None) -> float:
+    # two rank-r matmuls per adapted projection; coarse: 4 targets.
+    # ``rank`` overrides cfg.lora.rank (the control plane's rank knob).
+    r = cfg.lora.rank if rank is None else int(rank)
+    return 2.0 * len(cfg.lora.targets) * r * 2 * cfg.d_model
 
 
 BWD_FACTOR = 2.0   # backward ~ 2x forward (dgrad through frozen + LoRA wgrad)
@@ -121,10 +124,14 @@ def activation_bytes(cfg: ModelConfig, batch: int, seq_len: int,
 def client_step_times(cfg: ModelConfig, cut: int, device: DeviceProfile,
                       server: DeviceProfile, link: LinkProfile,
                       batch: int, seq_len: int,
-                      dtype_bytes: Optional[int] = None) -> StepTimes:
-    """Eq. 10 terms for client u with N_c^u = cut layers."""
+                      dtype_bytes: Optional[int] = None,
+                      lora_rank: Optional[int] = None) -> StepTimes:
+    """Eq. 10 terms for client u with N_c^u = cut layers.  ``lora_rank``
+    overrides the config's adapter rank (the control plane evaluates
+    candidate per-client ranks through here)."""
     tokens = float(batch) * seq_len
-    lf = layer_fwd_flops_per_token(cfg, seq_len) + lora_flops_per_token_per_layer(cfg)
+    lf = layer_fwd_flops_per_token(cfg, seq_len) \
+        + lora_flops_per_token_per_layer(cfg, rank=lora_rank)
     n_total = cfg.n_layers + cfg.n_encoder_layers if cfg.family == "encdec" else cfg.n_layers
     n_server = n_total - cut
 
@@ -140,13 +147,35 @@ def client_step_times(cfg: ModelConfig, cut: int, device: DeviceProfile,
                      fc_bytes=act, bc_bytes=act)
 
 
-def lora_upload_bytes(cfg: ModelConfig, cut: int, dtype_bytes: int = 4) -> float:
+def lora_upload_bytes(cfg: ModelConfig, cut: int, dtype_bytes: int = 4,
+                      rank: Optional[int] = None) -> float:
     """Client-side adapter upload per aggregation round (Eq. 5 upload)."""
+    r = cfg.lora.rank if rank is None else int(rank)
     per_layer = 0.0
     d = cfg.d_model
     for _ in cfg.lora.targets:
-        per_layer += cfg.lora.rank * 2 * d * dtype_bytes
+        per_layer += r * 2 * d * dtype_bytes
     return per_layer * cut
+
+
+def migration_bytes(cfg: ModelConfig, old_cut: int, new_cut: int,
+                    dtype_bytes: int = 4,
+                    rank: Optional[int] = None) -> Tuple[float, float]:
+    """Wire bytes to MOVE a client's cut point at a commit boundary.
+
+    Growing the client prefix ships the extra frozen block weights plus
+    their adapters DOWN to the client; shrinking ships the dropped blocks'
+    adapter state UP (the frozen weights already live in the server's full
+    model, so nothing heavy travels).  Returns ``(down_bytes, up_bytes)``
+    — the control plane charges these through the network plane before
+    accepting a re-assignment.
+    """
+    delta = int(new_cut) - int(old_cut)
+    per_layer_adapters = lora_upload_bytes(cfg, 1, dtype_bytes, rank=rank)
+    if delta > 0:
+        per_layer_weights = layer_param_count(cfg) * dtype_bytes
+        return (delta * (per_layer_weights + per_layer_adapters), 0.0)
+    return (0.0, -delta * per_layer_adapters)
 
 
 def chunked_service_time(service_times: Sequence[float],

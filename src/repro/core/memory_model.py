@@ -156,9 +156,14 @@ def server_memory(cfg: ModelConfig, scheme: str, cuts: Sequence[int],
 
 
 def client_memory(cfg: ModelConfig, cut: int, batch: int, seq_len: int,
-                  dtype_bytes: int = 4) -> float:
-    """Client-side bytes: embed + its blocks + adapters + opt + activations."""
-    mb = model_bytes(cfg)
+                  dtype_bytes: int = 4, mb: ModelBytes | None = None) -> float:
+    """Client-side bytes: embed + its blocks + adapters + opt + activations.
+
+    ``mb`` takes a precomputed :func:`model_bytes` — callers that probe many
+    (cut, batch) candidates (the partition solver, the control plane) pass
+    it once instead of re-tracing the model shapes per query."""
+    if mb is None:
+        mb = model_bytes(cfg)
     params = mb.embed + cut * mb.per_layer
     lora_b = cut * mb.lora_per_layer
     acts = activation_bytes_training(cfg, cut, batch, seq_len, dtype_bytes)

@@ -64,6 +64,17 @@ def alg2_priorities(n_client_layers: Sequence[int],
     return [n / c for n, c in zip(n_client_layers, compute)]
 
 
+def refresh_priorities(out: List[float], n_client_layers: Sequence[int],
+                       compute: Sequence[float]) -> List[float]:
+    """Recompute Alg. 2 priorities IN PLACE into ``out`` (the list object
+    the FederationClock holds a reference to).  The control plane calls
+    this after a cut re-assignment so the online ``priority`` discipline
+    keeps ordering by the LIVE N_c^u / C_u ratios — a precomputed priority
+    list would silently keep scheduling by the stale cuts."""
+    out[:] = alg2_priorities(n_client_layers, compute)
+    return out
+
+
 SCHEDULERS = {
     "ours": None,        # needs (n_layers, compute); see resolve_order
     "fifo": schedule_fifo,

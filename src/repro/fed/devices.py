@@ -57,7 +57,10 @@ def make_link_fleet(n: int, seed: int = 0, *, model: str = "gilbert",
                     base_mbps: float = LINK.rate_mbps,
                     jitter: float = 0.3,
                     dwell_s: float = 0.5,
-                    horizon_s: float = 120.0) -> List[LinkModel]:
+                    horizon_s: float = 120.0,
+                    bad_fraction: float = 0.1,
+                    p_gb: float = 0.2,
+                    p_bg: float = 0.4) -> List[LinkModel]:
     """Heterogeneous per-client links for the network plane — the wireless
     counterpart of ``make_fleet`` (same deterministic-jitter idea).
 
@@ -67,7 +70,13 @@ def make_link_fleet(n: int, seed: int = 0, *, model: str = "gilbert",
                       every ``dwell_s`` over ``horizon_s`` (the last rate
                       holds beyond the horizon);
     model="gilbert"   seeded two-state fading channels whose good rate
-                      carries the jitter spread (bad = good / 10).
+                      carries the jitter spread; the bad state drops to
+                      ``bad_fraction`` of the good rate and the chain flips
+                      with ``p_gb``/``p_bg`` per ``dwell_s`` slot.  Long
+                      dwells + small ``bad_fraction``/``p_bg`` give the
+                      DEEP multi-second fades the control-plane benches
+                      react to (a fade must outlive a re-assignment for
+                      adaptation to pay).
 
     Feed the result to ``Simulator(links=..., run.link_model="custom")`` or
     directly into a ``NetworkPlane``.
@@ -76,6 +85,8 @@ def make_link_fleet(n: int, seed: int = 0, *, model: str = "gilbert",
         raise ValueError("fleet size must be >= 1")
     if not 0.0 <= jitter < 1.0:
         raise ValueError("jitter must be in [0, 1)")
+    if not 0.0 < bad_fraction <= 1.0:
+        raise ValueError("bad_fraction must be in (0, 1]")
     rng = np.random.default_rng(seed)
     links: List[LinkModel] = []
     for i in range(n):
@@ -94,8 +105,8 @@ def make_link_fleet(n: int, seed: int = 0, *, model: str = "gilbert",
             links.append(TraceLink(ts.tolist(), rates.tolist()))
         elif model == "gilbert":
             links.append(GilbertElliottLink(
-                rate, rate * 0.1, dwell_s=dwell_s,
-                seed=int(rng.integers(0, 2 ** 31))))
+                rate, rate * bad_fraction, p_gb=p_gb, p_bg=p_bg,
+                dwell_s=dwell_s, seed=int(rng.integers(0, 2 ** 31))))
         else:
             raise KeyError(f"unknown link fleet model {model!r}")
     return links

@@ -36,7 +36,8 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple)
 
 from repro.core.cost_model import StepTimes, chunked_service_time
 from repro.net import NetworkPlane, shared_finish_times
@@ -421,7 +422,14 @@ class ServeEvent:
 @dataclasses.dataclass(frozen=True)
 class CommitEvent:
     """One aggregation commit: the server folded the buffered contributions
-    into global model version ``version``."""
+    into global model version ``version``.
+
+    ``overhead`` records the commit's extra delay: the driver's scalar
+    return, or — when ``on_commit`` returns a per-uid mapping (migration
+    charges, per-client redistribute) — the mapping's maximum.  Under
+    plane-routed aggregation (``agg_bytes_fn``) the adapter transfers are
+    NOT part of this figure; they show up as the commit landing at the
+    merge instant and each contributor releasing at its downlink finish."""
     time: float
     version: int                   # version AFTER this commit (1-based)
     contributors: Tuple[int, ...]
@@ -462,18 +470,32 @@ class FederationClock:
     local round).
 
     ``times_fn(uid, local_round) -> StepTimes`` supplies per-round Eq. 10
-    phase durations (so stragglers can be re-rolled per client round);
-    ``priorities`` feeds the ``priority`` discipline (Alg. 2's N_c/C);
-    ``network`` attaches a network plane — transfer completions then
-    integrate payload bytes over the per-client link-rate processes on the
-    clock's GLOBAL timeline (a traced link that fades at t=50s fades in
-    whatever round is in flight then).
+    phase durations (so stragglers can be re-rolled per client round) and is
+    consulted LIVE — a control plane that changes a client's cut between
+    rounds changes its subsequent jobs; ``priorities`` feeds the
+    ``priority`` discipline (Alg. 2's N_c/C) and is likewise read per round
+    start, so in-place refreshes (``scheduling.refresh_priorities``) take
+    effect immediately; ``network`` attaches a network plane — transfer
+    completions then integrate payload bytes over the per-client link-rate
+    processes on the clock's GLOBAL timeline (a traced link that fades at
+    t=50s fades in whatever round is in flight then).
+
+    ``agg_bytes_fn(uid) -> bytes`` opts into PLANE-ROUTED aggregation:
+    instead of the driver folding a nominal-rate scalar into the commit
+    overhead, each contributor's adapter upload travels its own uplink
+    (contending in the shared-medium cell with any in-flight activation
+    transfers), the model merge happens when the LAST contributor upload
+    lands, and each contributor resumes only when its adapter download
+    finishes.  ``on_commit`` then fires at the merge instant and its return
+    value is EXTRA seconds beyond each contributor's download (migration
+    shipping etc.), not the transfer itself.
     """
 
     def __init__(self, n_clients: int, rounds: int, cfg: ClockConfig, *,
                  times_fn: Optional[Callable[[int, int], StepTimes]] = None,
                  priorities: Optional[Sequence[float]] = None,
-                 network: Optional[NetworkPlane] = None):
+                 network: Optional[NetworkPlane] = None,
+                 agg_bytes_fn: Optional[Callable[[int], float]] = None):
         if n_clients < 1 or rounds < 1:
             raise ValueError("need at least one client and one round")
         if cfg.agg_policy != "sync" and times_fn is None:
@@ -482,9 +504,13 @@ class FederationClock:
             raise ValueError("buffer_k cannot exceed the fleet size")
         if network is not None and network.n_clients != n_clients:
             raise ValueError("network plane must carry one link per client")
+        if agg_bytes_fn is not None and network is None:
+            raise ValueError("plane-routed aggregation (agg_bytes_fn) needs "
+                             "a network plane to route through")
         self.n, self.rounds, self.cfg = n_clients, rounds, cfg
         self.times_fn, self.priorities = times_fn, priorities
         self.network = network
+        self.agg_bytes_fn = agg_bytes_fn
         self.now = 0.0
         self.version = 0              # global model version (commit count)
         self.serves: List[ServeEvent] = []
@@ -552,9 +578,46 @@ class FederationClock:
             self.round_results.append(res)
             if (rnd + 1) % cfg.agg_interval == 0:
                 served = tuple(sorted(res.completion))
-                self._commit(served, (0,) * len(served), on_commit)
+                zeros = (0,) * len(served)
+                if self.agg_bytes_fn is not None and served:
+                    # plane-routed barrier sync: contributor adapters travel
+                    # their own (possibly faded, possibly contended) links;
+                    # merge at the last upload, resume at the last download.
+                    # Download payloads are read AFTER on_commit ran — a
+                    # control decision there redistributes at the new cuts.
+                    t_merge = max(self._routed_leg(served, self.now,
+                                                   "up").values())
+                    overhead, per = self._commit(served, zeros, on_commit,
+                                                 time=t_merge)
+                    down_f = self._routed_leg(served, t_merge, "down")
+                    extra = per if per is not None \
+                        else {u: overhead for u in served}
+                    self.now = max(self.now,
+                                   max(down_f[u] + extra.get(u, 0.0)
+                                       for u in served))
+                else:
+                    self._commit(served, zeros, on_commit)
             if on_round_end is not None and on_round_end(rnd, res) is False:
                 break
+
+    # ------------------------------------------------- routed adapter syncs
+    def _routed_leg(self, contributors: Sequence[int], t: float,
+                    direction: str) -> Dict[int, float]:
+        """One direction of a barrier commit's adapter syncs through the
+        plane, all starting at ``t`` with no other transfers in flight (the
+        sync-barrier case — within a barrier, every activation transfer has
+        already completed, so the syncs only contend with EACH OTHER).
+        Returns ``{uid: finish_time}``."""
+        net = self.network
+        reqs = [(u, t, float(self.agg_bytes_fn(u))) for u in contributors]
+        links = net.uplinks if direction == "up" else net.downlinks
+        if net.shared:
+            fins = shared_finish_times(net.capacity_mbps, links, reqs)
+        else:
+            fin = net.uplink_finish if direction == "up" \
+                else net.downlink_finish
+            fins = [fin(u, t0, b) for u, t0, b in reqs]
+        return dict(zip(contributors, fins))
 
     # ------------------------------------------------------------ async mode
     def _run_async(self, on_serve, on_commit, on_round_start=None):
@@ -563,6 +626,7 @@ class FederationClock:
         key_of = DISCIPLINES[cfg.policy]
         net = self.network
         shared = net is not None and net.shared
+        routed = self.agg_bytes_fn is not None
         up_cell = net.make_cell("up") if shared else None
         down_cell = net.make_cell("down") if shared else None
         heap: List[tuple] = []          # (time, seq, kind, payload)
@@ -590,10 +654,20 @@ class FederationClock:
         queue: List[Tuple[int, int]] = []     # (uid, round) at the server
         slot_free = [0.0] * slots
         buffer: Dict[int, int] = {}     # uid -> latest finished local round
+        # plane-routed aggregation state (agg_bytes_fn): in-flight commits
+        # whose adapter transfers travel the links/cells as first-class
+        # events; ``awaiting[u]`` counts adapter syncs a client must finish
+        # before entering another local round
+        agg_seq = itertools.count()
+        pending_aggs: Dict[int, dict] = {}
+        awaiting: Dict[int, int] = {}
+        agg_extra: Dict[tuple, float] = {}    # shared-cell tid -> extra secs
 
         def start_round(u, t):
             if started[u] >= self.rounds:
                 return
+            if awaiting.get(u, 0) > 0:
+                return      # adapter sync in flight; resumes when it lands
             if started[u] - acked[u] >= cfg.max_inflight_rounds:
                 blocked.add(u)
                 return
@@ -646,29 +720,104 @@ class FederationClock:
         def do_commit(t, forced):
             contribs = tuple(sorted(buffer))
             stal = tuple(self.version - model_version[u] for u in contribs)
-            overhead = self._commit(contribs, stal, on_commit, time=t,
-                                    forced=forced)
+            overhead, per = self._commit(contribs, stal, on_commit, time=t,
+                                         forced=forced)
             for u in contribs:
                 model_version[u] = self.version
                 acked[u] = finished[u]
-                release[u] = t + overhead
+                release[u] = t + (per.get(u, 0.0) if per is not None
+                                  else overhead)
             buffer.clear()
             for u in sorted(blocked):
                 if started[u] - acked[u] < cfg.max_inflight_rounds:
                     blocked.discard(u)
                     start_round(u, t)
 
+        # -- plane-routed aggregation: uploads -> merge -> downloads ---------
+        def begin_commit(t, forced):
+            """Snapshot the buffer and launch the contributors' adapter
+            uploads through the plane; the merge fires when the last one
+            lands (``merge_agg``)."""
+            aid = next(agg_seq)
+            contribs = tuple(sorted(buffer))
+            buffer.clear()
+            pending_aggs[aid] = {"contribs": contribs,
+                                 "left": set(contribs), "forced": forced}
+            for u in contribs:
+                awaiting[u] = awaiting.get(u, 0) + 1
+                b = float(self.agg_bytes_fn(u))
+                if shared:
+                    up_cell.add(t, ("aggup", aid, u), u, b)
+                else:
+                    push(net.uplink_finish(u, t, b), "aggup_done", (aid, u))
+            if shared:
+                sched_cell(up_cell, "up_net")
+
+        def agg_upload_landed(aid, u, t):
+            self.trace.append((t, "agg_uplink_done", u))
+            info = pending_aggs[aid]
+            info["left"].discard(u)
+            if not info["left"]:
+                merge_agg(aid, t)
+
+        def merge_agg(aid, t):
+            """All contributor uploads landed: fold the commit (driver model
+            math via on_commit, which may return per-uid EXTRA seconds —
+            migration shipping), then redistribute via the downlinks."""
+            info = pending_aggs.pop(aid)
+            contribs = info["contribs"]
+            stal = tuple(self.version - model_version[u] for u in contribs)
+            overhead, per = self._commit(contribs, stal, on_commit, time=t,
+                                         forced=info["forced"])
+            for u in contribs:
+                model_version[u] = self.version
+                acked[u] = finished[u]
+                extra = per.get(u, 0.0) if per is not None else overhead
+                b = float(self.agg_bytes_fn(u))
+                if shared:
+                    agg_extra[("aggdown", aid, u)] = extra
+                    down_cell.add(t, ("aggdown", aid, u), u, b)
+                else:
+                    push(net.downlink_finish(u, t, b) + extra,
+                         "aggdown_done", u)
+            if shared:
+                sched_cell(down_cell, "down_net")
+            # the merge refreshed acked credit; un-gate blocked clients
+            # (contributors still awaiting their download stay gated by
+            # start_round's awaiting guard)
+            for u in sorted(blocked):
+                if started[u] - acked[u] < cfg.max_inflight_rounds:
+                    blocked.discard(u)
+                    start_round(u, t)
+
+        def agg_download_landed(u, t):
+            self.trace.append((t, "agg_downlink_done", u))
+            awaiting[u] -= 1
+            if awaiting[u] > 0:
+                return
+            del awaiting[u]
+            release[u] = max(release[u], t)
+            if u in blocked:
+                if started[u] - acked[u] < cfg.max_inflight_rounds:
+                    blocked.discard(u)
+                    start_round(u, t)
+            elif started[u] == finished[u]:
+                start_round(u, t)
+
+        commit_fn = begin_commit if routed else do_commit
+
         for u in range(n):
             start_round(u, 0.0)
 
         while True:
             if not heap:
-                if buffer and (blocked
-                               or any(s < self.rounds for s in started)):
+                if buffer:
                     # tail flush: the remaining runners can no longer fill
                     # the buffer to k on their own — commit what's there so
-                    # blocked clients regain credit and finish their rounds
-                    do_commit(self.now, forced=True)
+                    # blocked clients regain credit and the tail of the
+                    # fleet reaches the global model (under plane-routed
+                    # aggregation the flush's transfers re-arm the heap)
+                    commit_fn(self.now, forced=True)
                     if heap:
                         continue
                 break
@@ -684,11 +833,15 @@ class FederationClock:
             elif kind == "up_net":
                 if payload != up_cell.version:
                     continue        # contention re-timed this prediction
-                done = up_cell.advance(t)
-                for tc, tid, uid in done:
-                    self.trace.append((tc, "uplink_done", uid))
-                    queue.append(tid)
-                if done:
+                arrived = False
+                for tc, tid, uid in up_cell.advance(t):
+                    if tid[0] == "aggup":     # adapter sync, not a job
+                        agg_upload_landed(tid[1], uid, tc)
+                    else:
+                        self.trace.append((tc, "uplink_done", uid))
+                        queue.append(tid)
+                        arrived = True
+                if arrived:
                     try_dispatch(t)
                 sched_cell(up_cell, "up_net")
             elif kind == "served":
@@ -719,36 +872,54 @@ class FederationClock:
                 if payload != down_cell.version:
                     continue        # contention re-timed this prediction
                 for tc, tid, uid in down_cell.advance(t):
+                    if tid[0] == "aggdown":   # adapter sync, not a job
+                        extra = agg_extra.pop(tid, 0.0)
+                        push(tc + extra, "aggdown_done", uid)
+                        continue
                     j = jobs[tid]
                     self.trace.append((tc, "downlink_done", uid))
                     self.trace.append((tc + j.t_b, "client_done", uid))
                     push(tc + j.t_b, "client_done", tid)
                 sched_cell(down_cell, "down_net")
+            elif kind == "aggup_done":
+                aid, u = payload
+                agg_upload_landed(aid, u, t)
+            elif kind == "aggdown_done":
+                agg_download_landed(payload, t)
             elif kind == "client_done":
                 u, rnd = payload
                 finished[u] += 1
                 free_at[u] = t
                 buffer[u] = rnd
                 if len(buffer) >= cfg.buffer_k:
-                    do_commit(t, forced=False)
+                    commit_fn(t, forced=False)
                 if u not in blocked and started[u] == rnd + 1:
                     start_round(u, t)
-        if buffer:
-            # final flush so the tail of the fleet reaches the global model
-            do_commit(self.now, forced=True)
 
     # ---------------------------------------------------------------- commit
     def _commit(self, contributors, staleness, on_commit, *, time=None,
-                forced=False) -> float:
+                forced=False) -> Tuple[float, Optional[Dict[int, float]]]:
+        """Record one aggregation commit.  ``on_commit`` may return a scalar
+        (seconds added for every contributor — the legacy redistribute
+        transfer) or a ``{uid: seconds}`` mapping (per-contributor charges:
+        plane-priced migrations, ragged redistributes; uids absent from the
+        mapping pay nothing).  Returns ``(scalar, per_uid)`` where scalar is
+        the mapping's max (what a sync barrier waits for) and per_uid is
+        None for scalar returns."""
         t = self.now if time is None else time
         self.version += 1
         ev = CommitEvent(time=t, version=self.version,
                          contributors=tuple(contributors),
                          staleness=tuple(staleness), forced=forced)
-        overhead = 0.0
+        overhead, per_uid = 0.0, None
         if on_commit is not None:
-            overhead = float(on_commit(ev) or 0.0)
+            ret = on_commit(ev)
+            if isinstance(ret, Mapping):
+                per_uid = {int(u): float(s) for u, s in ret.items()}
+                overhead = max(per_uid.values(), default=0.0)
+            elif ret is not None:
+                overhead = float(ret)
         ev = dataclasses.replace(ev, overhead=overhead)
         self.commits.append(ev)
         self.now = max(self.now, t + overhead)
-        return overhead
+        return overhead, per_uid

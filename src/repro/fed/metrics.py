@@ -105,6 +105,25 @@ def time_to_target(t: np.ndarray, v: np.ndarray, target: float, *,
     return float(t[hit[0]]) if hit.size else None
 
 
+def time_weighted_mean(t: np.ndarray, v: np.ndarray, t_end: float) -> float:
+    """Time-average of a right-continuous step signal: ``v[i]`` holds on
+    ``[t[i], t[i+1])`` and the last value holds until ``t_end``.  Used to
+    summarize control-plane trajectories (e.g. the mean assigned cut over a
+    run, weighting each assignment by how long it was in force)."""
+    t = np.asarray(t, np.float64)
+    v = np.asarray(v, np.float64)
+    if t.size == 0:
+        raise ValueError("need at least one sample")
+    if t_end < t[-1]:
+        raise ValueError("t_end must not precede the last sample")
+    edges = np.append(t, t_end)
+    durs = np.diff(edges)
+    total = float(durs.sum())
+    if total <= 0.0:
+        return float(v[-1])
+    return float((durs * v).sum() / total)
+
+
 def weighted_f1(pred: np.ndarray, gold: np.ndarray, n_classes: int | None = None) -> float:
     n_classes = n_classes or int(max(pred.max(), gold.max())) + 1
     total, acc = 0, 0.0

@@ -16,13 +16,15 @@ wall-clock and memory come from the §IV/§V analytical models (DESIGN.md §10).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.control import CONTROLLERS, ControlLoop
 from repro.core import aggregation as agg_lib
 from repro.core import lora as lora_lib
 from repro.core import memory_model, splitfl
@@ -32,8 +34,8 @@ from repro.core.cost_model import (DeviceProfile, LinkProfile, StepTimes,
 from repro.net import (ConstantLink, GilbertElliottLink, LinkModel,
                        NetworkPlane, TraceLink)
 from repro.core.scheduling import (ONLINE_DISCIPLINES, SCHEDULERS,
-                                   alg2_priorities, resolve_online,
-                                   resolve_order)
+                                   alg2_priorities, refresh_priorities,
+                                   resolve_online, resolve_order)
 from repro.data import ClassificationLoader, EmotionDataset, dirichlet_partition
 from repro.fed import metrics as M
 from repro.fed.devices import LINK, SERVER
@@ -103,8 +105,27 @@ class FedRunConfig:
     # channel; "custom" takes LinkModels via Simulator(links=...).
     link_model: str = "constant"         # constant | trace | gilbert | custom
     link_traces: Optional[Sequence] = None  # per-client (breakpoints, rates)
+    #                                      tuples OR paths to bandwidth CSVs
+    #                                      (TraceLink.from_csv)
     shared_medium: bool = False          # concurrent transfers split a cell
     medium_capacity_mbps: Optional[float] = None  # cell capacity per direction
+    # -- adaptive control plane (repro/control; needs engine='event') ---------
+    # "static" freezes the setup-phase assignment (bit-exact legacy parity);
+    # "periodic" re-solves the cut assignment every resolve_every commits;
+    # "reactive" re-solves when a client's live link-rate estimate leaves
+    # its hysteresis band or its memory headroom goes negative.  Accepted
+    # re-assignments ship prefix weights + adapters through the network
+    # plane and are only taken when the predicted gain pays that bill.
+    controller: str = "static"           # static | periodic | reactive
+    resolve_every: int = 1               # periodic-only: commits per re-solve
+    hysteresis: Optional[float] = None   # reactive-only band (default 0.25)
+    # -- aggregation transport ------------------------------------------------
+    # "nominal" keeps the legacy scalar-link adapter-sync charge (2x the
+    # slowest upload at the nominal rate); "plane" routes every
+    # contributor's adapter sync through the network plane — per-client
+    # rates, live fades, and shared-medium contention with in-flight
+    # activation transfers all apply (event engine only).
+    agg_transport: str = "nominal"       # nominal | plane
 
 
 def validate_run_config(run: FedRunConfig, n_clients: Optional[int] = None) -> None:
@@ -125,6 +146,10 @@ def validate_run_config(run: FedRunConfig, n_clients: Optional[int] = None) -> N
         raise KeyError(f"unknown aggregation policy {run.agg_policy!r}")
     if run.link_model not in LINK_MODELS:
         raise KeyError(f"unknown link model {run.link_model!r}")
+    if run.controller not in CONTROLLERS:
+        raise KeyError(f"unknown controller {run.controller!r}")
+    if run.agg_transport not in ("nominal", "plane"):
+        raise KeyError(f"unknown aggregation transport {run.agg_transport!r}")
     # ---- scalar ranges ----
     if run.rounds < 1 or run.agg_interval < 1 or run.eval_every < 1:
         raise ValueError("rounds, agg_interval and eval_every must be >= 1")
@@ -153,6 +178,26 @@ def validate_run_config(run: FedRunConfig, n_clients: Optional[int] = None) -> N
             raise ValueError("agg_buffer_k must be >= 1 when set")
         if n_clients is not None and run.agg_buffer_k > n_clients:
             raise ValueError("agg_buffer_k cannot exceed the fleet size")
+    # ---- control-plane knob ownership ----
+    if run.resolve_every < 1:
+        raise ValueError("resolve_every must be >= 1")
+    if run.controller != "periodic" and run.resolve_every != 1:
+        raise ValueError("resolve_every is the PERIODIC controller's "
+                         "cadence; other controllers would silently "
+                         "ignore it")
+    if run.hysteresis is not None:
+        if run.controller != "reactive":
+            raise ValueError("hysteresis is only read by "
+                             "controller='reactive'")
+        if run.hysteresis <= 0:
+            raise ValueError("hysteresis must be > 0 when set")
+    if run.engine == "analytic" and run.controller != "static":
+        raise ValueError("online re-assignment observes telemetry at the "
+                         "event clock's commit boundaries; the closed form "
+                         "has none — set engine='event'")
+    if run.engine == "analytic" and run.agg_transport != "nominal":
+        raise ValueError("plane-routed aggregation transfers are integrated "
+                         "by the event engines; set engine='event'")
     # ---- network-plane knob ownership ----
     if (run.link_model == "trace") != (run.link_traces is not None):
         raise ValueError("link_traces and link_model='trace' go together: "
@@ -302,6 +347,19 @@ class Simulator:
                               LinkProfile(self.network.nominal_mbps(u)),
                               run.batch_size, run.seq_len)
             for u, (cut, dev) in enumerate(zip(self.cuts, self.devices))]
+        # adaptive control plane: shares the LIVE self.cuts list, so an
+        # accepted re-assignment is immediately visible to the wave planner,
+        # the per-round times and the aggregation byte accounting.  The
+        # static controller attaches nothing at all — the legacy code path
+        # runs untouched (regression-tested bit-for-bit).
+        self._control: Optional[ControlLoop] = None
+        if run.controller != "static":
+            self._control = ControlLoop(
+                cfg, self.devices, server, self.network, self.cuts,
+                batch=run.batch_size, seq_len=run.seq_len,
+                controller=run.controller, resolve_every=run.resolve_every,
+                hysteresis=run.hysteresis, scheduler=run.scheduler,
+                max_cut=cfg.n_layers - 1)
         self.history: List[RoundRecord] = []
         self.sim_clock = 0.0
         # beyond-paper transport/participation state
@@ -344,7 +402,9 @@ class Simulator:
         elif run.link_model == "constant":
             ups = [ConstantLink(self.link.rate_mbps) for _ in range(self.u)]
         elif run.link_model == "trace":
-            ups = [TraceLink(bp, rates) for bp, rates in run.link_traces]
+            # entries are (breakpoints, rates) tuples or bandwidth-CSV paths
+            ups = [TraceLink.from_csv(tr) if isinstance(tr, (str, Path))
+                   else TraceLink(tr[0], tr[1]) for tr in run.link_traces]
         else:   # gilbert
             base = self.link.rate_mbps
             ups = [GilbertElliottLink(base, base * GE_BAD_FRACTION,
@@ -625,7 +685,15 @@ class Simulator:
             pri = None                   # discipline / fixed order
         else:
             policy, needs_pri = resolve_online(run.scheduler)
-            pri = alg2_priorities(self.cuts, tfl) if needs_pri else None
+            if not needs_pri:
+                pri = None
+            elif self._control is not None:
+                # the control loop refreshes this list IN PLACE on every
+                # accepted re-assignment, so the online priority discipline
+                # orders by the live N_c/C ratios
+                pri = self._control.pri
+            else:
+                pri = alg2_priorities(self.cuts, tfl)
         ccfg = ClockConfig(policy=policy, slots=run.server_slots,
                            cohort_chunk=max(1, int(run.cohort_chunk)),
                            chunk_efficiency=run.chunk_efficiency,
@@ -634,9 +702,19 @@ class Simulator:
                            agg_interval=run.agg_interval,
                            buffer_k=self._resolved_buffer_k(),
                            max_inflight_rounds=run.max_inflight_rounds)
+        agg_bytes_fn = None
+        if run.agg_transport == "plane":
+            # live cuts: a migrated client ships its NEW adapter payload.
+            # With a control loop attached, use ITS accounting so the DES
+            # benches and the Simulator charge identical payloads.
+            if self._control is not None:
+                agg_bytes_fn = self._control.agg_bytes
+            else:
+                agg_bytes_fn = lambda u: lora_upload_bytes(self.cfg, self.cuts[u])  # noqa: E731
         clock = FederationClock(self.u, run.rounds, ccfg,
                                 times_fn=self._async_times, priorities=pri,
-                                network=self.network)
+                                network=self.network,
+                                agg_bytes_fn=agg_bytes_fn)
         self._clock = clock
         self._wave_losses = []
         if run.agg_policy == "sync":
@@ -718,15 +796,38 @@ class Simulator:
         self.history.append(rec)
         return not self._maybe_eval(rnd, rec, verbose)
 
-    def _commit_sync(self, ev) -> float:
+    def _commit_sync(self, ev) -> Union[float, Dict[int, float]]:
         """Barrier aggregation (Alg. 1 l.17-30, Eqs. 5-9) over the WHOLE
         fleet, as in the paper — returns the adapter up+download transfer
-        time.  Shared by the analytic round loop and the sync clock."""
+        time (scalar, or a per-client mapping once migrations apply; under
+        ``agg_transport='plane'`` the clock routes the transfers itself and
+        only the migration charges are returned).  Shared by the analytic
+        round loop and the sync clock.
+
+        A control-plane decision lands HERE, at the barrier commit: the
+        aggregate is computed under the OLD cuts (that is what the clients
+        trained), then cuts may move, then the aggregate is redistributed
+        re-split at the NEW cuts."""
         servers_split = [lora_lib.split_lora(self.server_lora[u],
                                              self.cuts[u])[1]
                          for u in range(self.u)]
         new_c, new_s, agg_full = agg_lib.aggregation_round(
             self.client_lora, servers_split, self.cuts, self.data_sizes)
+        # the UPLOAD leg shipped the adapters the clients actually trained —
+        # price it at the PRE-migration cuts, before any decision applies
+        up_old = max(self.link.transfer_s(lora_upload_bytes(self.cfg, cut))
+                     for cut in self.cuts)
+        mig: Dict[int, float] = {}
+        changes: Dict[int, Tuple[int, int]] = {}
+        if self._control is not None and ev is not None:
+            changes, mig = self._control.decide(ev.time,
+                                                list(range(self.u)),
+                                                ev.version)
+            if changes:
+                self._apply_cut_changes(changes)
+                for u in changes:     # re-split the aggregate at the new cut
+                    new_c[u], new_s[u] = lora_lib.split_lora(agg_full,
+                                                             self.cuts[u])
         self.client_lora = new_c
         self.server_lora = [
             lora_lib.embed_in_full_shape(s, self.lora_spec, cut, "server")
@@ -743,10 +844,18 @@ class Simulator:
         self.client_opt = [self.opt.init(c) for c in self.client_lora]
         self.server_opt = [self.opt.init({"lora": s, "head": self.heads[u]})
                            for u, s in enumerate(self.server_lora)]
-        # aggregation upload/download time
-        up = max(self.link.transfer_s(lora_upload_bytes(self.cfg, cut))
-                 for cut in self.cuts)
-        return 2 * up
+        if self.run.agg_transport == "plane":
+            # the clock ships the adapters through the plane; we only add
+            # the migration charges (per-client extra past each download)
+            return mig
+        # aggregation transfer at the scalar nominal link: upload at the
+        # old cuts, download (the redistribute) at the new ones
+        if changes:
+            down_new = max(self.link.transfer_s(
+                lora_upload_bytes(self.cfg, cut)) for cut in self.cuts)
+            return {u: up_old + down_new + mig.get(u, 0.0)
+                    for u in range(self.u)}
+        return 2 * up_old
 
     def _commit_async(self, ev, verbose: bool = False) -> float:
         """Async commit: fold the buffered contributors into the standing
@@ -773,6 +882,22 @@ class Simulator:
         self._global_head = agg_lib.aggregate_full_weighted(
             [self._global_head] + [self.heads[u] for u in contribs],
             [anchor] + w)
+        # control decision: contributors stand at this commit boundary, but
+        # only those with NO in-flight local round may migrate (an in-flight
+        # round pulled client state shaped by the old cut).  The upload leg
+        # shipped OLD-cut adapters — price it before the decision applies.
+        up_old = max(self.link.transfer_s(lora_upload_bytes(self.cfg,
+                                                            self.cuts[u]))
+                     for u in contribs)
+        mig: Dict[int, float] = {}
+        changes: Dict[int, Tuple[int, int]] = {}
+        if self._control is not None:
+            inflight = {u for (u, _r) in self._round_pull}
+            changes, mig = self._control.decide(
+                ev.time, contribs, ev.version,
+                eligible=[u for u in contribs if u not in inflight])
+            if changes:
+                self._apply_cut_changes(changes)
         for u in contribs:
             c, s = lora_lib.split_lora(self._global_full, self.cuts[u])
             self.client_lora[u] = c
@@ -783,14 +908,24 @@ class Simulator:
             self.server_opt[u] = self.opt.init(
                 {"lora": self.server_lora[u], "head": self._global_head})
             self._client_version[u] += 1   # in-flight rounds of u now race
-        up = max(self.link.transfer_s(lora_upload_bytes(self.cfg,
-                                                        self.cuts[u]))
-                 for u in contribs)
-        overhead = 2 * up
+        if self.run.agg_transport == "plane":
+            # the clock routes the adapter syncs; migrations ride as
+            # per-client extras past each contributor's download
+            ret: Union[float, Dict[int, float]] = mig
+            effective = max(mig.values(), default=0.0)
+        elif changes:
+            # nominal charge: upload at the old cuts, redistribute at the new
+            down_new = max(self.link.transfer_s(
+                lora_upload_bytes(self.cfg, self.cuts[u])) for u in contribs)
+            ret = {u: up_old + down_new + mig.get(u, 0.0) for u in contribs}
+            effective = max(ret.values())
+        else:
+            ret = 2 * up_old
+            effective = ret
         # one history record per commit (wall-clock-indexed, NOT per round)
         losses, self._wave_losses = self._wave_losses, []
         mean_loss = float(np.mean(losses)) if losses else float("nan")
-        self.sim_clock = ev.time + overhead
+        self.sim_clock = ev.time + effective
         rec = RoundRecord(len(self.history), self.sim_clock, mean_loss)
         self.history.append(rec)
         if len(self.history) % run.eval_every == 0:
@@ -801,7 +936,36 @@ class Simulator:
                       f"loss={rec.mean_loss:.4f} acc={rec.accuracy:.4f} "
                       f"f1={rec.f1:.4f} "
                       f"stale={float(np.mean(ev.staleness)):.2f}")
-        return overhead
+        return ret
+
+    # ------------------------------------------------------- control plane
+    @property
+    def control_events(self):
+        """ReassignEvents recorded by the control loop (empty when static)."""
+        return [] if self._control is None else self._control.decisions
+
+    def _apply_cut_changes(self, changes: Dict[int, Tuple[int, int]]) -> None:
+        """Real-math side of a cut migration (commit boundaries only): the
+        live ``self.cuts`` entries are already updated by the control loop;
+        here the client's frozen prefix is re-sliced, jitted steps for the
+        new cut are ensured, and the analytic Eq. 10 terms are refreshed.
+        Adapters and optimizer states are NOT touched — the calling commit
+        body redistributes them from the aggregated global at the new cut,
+        which is exactly the same operation a commit performs anyway."""
+        run = self.run
+        for u, (_old, new) in changes.items():
+            pc = dict(self.params)
+            pc["layers"] = lora_lib.slice_stack(self.params["layers"], 0, new)
+            self.client_params[u] = pc
+            if new not in self._srv_steps:
+                self._srv_steps[new] = splitfl.make_server_step_cls(
+                    self.model, self.opt, path="sliced", static_cut=new)
+                self._cli_steps[new] = splitfl.make_client_step(
+                    self.model, self.opt, new, path="sliced")
+            self.times[u] = client_step_times(
+                self.cfg, new, self.devices[u], self.server_dev,
+                LinkProfile(self.network.nominal_mbps(u)),
+                run.batch_size, run.seq_len)
 
     def _maybe_eval(self, rnd: int, rec: RoundRecord, verbose: bool) -> bool:
         """Shared per-round eval/early-stop; True means stop training."""
@@ -876,6 +1040,7 @@ class Simulator:
         return {
             "round": np.int64(len(self.history)),
             "sim_clock": np.float64(self.sim_clock),
+            "cuts": np.asarray(self.cuts, np.int64),
             "client_lora": self.client_lora,
             "server_lora": self.server_lora,
             "heads": self.heads,
@@ -893,6 +1058,19 @@ class Simulator:
     def load_state_dict(self, st: dict) -> int:
         from repro.optim import AdamWState
         self.sim_clock = float(st["sim_clock"])
+        if "cuts" in st:    # a control plane may have migrated cuts mid-run
+            saved = [int(c) for c in np.asarray(st["cuts"])]
+            changes = {u: (self.cuts[u], c) for u, c in enumerate(saved)
+                       if c != self.cuts[u]}
+            if changes:
+                for u, (_, c) in changes.items():
+                    self.cuts[u] = c      # in place: shared with the loop
+                self._apply_cut_changes(changes)
+                if self._control is not None:
+                    # the online priority discipline must order by the
+                    # RESTORED cuts, not the setup-phase ratios
+                    refresh_priorities(self._control.pri, self.cuts,
+                                       [d.tflops for d in self.devices])
         self.client_lora = list(st["client_lora"])
         self.server_lora = list(st["server_lora"])
         self.heads = list(st["heads"])

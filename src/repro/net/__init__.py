@@ -1,6 +1,8 @@
-from repro.net.links import (ConstantLink, GilbertElliottLink, LinkModel,
-                             TraceLink)
+from repro.net.links import (BUNDLED_TRACES, ConstantLink,
+                             GilbertElliottLink, LinkModel, TraceLink,
+                             bundled_trace, bundled_trace_path)
 from repro.net.plane import NetworkPlane, SharedCell, shared_finish_times
 
-__all__ = ["ConstantLink", "GilbertElliottLink", "LinkModel", "NetworkPlane",
-           "SharedCell", "TraceLink", "shared_finish_times"]
+__all__ = ["BUNDLED_TRACES", "ConstantLink", "GilbertElliottLink",
+           "LinkModel", "NetworkPlane", "SharedCell", "TraceLink",
+           "bundled_trace", "bundled_trace_path", "shared_finish_times"]

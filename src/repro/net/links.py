@@ -26,12 +26,35 @@ are seconds on the simulator's global clock.
 from __future__ import annotations
 
 import bisect
+import csv
 import math
-from typing import List, Sequence
+import os
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["ConstantLink", "GilbertElliottLink", "LinkModel", "TraceLink"]
+__all__ = ["BUNDLED_TRACES", "ConstantLink", "GilbertElliottLink",
+           "LinkModel", "TraceLink", "bundled_trace", "bundled_trace_path"]
+
+#: bandwidth CSVs shipped with the package (measured-style mobile traces)
+_TRACES_DIR = os.path.join(os.path.dirname(__file__), "traces")
+BUNDLED_TRACES = ("lte_4g5g",)
+
+
+def bundled_trace_path(name: str = "lte_4g5g") -> str:
+    """Filesystem path of a bundled bandwidth trace CSV."""
+    if name not in BUNDLED_TRACES:
+        raise KeyError(f"unknown bundled trace {name!r} "
+                       f"(have {BUNDLED_TRACES})")
+    return os.path.join(_TRACES_DIR, f"{name}.csv")
+
+
+def bundled_trace(name: str = "lte_4g5g") -> Tuple[List[float], List[float]]:
+    """Load a bundled trace as ``(breakpoints, rates_mbps)`` lists — the
+    form ``FedRunConfig.link_traces`` accepts, convenient for deriving
+    per-client variants (time-shifts, scaling) before building links."""
+    link = TraceLink.from_csv(bundled_trace_path(name))
+    return list(link.breakpoints), list(link.rates_mbps)
 
 
 class LinkModel:
@@ -143,6 +166,38 @@ class TraceLink(LinkModel):
             raise ValueError("the final trace rate must be > 0 "
                              "(transfers must terminate)")
         self.breakpoints, self.rates_mbps = bp, rt
+
+    @classmethod
+    def from_csv(cls, path, *, time_col: int = 0, rate_col: int = 1,
+                 rate_scale: float = 1.0,
+                 delimiter: str = ",") -> "TraceLink":
+        """Build a TraceLink from a measured bandwidth trace CSV.
+
+        Rows are ``timestamp, rate`` (``time_col``/``rate_col`` pick the
+        columns from wider files); a non-numeric header row is skipped.
+        Timestamps are seconds, re-based so the trace starts at t=0 (most
+        measured datasets start at an arbitrary epoch); rates are Mbps
+        after multiplying by ``rate_scale`` (e.g. 8e-6 for bytes/s data).
+        """
+        times: List[float] = []
+        rates: List[float] = []
+        with open(os.fspath(path), newline="") as f:
+            for row in csv.reader(f, delimiter=delimiter):
+                if not row or not row[0].strip() or row[0].lstrip().startswith("#"):
+                    continue
+                try:
+                    t = float(row[time_col])
+                    r = float(row[rate_col])
+                except (ValueError, IndexError):
+                    if not times:   # header row
+                        continue
+                    raise ValueError(f"malformed trace row {row!r} in {path}")
+                times.append(t)
+                rates.append(r * rate_scale)
+        if not times:
+            raise ValueError(f"no trace rows in {path}")
+        t0 = times[0]
+        return cls([t - t0 for t in times], rates)
 
     def _segment(self, t: float) -> int:
         return max(bisect.bisect_right(self.breakpoints, t) - 1, 0)

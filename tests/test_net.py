@@ -65,6 +65,41 @@ def test_trace_integration_hand_computed():
         TraceLink([0.0, 1.0, 1.0], [1.0, 1.0, 1.0])  # strictly increasing
 
 
+def test_trace_from_csv_and_bundled(tmp_path):
+    p = tmp_path / "bw.csv"
+    p.write_text("# comment\ntime_s,rate_mbps\n10.0,100.0\n12.5,50.0\n"
+                 "15.0,200.0\n")
+    link = TraceLink.from_csv(p)
+    # timestamps re-based to t=0; rates verbatim
+    assert link.breakpoints == [0.0, 2.5, 5.0]
+    assert link.rates_mbps == [100.0, 50.0, 200.0]
+    scaled = TraceLink.from_csv(p, rate_scale=0.5)
+    assert scaled.rates_mbps == [50.0, 25.0, 100.0]
+    wide = tmp_path / "wide.csv"
+    wide.write_text("0,x,80.0\n5,y,40.0\n")
+    assert TraceLink.from_csv(wide, rate_col=2).rates_mbps == [80.0, 40.0]
+    empty = tmp_path / "empty.csv"
+    empty.write_text("time,rate\n")
+    with pytest.raises(ValueError):
+        TraceLink.from_csv(empty)
+    from repro.net import BUNDLED_TRACES, bundled_trace, bundled_trace_path
+    bp, rates = bundled_trace(BUNDLED_TRACES[0])
+    assert bp[0] == 0.0 and len(bp) == len(rates) >= 60
+    assert min(rates) > 0 and max(rates) > 100.0      # the 5G burst
+    link = TraceLink.from_csv(bundled_trace_path())
+    assert link.finish_time(0.0, 1e6) > 0.0
+    with pytest.raises(KeyError):
+        bundled_trace_path("nope")
+
+
+def test_simulator_link_traces_accept_csv_paths():
+    """FedRunConfig.link_traces entries may be bandwidth-CSV paths."""
+    from repro.net import bundled_trace_path
+    run = FedRunConfig(engine="event", link_model="trace",
+                       link_traces=[bundled_trace_path()] * 6)
+    validate_run_config(run, n_clients=6)
+
+
 def test_gilbert_elliott_deterministic_under_seed():
     kw = dict(p_gb=0.3, p_bg=0.4, dwell_s=0.5)
     a = GilbertElliottLink(100.0, 10.0, seed=7, **kw)

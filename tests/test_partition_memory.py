@@ -1,0 +1,121 @@
+"""Coverage for core/memory_model and core/partition (ISSUE-4 satellite):
+Table-I calibration bounds, client_memory monotonicity in cut/batch/seq,
+max_cut_for_memory edge cases (zero budget, everything fits), the shared
+feasibility oracle, and the precomputed-ModelBytes fast path."""
+import dataclasses
+
+import pytest
+
+from repro.configs import REGISTRY
+from repro.core.memory_model import (client_memory, model_bytes,
+                                     server_memory)
+from repro.core.partition import (assign_cuts, cut_bounds, feasible_cut,
+                                  max_cut_for_compute, max_cut_for_memory)
+from repro.fed.devices import PAPER_CLIENTS, PAPER_CUTS
+
+CFG = REGISTRY["bert-base"]
+MB = model_bytes(CFG)
+GB = 1024 ** 3
+
+
+# -- Table-I calibration bounds ----------------------------------------------
+
+def test_table1_absolute_calibration_bounds():
+    """The paper's Table I (BERT-base, B=16, S=128): server memory for the
+    three schemes.  The analytic model was calibrated to land within a
+    modest band of the measurements — pin the band so a regression in the
+    activation accounting is caught, not just the ordering."""
+    mem = {s: server_memory(CFG, s, list(PAPER_CUTS), 16, 128).total / GB
+           for s in ("ours", "sfl", "sl")}
+    # calibrated values: ours ~1.34 GB, sfl ~6.6 GB (6 parallel submodels),
+    # sl ~1.2 GB — pin each within +/-15% so a drift in ACT_FACTOR_BLOCK or
+    # the eval_shape accounting is caught, not just the ordering
+    assert 1.34 * 0.85 < mem["ours"] < 1.34 * 1.15, mem
+    assert 6.58 * 0.85 < mem["sfl"] < 6.58 * 1.15, mem
+    assert 1.21 * 0.85 < mem["sl"] < 1.21 * 1.15, mem
+    assert mem["sl"] < mem["ours"] < mem["sfl"]
+
+
+def test_client_memory_within_paper_devices():
+    """Every §V device holds its assigned prefix in half its RAM."""
+    for dev, cut in zip(PAPER_CLIENTS, PAPER_CUTS):
+        need = client_memory(CFG, cut, 16, 128)
+        assert need <= dev.mem_gb * GB * 0.5, (dev.name, cut)
+
+
+# -- client_memory monotonicity ----------------------------------------------
+
+def test_client_memory_monotone_in_cut_batch_seq():
+    base = client_memory(CFG, 2, 16, 128)
+    for cut in range(1, CFG.n_layers):
+        assert client_memory(CFG, cut + 1, 16, 128) > \
+               client_memory(CFG, cut, 16, 128)
+    assert client_memory(CFG, 2, 32, 128) > base
+    assert client_memory(CFG, 2, 16, 256) > base
+    # dtype width scales the activation share
+    assert client_memory(CFG, 2, 16, 128, dtype_bytes=2) < base
+
+
+def test_client_memory_precomputed_mb_fast_path():
+    assert client_memory(CFG, 3, 16, 128, mb=MB) == \
+           client_memory(CFG, 3, 16, 128)
+
+
+# -- max_cut_for_memory edge cases -------------------------------------------
+
+def test_max_cut_zero_budget():
+    broke = dataclasses.replace(PAPER_CLIENTS[0], mem_gb=0.0)
+    assert max_cut_for_memory(CFG, broke, 16, 128) == 0
+    assert max_cut_for_memory(CFG, PAPER_CLIENTS[0], 16, 128,
+                              mem_fraction=0.0) == 0
+
+
+def test_max_cut_all_layers_fit():
+    datacenter = dataclasses.replace(PAPER_CLIENTS[0], mem_gb=4096.0)
+    assert max_cut_for_memory(CFG, datacenter, 16, 128) == CFG.n_layers
+
+
+def test_max_cut_exact_boundary():
+    """A budget exactly at the k-layer footprint admits k but not k+1."""
+    need3 = client_memory(CFG, 3, 16, 128)
+    dev = dataclasses.replace(PAPER_CLIENTS[0], mem_gb=need3 / GB)
+    assert max_cut_for_memory(CFG, dev, 16, 128, mem_fraction=1.0) == 3
+
+
+def test_max_cut_for_compute_edges():
+    assert max_cut_for_compute(CFG, PAPER_CLIENTS[0], 16, 128,
+                               latency_budget_s=0.0) == 0
+    fast = dataclasses.replace(PAPER_CLIENTS[0], tflops=1e6)
+    assert max_cut_for_compute(CFG, fast, 16, 128) == CFG.n_layers
+
+
+# -- feasibility oracle + assignment ------------------------------------------
+
+def test_feasible_cut_is_min_of_both_axes():
+    for dev in PAPER_CLIENTS:
+        assert feasible_cut(CFG, dev, 16, 128) == min(
+            max_cut_for_memory(CFG, dev, 16, 128),
+            max_cut_for_compute(CFG, dev, 16, 128))
+        assert feasible_cut(CFG, dev, 16, 128, mb=MB) == \
+               feasible_cut(CFG, dev, 16, 128)
+
+
+def test_cut_bounds_clamps_and_floors():
+    lo, hi = cut_bounds(CFG, PAPER_CLIENTS[-1], 16, 128, min_cut=1,
+                        max_cut=4)
+    assert lo == 1 and 1 <= hi <= 4
+    broke = dataclasses.replace(PAPER_CLIENTS[0], mem_gb=0.0)
+    lo, hi = cut_bounds(CFG, broke, 16, 128, min_cut=1, max_cut=4)
+    assert (lo, hi) == (1, 1)      # floor guarantee: one layer regardless
+
+
+def test_assign_cuts_matches_bounds():
+    cuts = assign_cuts(CFG, PAPER_CLIENTS, 16, 128, max_cut=4)
+    for dev, c in zip(PAPER_CLIENTS, cuts):
+        _, hi = cut_bounds(CFG, dev, 16, 128, max_cut=4)
+        assert c == hi
+
+
+def test_assign_cuts_respects_explicit_window():
+    cuts = assign_cuts(CFG, PAPER_CLIENTS, 16, 128, min_cut=2, max_cut=3)
+    assert all(2 <= c <= 3 for c in cuts)
