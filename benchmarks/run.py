@@ -25,11 +25,47 @@ import sys
 import time
 
 
+def _git_sha() -> str:
+    """HEAD commit of the working tree (with a -dirty suffix when local
+    edits would make the number non-reproducible); "unknown" outside git."""
+    import subprocess
+    try:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        sha = subprocess.run(["git", "rev-parse", "HEAD"], cwd=root,
+                             capture_output=True, text=True, timeout=10,
+                             check=True).stdout.strip()
+        dirty = subprocess.run(["git", "status", "--porcelain"], cwd=root,
+                               capture_output=True, text=True,
+                               timeout=10).stdout.strip()
+        return sha + ("-dirty" if dirty else "")
+    except Exception:
+        return "unknown"
+
+
+def _config_hash() -> str:
+    """Digest of the benchmark harness sources: two artifacts compare
+    apples-to-apples iff their config hashes match (any change to what a
+    bench measures changes the hash)."""
+    import hashlib
+    h = hashlib.sha256()
+    bench_dir = os.path.dirname(os.path.abspath(__file__))
+    for name in sorted(os.listdir(bench_dir)):
+        if name.endswith(".py"):
+            h.update(name.encode())
+            with open(os.path.join(bench_dir, name), "rb") as f:
+                h.update(f.read())
+    return h.hexdigest()[:16]
+
+
 def _environment_info() -> dict:
-    """Backend/device fingerprint stamped into every bench artifact."""
+    """Provenance fingerprint stamped into every bench artifact: backend/
+    device info, git SHA and harness config hash, so the BENCH_*.json
+    trajectory is comparable across commits."""
     info = {
         "python": platform.python_version(),
         "platform": platform.platform(),
+        "git_sha": _git_sha(),
+        "config_hash": _config_hash(),
     }
     try:
         import jax

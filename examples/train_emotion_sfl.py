@@ -82,9 +82,27 @@ def main():
                     default="nominal",
                     help="route adapter syncs through the network plane "
                     "instead of the scalar nominal link")
+    # -- mid-flight checkpoint / resume (docs/checkpointing.md) ---------------
+    ap.add_argument("--snapshot-every", type=float, default=None,
+                    help="write a full mid-flight snapshot every N SIMULATED "
+                    "seconds (needs --snapshot-dir and --engine event)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="rotated snapshot directory (atomic writes)")
+    ap.add_argument("--resume-from", default=None,
+                    help="resume from a snapshot file or directory written "
+                    "by an identically configured run")
+    ap.add_argument("--kill-at", type=float, default=None,
+                    help="fault injection: preempt the server at this "
+                    "simulated instant (resume later with --resume-from)")
     args = ap.parse_args()
     if args.agg_interval is None:
         args.agg_interval = 5 if args.agg_policy == "sync" else 1
+    if (args.snapshot_dir or args.resume_from or args.kill_at) \
+            and len(args.schemes.split(",")) > 1:
+        # entries would share one snapshot directory: a later entry's
+        # rotation deletes an earlier preempted entry's snapshots
+        ap.error("--snapshot-dir/--resume-from/--kill-at work with a "
+                 "single --schemes entry")
 
     if args.full:
         cfg = REGISTRY["bert-base"]
@@ -150,7 +168,11 @@ def main():
                            controller=args.controller,
                            resolve_every=args.resolve_every,
                            hysteresis=args.hysteresis,
-                           agg_transport=args.agg_transport)
+                           agg_transport=args.agg_transport,
+                           snapshot_every=args.snapshot_every,
+                           snapshot_dir=args.snapshot_dir,
+                           resume_from=args.resume_from,
+                           preempt_at=args.kill_at)
         try:   # surface the FedRunConfig validation matrix as argparse errors
             validate_run_config(run, len(PAPER_CLIENTS))
         except (KeyError, ValueError) as e:
@@ -161,6 +183,11 @@ def main():
         sim = Simulator(cfg, PAPER_CLIENTS, cuts, train, test, run,
                         links=links)
         sim.run_training(verbose=True)
+        if sim.clock_result is not None and sim.clock_result.preempted:
+            print(f"== {entry}: PREEMPTED at t={sim.sim_clock:.3f}s "
+                  f"(snapshots in {run.snapshot_dir}; rerun with "
+                  f"--resume-from to continue)\n")
+            continue
         acc, f1 = sim.evaluate()
         mem = sim.server_memory_report()
         print(f"== {entry} [{args.engine}/{args.agg_policy}]: "

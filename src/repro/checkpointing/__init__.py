@@ -1,4 +1,10 @@
-from repro.checkpointing.checkpoint import load, save
-from repro.checkpointing.manager import CheckpointManager
+"""Checkpointing: pickle-free pytree serialization (``checkpoint``),
+rotation/retention/resume policy (``manager``), and the periodic
+mid-flight snapshot policy the federation drivers attach to the event
+clock (``PeriodicSnapshotter``; see docs/checkpointing.md)."""
+from repro.checkpointing.checkpoint import load, pack_json, save, unpack_json
+from repro.checkpointing.manager import (CheckpointManager,
+                                         PeriodicSnapshotter, load_snapshot)
 
-__all__ = ["CheckpointManager", "load", "save"]
+__all__ = ["CheckpointManager", "PeriodicSnapshotter", "load",
+           "load_snapshot", "pack_json", "save", "unpack_json"]

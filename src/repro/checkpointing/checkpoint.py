@@ -1,8 +1,16 @@
 """Pytree checkpointing: leaves -> msgpack of raw ndarray buffers
 (zstd-compressed when ``zstandard`` is installed), structure -> path-keyed
-(no pickle; robust across sessions)."""
+(no pickle; robust across sessions).
+
+Non-array state (event heaps, RNG stream positions, commit logs — the
+discrete-event side of a mid-flight snapshot) rides the same pytree
+format as a JSON blob packed into a uint8 leaf: ``pack_json`` /
+``unpack_json``.  CPython's JSON float repr round-trips bit-exactly, so
+the DES timeline survives a save/load unchanged.
+"""
 from __future__ import annotations
 
+import json
 import os
 from typing import Any
 
@@ -35,6 +43,25 @@ def _decompress(blob: bytes) -> bytes:
                 "not installed (pip install repro[zstd])")
         return zstandard.ZstdDecompressor().decompress(blob)
     return blob
+
+
+def pack_json(obj: Any) -> np.ndarray:
+    """Encode a JSON-able object as a uint8 ndarray leaf.
+
+    Floats round-trip bit-exactly (CPython ``repr`` is shortest-exact and
+    ``json`` uses it); NaN/Infinity use the Python-extended literals, which
+    ``unpack_json`` reads back.  Use for discrete-event/bookkeeping state
+    that must live inside an array-leaf pytree checkpoint.
+
+    >>> int(unpack_json(pack_json({"t": 1.5}))["t"] * 2)
+    3
+    """
+    return np.frombuffer(json.dumps(obj).encode("utf-8"), np.uint8).copy()
+
+
+def unpack_json(arr: Any) -> Any:
+    """Inverse of :func:`pack_json` (accepts np or jax uint8 arrays)."""
+    return json.loads(np.asarray(arr).tobytes().decode("utf-8"))
 
 
 def codec() -> str:
@@ -105,5 +132,11 @@ def load(path: str, as_jax: bool = True) -> PyTree:
     for k, rec in payload.items():
         arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))
         arr = arr.reshape(rec["shape"])
-        flat[k] = jnp.asarray(arr) if as_jax else arr
+        # 64-bit leaves stay numpy: jnp.asarray silently truncates them to
+        # 32 bits when jax_enable_x64 is off, which would corrupt the
+        # bit-exact bookkeeping state (event timestamps, RNG words) a
+        # mid-flight snapshot carries next to the float32 model weights
+        if as_jax and arr.dtype not in (np.float64, np.int64, np.uint64):
+            arr = jnp.asarray(arr)
+        flat[k] = arr
     return _unflatten(flat)

@@ -2,6 +2,13 @@
 
 Used by the federated simulator (whole-fleet adapter/optimizer state) and
 the central trainer. Files are the zstd-msgpack pytrees of checkpoint.py.
+
+``PeriodicSnapshotter`` layers a simulated-time snapshot cadence on top:
+the federation drivers call ``maybe_save(now, state_fn)`` from the clock's
+tick callback, and a snapshot is written whenever ``now`` crosses the next
+``every_s`` boundary — atomically (tmp + rename, via ``checkpoint.save``)
+and with bounded retention (``keep_last`` rotation).  See
+``docs/checkpointing.md`` for the snapshot format and resume guarantees.
 """
 from __future__ import annotations
 
@@ -81,3 +88,57 @@ class CheckpointManager:
 
     def all_steps(self):
         return sorted(int(s) for s in self._index["steps"])
+
+
+class PeriodicSnapshotter:
+    """Periodic mid-flight snapshot policy over a :class:`CheckpointManager`.
+
+    ``every_s`` is SIMULATED seconds (the federation clock's timeline, not
+    wall time): the first snapshot lands at the first tick at or past
+    ``every_s``, the next at the following multiple, and so on.  Writes are
+    atomic and rotated (``keep_last``); the snapshot counter continues from
+    whatever the directory already holds, so a resumed run extends the same
+    snapshot series instead of clobbering it.
+
+    Taking a snapshot is a pure read of the run state — attaching a
+    snapshotter can never perturb the simulated timeline (the kill-and-
+    resume regression tests depend on exactly this).
+    """
+
+    def __init__(self, directory: str, every_s: float, *, keep_last: int = 3):
+        if every_s <= 0:
+            raise ValueError("every_s must be > 0")
+        self.manager = CheckpointManager(directory, keep_last=keep_last)
+        self.every_s = float(every_s)
+        self.next_due = float(every_s)
+        self._count = self.manager.latest_step() or 0
+
+    def due(self, now: float) -> bool:
+        """True when simulated instant ``now`` has crossed the next boundary."""
+        return now >= self.next_due
+
+    def fast_forward(self, now: float) -> None:
+        """Advance the cadence past ``now`` without writing — call after
+        restoring a snapshot so a resumed run continues the original
+        schedule instead of re-snapshotting its own resume point."""
+        while self.next_due <= now:
+            self.next_due += self.every_s
+
+    def maybe_save(self, now: float, state_fn: Callable[[], PyTree]
+                   ) -> Optional[str]:
+        """Snapshot if due; returns the written path (or None).  ``state_fn``
+        is only invoked when a snapshot is actually taken."""
+        if not self.due(now):
+            return None
+        self._count += 1
+        while self.next_due <= now:
+            self.next_due += self.every_s
+        return self.manager.save(self._count, state_fn())
+
+
+def load_snapshot(path: str) -> PyTree:
+    """Load a snapshot from a checkpoint FILE or a snapshot DIRECTORY (the
+    directory form resolves to the latest rotated snapshot via the index)."""
+    if os.path.isdir(path):
+        return CheckpointManager(path).restore()
+    return load(path)

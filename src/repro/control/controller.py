@@ -59,7 +59,19 @@ class Controller:
 
     def on_resolved(self, t: float, samples: Sequence[ClientSample],
                     uids: Sequence[int]) -> None:
+        """Advance planning baselines after a solver run covered ``uids``."""
         pass
+
+    # ----------------------------------------------------------- persistence
+    def state_dict(self) -> dict:
+        """JSON-able trigger bookkeeping (boundary counters, planning
+        baselines).  Stateless policies return ``{}``."""
+        return {}
+
+    def load_state_dict(self, st: dict) -> None:
+        if st:
+            raise ValueError(f"{type(self).__name__} carries no state, "
+                             f"got {sorted(st)}")
 
 
 class StaticController(Controller):
@@ -87,6 +99,12 @@ class PeriodicController(Controller):
         if self._boundaries % self.resolve_every == 0:
             return Trigger("periodic")
         return None
+
+    def state_dict(self) -> dict:
+        return {"boundaries": self._boundaries}
+
+    def load_state_dict(self, st: dict) -> None:
+        self._boundaries = int(st["boundaries"])
 
 
 class ReactiveController(Controller):
@@ -132,6 +150,13 @@ class ReactiveController(Controller):
         for s in samples:
             if s.uid in planned and math.isfinite(s.rate_mbps):
                 self.plan_rate[s.uid] = s.rate_mbps
+
+    def state_dict(self) -> dict:
+        return {"plan_rate": {str(u): r for u, r in self.plan_rate.items()}}
+
+    def load_state_dict(self, st: dict) -> None:
+        self.plan_rate = {int(u): float(r)
+                          for u, r in st["plan_rate"].items()}
 
 
 def make_controller(name: str, *, resolve_every: int = 1,

@@ -60,11 +60,23 @@ class ReassignEvent:
 
     @property
     def changed(self) -> bool:
+        """True when the decision proposed at least one knob move."""
         return bool(self.cut_changes or self.rank_changes
                     or self.batch_changes)
 
 
 class ControlLoop:
+    """Commit-boundary control loop: telemetry → controller → solver →
+    priced migration, applied in place to the live assignment.
+
+    Accept/reject rule (:meth:`decide`): a proposed re-assignment is
+    APPLIED iff the predicted per-round makespan gain times
+    ``gain_horizon`` exceeds the worst per-client migration bill priced
+    through the live links — except a ``memory`` trigger, which is a hard
+    constraint and applies unconditionally.  Rejected proposals are still
+    recorded in :attr:`decisions` (``applied=False``) for the run log.
+    """
+
     def __init__(self, cfg: ModelConfig, devices: Sequence[DeviceProfile],
                  server: DeviceProfile, network: NetworkPlane,
                  cuts: List[int], *, batch: int, seq_len: int,
@@ -143,8 +155,56 @@ class ControlLoop:
         _, mig = self.decide(ev.time, ev.contributors, ev.version)
         return mig
 
+    # ------------------------------------------------------------ persistence
+    def state_dict(self) -> dict:
+        """JSON-able control-plane state for a mid-flight snapshot:
+        telemetry EWMAs, controller trigger bookkeeping, the live
+        rank/batch/priority lists, and the full decision log.  The live
+        ``cuts`` list is owned (and serialized) by the driver."""
+        return {
+            "telemetry": self.telemetry.state_dict(),
+            "controller": self.controller.state_dict(),
+            "cuts": list(self.cuts),
+            "ranks": list(self.ranks),
+            "batches": list(self.batches),
+            "pri": list(self.pri),
+            "decisions": [self._enc_decision(d) for d in self.decisions],
+        }
+
+    def load_state_dict(self, st: dict) -> None:
+        self.telemetry.load_state_dict(st["telemetry"])
+        self.controller.load_state_dict(st["controller"])
+        # cuts/pri restore IN PLACE: both lists are shared with the driver
+        # (and, via times_fn/priorities, with a live FederationClock)
+        self.cuts[:] = [int(c) for c in st["cuts"]]
+        self.ranks = [int(r) for r in st["ranks"]]
+        self.batches = [int(b) for b in st["batches"]]
+        self.pri[:] = [float(p) for p in st["pri"]]
+        self.decisions = [self._dec_decision(d) for d in st["decisions"]]
+
+    @staticmethod
+    def _enc_decision(d: ReassignEvent) -> dict:
+        enc = lambda ch: [[u, a, b] for u, (a, b) in sorted(ch.items())]  # noqa: E731
+        return {"time": d.time, "version": d.version, "trigger": d.trigger,
+                "cut": enc(d.cut_changes), "rank": enc(d.rank_changes),
+                "batch": enc(d.batch_changes), "gain": d.predicted_gain_s,
+                "mig": [[u, s] for u, s in sorted(d.migration_s.items())],
+                "applied": d.applied}
+
+    @staticmethod
+    def _dec_decision(st: dict) -> ReassignEvent:
+        dec = lambda rows: {int(u): (int(a), int(b)) for u, a, b in rows}  # noqa: E731
+        return ReassignEvent(
+            time=float(st["time"]), version=int(st["version"]),
+            trigger=st["trigger"], cut_changes=dec(st["cut"]),
+            rank_changes=dec(st["rank"]), batch_changes=dec(st["batch"]),
+            predicted_gain_s=float(st["gain"]),
+            migration_s={int(u): float(s) for u, s in st["mig"]},
+            applied=bool(st["applied"]))
+
     # ------------------------------------------------------------- decision
     def assignment(self) -> Assignment:
+        """The LIVE (cut, rank, batch) assignment as an immutable value."""
         return Assignment(tuple(self.cuts), tuple(self.ranks),
                           tuple(self.batches))
 

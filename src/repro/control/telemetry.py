@@ -111,8 +111,25 @@ class TelemetryStore:
                              self.dtype_bytes, mb=self.mb)
         return self.mem_budget[uid] - need
 
+    # ----------------------------------------------------------- persistence
+    def state_dict(self) -> dict:
+        """JSON-able estimator state (EWMAs, sample counts, live budgets) —
+        restoring it resumes the control plane's view of the fleet exactly
+        where a mid-flight snapshot froze it."""
+        return {"rate_mbps": list(self.rate_mbps),
+                "mem_budget": list(self.mem_budget),
+                "step_s": list(self.step_s),
+                "rate_samples": list(self.rate_samples)}
+
+    def load_state_dict(self, st: dict) -> None:
+        self.rate_mbps = [float(r) for r in st["rate_mbps"]]
+        self.mem_budget = [float(b) for b in st["mem_budget"]]
+        self.step_s = [float(s) for s in st["step_s"]]
+        self.rate_samples = [int(c) for c in st["rate_samples"]]
+
     def snapshot(self, uid: int, cut: int, batch: int, seq_len: int,
                  nominal_mbps: float) -> ClientSample:
+        """One client's telemetry view at a decision instant."""
         return ClientSample(uid=uid, rate_mbps=self.rate_mbps[uid],
                             nominal_mbps=float(nominal_mbps),
                             step_s=self.step_s[uid],

@@ -35,12 +35,12 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import itertools
 from typing import (Callable, Dict, List, Mapping, Optional, Sequence,
                     Tuple)
 
 from repro.core.cost_model import StepTimes, chunked_service_time
 from repro.net import NetworkPlane, shared_finish_times
+from repro.net.plane import decode_tuples, encode_tuples
 
 __all__ = ["AGG_POLICIES", "ClockConfig", "ClockResult", "CommitEvent",
            "EngineResult", "FederationClock", "Job", "RoundPlan",
@@ -457,6 +457,18 @@ class ClockResult:
     dropped: List[Tuple[int, int]]            # (uid, round) deadline cuts
     round_results: List[EngineResult]         # sync mode: one per barrier
     events: List[Tuple[float, str, int]]      # (time, kind, uid) trace
+    preempted: bool = False                   # on_tick stopped the run early
+
+
+class _AsyncState:
+    """Mutable continuous-time loop state — exactly what a mid-flight
+    snapshot must capture to resume the async event loop bit-for-bit.
+    One field per piece of the loop; see ``FederationClock.state_dict``."""
+
+    __slots__ = ("heap", "seq", "agg_seq", "started", "finished", "acked",
+                 "model_version", "release", "free_at", "blocked", "jobs",
+                 "queue", "slot_free", "buffer", "pending_aggs", "awaiting",
+                 "agg_extra", "up_cell", "down_cell")
 
 
 class FederationClock:
@@ -518,11 +530,20 @@ class FederationClock:
         self.round_results: List[EngineResult] = []
         self.dropped: List[Tuple[int, int]] = []
         self.trace: List[Tuple[float, str, int]] = []
+        # mid-flight checkpoint/resume state
+        self._shared = network is not None and network.shared
+        self._routed = agg_bytes_fn is not None
+        self._astate: Optional[_AsyncState] = None   # live async loop state
+        self._sync_rnd = 0            # next sync barrier wave to run
+        self._preempted = False
+        # run()-scoped driver callbacks (never serialized)
+        self._on_serve = self._on_commit = self._on_round_start = None
 
     # ------------------------------------------------------------------ run
     def run(self, *, on_serve=None, on_commit=None, plan_fn=None,
-            on_round_end=None, on_round_start=None) -> ClockResult:
-        """Run the whole federation to completion.
+            on_round_end=None, on_round_start=None,
+            on_tick=None) -> ClockResult:
+        """Run the federation to completion (or to a preemption point).
 
         sync:  ``plan_fn(rnd) -> RoundPlan`` builds each barrier wave;
                ``on_round_end(rnd, EngineResult) -> bool|None`` may return
@@ -531,11 +552,22 @@ class FederationClock:
                and ``on_round_end`` are unused; ``on_round_start(uid, rnd,
                t)`` fires when a client enters a local round (the driver
                snapshots the client's model pull there).
+
+        ``on_tick(now)`` fires at every snapshot-safe boundary — after each
+        processed event under the async policies, after each barrier wave
+        under sync.  The driver may call :meth:`state_dict` there (a pure
+        read; it never perturbs the timeline) and may return ``False`` to
+        PREEMPT the run: the clock stops immediately and the returned
+        result carries ``preempted=True``.  A preempted clock — or a fresh
+        one restored via :meth:`load_state_dict` — continues exactly where
+        it stopped on the next ``run`` call.
         """
+        self._preempted = False
         if self.cfg.agg_policy == "sync":
-            self._run_sync(on_serve, on_commit, plan_fn, on_round_end)
+            self._run_sync(on_serve, on_commit, plan_fn, on_round_end,
+                           on_tick)
         else:
-            self._run_async(on_serve, on_commit, on_round_start)
+            self._run_async(on_serve, on_commit, on_round_start, on_tick)
         self.trace.sort(key=lambda e: (e[0], e[1], e[2]))
         done = {u: 0 for u in range(self.n)}
         for ev in self.serves:
@@ -545,17 +577,20 @@ class FederationClock:
                            commits=self.commits,
                            rounds_completed=done, dropped=self.dropped,
                            round_results=self.round_results,
-                           events=self.trace)
+                           events=self.trace, preempted=self._preempted)
 
     # ------------------------------------------------------------- sync mode
-    def _run_sync(self, on_serve, on_commit, plan_fn, on_round_end):
+    def _run_sync(self, on_serve, on_commit, plan_fn, on_round_end,
+                  on_tick=None):
         """Barrier waves: each round replays the single-round DES verbatim
         (exact PR 1 / Eq. 10-12 parity), then time advances by the round
-        makespan plus any commit overhead before the next wave starts."""
+        makespan plus any commit overhead before the next wave starts.
+        Snapshot/resume granularity is the barrier (``self._sync_rnd`` is
+        the next wave to run)."""
         if plan_fn is None:
             raise ValueError("sync mode needs plan_fn(rnd) -> RoundPlan")
         cfg = self.cfg
-        for rnd in range(self.rounds):
+        for rnd in range(self._sync_rnd, self.rounds):
             plan = plan_fn(rnd)
             base = self.now
             res = simulate_round(plan.jobs, policy=plan.policy,
@@ -597,7 +632,11 @@ class FederationClock:
                                        for u in served))
                 else:
                     self._commit(served, zeros, on_commit)
+            self._sync_rnd = rnd + 1
             if on_round_end is not None and on_round_end(rnd, res) is False:
+                break
+            if on_tick is not None and on_tick(self.now) is False:
+                self._preempted = True
                 break
 
     # ------------------------------------------------- routed adapter syncs
@@ -620,281 +659,447 @@ class FederationClock:
         return dict(zip(contributors, fins))
 
     # ------------------------------------------------------------ async mode
-    def _run_async(self, on_serve, on_commit, on_round_start=None):
-        cfg = self.cfg
-        n, slots, chunk = self.n, cfg.slots, cfg.cohort_chunk
-        key_of = DISCIPLINES[cfg.policy]
-        net = self.network
-        shared = net is not None and net.shared
-        routed = self.agg_bytes_fn is not None
-        up_cell = net.make_cell("up") if shared else None
-        down_cell = net.make_cell("down") if shared else None
-        heap: List[tuple] = []          # (time, seq, kind, payload)
-        seq = itertools.count()
+    # The continuous-time loop is STEPWISE: ``_async_step`` processes one
+    # event, all mutable loop state lives in ``self._astate`` (an
+    # ``_AsyncState``), and the boundary between any two steps is a valid
+    # snapshot point — ``state_dict``/``load_state_dict`` serialize the
+    # whole thing, and a restored clock's next ``run`` call continues the
+    # event loop bit-for-bit where the snapshot froze it.
 
-        def push(t, kind, payload):
-            heapq.heappush(heap, (t, next(seq), kind, payload))
+    def _run_async(self, on_serve, on_commit, on_round_start=None,
+                   on_tick=None):
+        self._on_serve, self._on_commit = on_serve, on_commit
+        self._on_round_start = on_round_start
+        if self._astate is None:
+            self._astate = self._async_fresh()
+            for u in range(self.n):
+                self._start_round(u, 0.0)
+        while self._async_step():
+            if on_tick is not None and on_tick(self.now) is False:
+                self._preempted = True
+                break
 
-        def sched_cell(cell, kind):
-            """(Re)schedule the cell's next predicted completion.  The
-            version stamp invalidates predictions that an add/remove has
-            re-timed since they were pushed."""
-            nc = cell.next_completion()
-            if nc is not None:
-                push(nc, kind, cell.version)
-
-        started = [0] * n               # local rounds entered
-        finished = [0] * n              # local rounds fully completed
-        acked = [0] * n                 # finished rounds covered by a commit
-        model_version = [0] * n         # version of each client's model copy
-        release = [0.0] * n             # earliest next-round start (commit dl)
-        free_at = [0.0] * n             # previous round's client_done
-        blocked: set = set()            # out of inflight credit
-        jobs: Dict[Tuple[int, int], Job] = {}
-        queue: List[Tuple[int, int]] = []     # (uid, round) at the server
-        slot_free = [0.0] * slots
-        buffer: Dict[int, int] = {}     # uid -> latest finished local round
+    def _async_fresh(self) -> _AsyncState:
+        S = _AsyncState()
+        S.heap = []                     # (time, seq, kind, payload)
+        S.seq = 0
+        S.started = [0] * self.n        # local rounds entered
+        S.finished = [0] * self.n       # local rounds fully completed
+        S.acked = [0] * self.n          # finished rounds covered by a commit
+        S.model_version = [0] * self.n  # version of each client's model copy
+        S.release = [0.0] * self.n      # earliest next-round start (commit dl)
+        S.free_at = [0.0] * self.n      # previous round's client_done
+        S.blocked = set()               # out of inflight credit
+        S.jobs = {}                     # (uid, round) -> Job
+        S.queue = []                    # (uid, round) at the server
+        S.slot_free = [0.0] * self.cfg.slots
+        S.buffer = {}                   # uid -> latest finished local round
         # plane-routed aggregation state (agg_bytes_fn): in-flight commits
         # whose adapter transfers travel the links/cells as first-class
         # events; ``awaiting[u]`` counts adapter syncs a client must finish
         # before entering another local round
-        agg_seq = itertools.count()
-        pending_aggs: Dict[int, dict] = {}
-        awaiting: Dict[int, int] = {}
-        agg_extra: Dict[tuple, float] = {}    # shared-cell tid -> extra secs
+        S.agg_seq = 0
+        S.pending_aggs = {}
+        S.awaiting = {}
+        S.agg_extra = {}                # shared-cell tid -> extra secs
+        S.up_cell = self.network.make_cell("up") if self._shared else None
+        S.down_cell = self.network.make_cell("down") if self._shared else None
+        return S
 
-        def start_round(u, t):
-            if started[u] >= self.rounds:
+    def _push(self, t, kind, payload):
+        S = self._astate
+        heapq.heappush(S.heap, (t, S.seq, kind, payload))
+        S.seq += 1
+
+    def _sched_cell(self, cell, kind):
+        """(Re)schedule the cell's next predicted completion.  The
+        version stamp invalidates predictions that an add/remove has
+        re-timed since they were pushed."""
+        nc = cell.next_completion()
+        if nc is not None:
+            self._push(nc, kind, cell.version)
+
+    def _start_round(self, u, t):
+        S, cfg, net = self._astate, self.cfg, self.network
+        if S.started[u] >= self.rounds:
+            return
+        if S.awaiting.get(u, 0) > 0:
+            return      # adapter sync in flight; resumes when it lands
+        if S.started[u] - S.acked[u] >= cfg.max_inflight_rounds:
+            S.blocked.add(u)
+            return
+        rnd = S.started[u]
+        S.started[u] += 1
+        t0 = max(t, S.release[u], S.free_at[u])
+        st = self.times_fn(u, rnd)
+        pri = self.priorities[u] if self.priorities is not None else 0.0
+        job = Job(uid=u, t_f=st.t_f, t_fc=st.t_fc, t_s=st.t_s,
+                  t_bc=st.t_bc, t_b=st.t_b, arrival=t0, priority=pri,
+                  fc_bytes=st.fc_bytes, bc_bytes=st.bc_bytes)
+        S.jobs[(u, rnd)] = job
+        if self._on_round_start is not None:
+            self._on_round_start(u, rnd, t0)
+        self.trace.append((t0 + job.t_f, "fwd_done", u))
+        if net is not None and job.fc_bytes > 0:
+            if self._shared:
+                # the uplink contends in the cell from fwd_done on;
+                # its completion is a cell event, not a fixed offset
+                self._push(t0 + job.t_f, "up_start", (u, rnd))
                 return
-            if awaiting.get(u, 0) > 0:
-                return      # adapter sync in flight; resumes when it lands
-            if started[u] - acked[u] >= cfg.max_inflight_rounds:
-                blocked.add(u)
+            ready = net.uplink_finish(u, t0 + job.t_f, job.fc_bytes)
+        else:
+            ready = job.ready
+        self.trace.append((ready, "uplink_done", u))
+        self._push(ready, "uplink", (u, rnd))
+
+    def _sort_queue_async(self, t):
+        S, net = self._astate, self.network
+        if self.cfg.policy == "bw" and net is not None:
+            conc = len(S.down_cell.active) if self._shared else 0
+            S.queue.sort(key=lambda e: _net_bw_key(net, t, S.jobs[e],
+                                                   concurrent=conc))
+        else:
+            key_of = DISCIPLINES[self.cfg.policy]
+            S.queue.sort(key=lambda e: key_of(S.jobs[e]))
+
+    def _try_dispatch(self, t):
+        S, cfg = self._astate, self.cfg
+        chunk = cfg.cohort_chunk
+        while S.queue:
+            s = min(range(cfg.slots), key=lambda i: S.slot_free[i])
+            if S.slot_free[s] > t:
                 return
-            rnd = started[u]
-            started[u] += 1
-            t0 = max(t, release[u], free_at[u])
-            st = self.times_fn(u, rnd)
-            pri = self.priorities[u] if self.priorities is not None else 0.0
-            job = Job(uid=u, t_f=st.t_f, t_fc=st.t_fc, t_s=st.t_s,
-                      t_bc=st.t_bc, t_b=st.t_b, arrival=t0, priority=pri,
-                      fc_bytes=st.fc_bytes, bc_bytes=st.bc_bytes)
-            jobs[(u, rnd)] = job
-            if on_round_start is not None:
-                on_round_start(u, rnd, t0)
-            self.trace.append((t0 + job.t_f, "fwd_done", u))
-            if net is not None and job.fc_bytes > 0:
-                if shared:
-                    # the uplink contends in the cell from fwd_done on;
-                    # its completion is a cell event, not a fixed offset
-                    push(t0 + job.t_f, "up_start", (u, rnd))
-                    return
-                ready = net.uplink_finish(u, t0 + job.t_f, job.fc_bytes)
+            self._sort_queue_async(t)
+            take = S.queue[:chunk]
+            del S.queue[:chunk]
+            span = chunked_service_time([S.jobs[e].t_s for e in take],
+                                        cfg.chunk_efficiency)
+            S.slot_free[s] = t + span
+            self.trace.append((t, "server_start", take[0][0]))
+            self._push(t + span, "served", (tuple(take), s, t))
+
+    def _commit_buffer(self, t, forced):
+        if self._routed:
+            self._begin_commit(t, forced)
+        else:
+            self._do_commit(t, forced)
+
+    def _do_commit(self, t, forced):
+        S, cfg = self._astate, self.cfg
+        contribs = tuple(sorted(S.buffer))
+        stal = tuple(self.version - S.model_version[u] for u in contribs)
+        overhead, per = self._commit(contribs, stal, self._on_commit, time=t,
+                                     forced=forced)
+        for u in contribs:
+            S.model_version[u] = self.version
+            S.acked[u] = S.finished[u]
+            S.release[u] = t + (per.get(u, 0.0) if per is not None
+                                else overhead)
+        S.buffer.clear()
+        for u in sorted(S.blocked):
+            if S.started[u] - S.acked[u] < cfg.max_inflight_rounds:
+                S.blocked.discard(u)
+                self._start_round(u, t)
+
+    # -- plane-routed aggregation: uploads -> merge -> downloads -------------
+    def _begin_commit(self, t, forced):
+        """Snapshot the buffer and launch the contributors' adapter
+        uploads through the plane; the merge fires when the last one
+        lands (``_merge_agg``)."""
+        S, net = self._astate, self.network
+        aid = S.agg_seq
+        S.agg_seq += 1
+        contribs = tuple(sorted(S.buffer))
+        S.buffer.clear()
+        S.pending_aggs[aid] = {"contribs": contribs,
+                               "left": set(contribs), "forced": forced}
+        for u in contribs:
+            S.awaiting[u] = S.awaiting.get(u, 0) + 1
+            b = float(self.agg_bytes_fn(u))
+            if self._shared:
+                S.up_cell.add(t, ("aggup", aid, u), u, b)
             else:
-                ready = job.ready
-            self.trace.append((ready, "uplink_done", u))
-            push(ready, "uplink", (u, rnd))
+                self._push(net.uplink_finish(u, t, b), "aggup_done", (aid, u))
+        if self._shared:
+            self._sched_cell(S.up_cell, "up_net")
 
-        def sort_queue(t):
-            if cfg.policy == "bw" and net is not None:
-                conc = len(down_cell.active) if shared else 0
-                queue.sort(key=lambda e: _net_bw_key(net, t, jobs[e],
-                                                     concurrent=conc))
+    def _agg_upload_landed(self, aid, u, t):
+        S = self._astate
+        self.trace.append((t, "agg_uplink_done", u))
+        info = S.pending_aggs[aid]
+        info["left"].discard(u)
+        if not info["left"]:
+            self._merge_agg(aid, t)
+
+    def _merge_agg(self, aid, t):
+        """All contributor uploads landed: fold the commit (driver model
+        math via on_commit, which may return per-uid EXTRA seconds —
+        migration shipping), then redistribute via the downlinks."""
+        S, cfg, net = self._astate, self.cfg, self.network
+        info = S.pending_aggs.pop(aid)
+        contribs = info["contribs"]
+        stal = tuple(self.version - S.model_version[u] for u in contribs)
+        overhead, per = self._commit(contribs, stal, self._on_commit, time=t,
+                                     forced=info["forced"])
+        for u in contribs:
+            S.model_version[u] = self.version
+            S.acked[u] = S.finished[u]
+            extra = per.get(u, 0.0) if per is not None else overhead
+            b = float(self.agg_bytes_fn(u))
+            if self._shared:
+                S.agg_extra[("aggdown", aid, u)] = extra
+                S.down_cell.add(t, ("aggdown", aid, u), u, b)
             else:
-                queue.sort(key=lambda e: key_of(jobs[e]))
+                self._push(net.downlink_finish(u, t, b) + extra,
+                           "aggdown_done", u)
+        if self._shared:
+            self._sched_cell(S.down_cell, "down_net")
+        # the merge refreshed acked credit; un-gate blocked clients
+        # (contributors still awaiting their download stay gated by
+        # _start_round's awaiting guard)
+        for u in sorted(S.blocked):
+            if S.started[u] - S.acked[u] < cfg.max_inflight_rounds:
+                S.blocked.discard(u)
+                self._start_round(u, t)
 
-        def try_dispatch(t):
-            while queue:
-                s = min(range(slots), key=lambda i: slot_free[i])
-                if slot_free[s] > t:
-                    return
-                sort_queue(t)
-                take = queue[:chunk]
-                del queue[:chunk]
-                span = chunked_service_time([jobs[e].t_s for e in take],
-                                            cfg.chunk_efficiency)
-                slot_free[s] = t + span
-                self.trace.append((t, "server_start", take[0][0]))
-                push(t + span, "served", (tuple(take), s, t))
+    def _agg_download_landed(self, u, t):
+        S, cfg = self._astate, self.cfg
+        self.trace.append((t, "agg_downlink_done", u))
+        S.awaiting[u] -= 1
+        if S.awaiting[u] > 0:
+            return
+        del S.awaiting[u]
+        S.release[u] = max(S.release[u], t)
+        if u in S.blocked:
+            if S.started[u] - S.acked[u] < cfg.max_inflight_rounds:
+                S.blocked.discard(u)
+                self._start_round(u, t)
+        elif S.started[u] == S.finished[u]:
+            self._start_round(u, t)
 
-        def do_commit(t, forced):
-            contribs = tuple(sorted(buffer))
-            stal = tuple(self.version - model_version[u] for u in contribs)
-            overhead, per = self._commit(contribs, stal, on_commit, time=t,
-                                         forced=forced)
-            for u in contribs:
-                model_version[u] = self.version
-                acked[u] = finished[u]
-                release[u] = t + (per.get(u, 0.0) if per is not None
-                                  else overhead)
-            buffer.clear()
-            for u in sorted(blocked):
-                if started[u] - acked[u] < cfg.max_inflight_rounds:
-                    blocked.discard(u)
-                    start_round(u, t)
-
-        # -- plane-routed aggregation: uploads -> merge -> downloads ---------
-        def begin_commit(t, forced):
-            """Snapshot the buffer and launch the contributors' adapter
-            uploads through the plane; the merge fires when the last one
-            lands (``merge_agg``)."""
-            aid = next(agg_seq)
-            contribs = tuple(sorted(buffer))
-            buffer.clear()
-            pending_aggs[aid] = {"contribs": contribs,
-                                 "left": set(contribs), "forced": forced}
-            for u in contribs:
-                awaiting[u] = awaiting.get(u, 0) + 1
-                b = float(self.agg_bytes_fn(u))
-                if shared:
-                    up_cell.add(t, ("aggup", aid, u), u, b)
+    def _async_step(self) -> bool:
+        """Process ONE event from the continuous-time loop; returns False
+        when the federation is complete.  The instant between two steps is
+        a consistent snapshot boundary."""
+        S, cfg, net = self._astate, self.cfg, self.network
+        if not S.heap:
+            if S.buffer:
+                # tail flush: the remaining runners can no longer fill
+                # the buffer to k on their own — commit what's there so
+                # blocked clients regain credit and the tail of the
+                # fleet reaches the global model (under plane-routed
+                # aggregation the flush's transfers re-arm the heap)
+                self._commit_buffer(self.now, forced=True)
+                return bool(S.heap)
+            return False
+        t, _, kind, payload = heapq.heappop(S.heap)
+        self.now = max(self.now, t)
+        if kind == "uplink":
+            S.queue.append(payload)
+            self._try_dispatch(t)
+        elif kind == "up_start":
+            u, rnd = payload
+            S.up_cell.add(t, payload, u, S.jobs[payload].fc_bytes)
+            self._sched_cell(S.up_cell, "up_net")
+        elif kind == "up_net":
+            if payload != S.up_cell.version:
+                return True     # contention re-timed this prediction
+            arrived = False
+            for tc, tid, uid in S.up_cell.advance(t):
+                if tid[0] == "aggup":     # adapter sync, not a job
+                    self._agg_upload_landed(tid[1], uid, tc)
                 else:
-                    push(net.uplink_finish(u, t, b), "aggup_done", (aid, u))
-            if shared:
-                sched_cell(up_cell, "up_net")
-
-        def agg_upload_landed(aid, u, t):
-            self.trace.append((t, "agg_uplink_done", u))
-            info = pending_aggs[aid]
-            info["left"].discard(u)
-            if not info["left"]:
-                merge_agg(aid, t)
-
-        def merge_agg(aid, t):
-            """All contributor uploads landed: fold the commit (driver model
-            math via on_commit, which may return per-uid EXTRA seconds —
-            migration shipping), then redistribute via the downlinks."""
-            info = pending_aggs.pop(aid)
-            contribs = info["contribs"]
-            stal = tuple(self.version - model_version[u] for u in contribs)
-            overhead, per = self._commit(contribs, stal, on_commit, time=t,
-                                         forced=info["forced"])
-            for u in contribs:
-                model_version[u] = self.version
-                acked[u] = finished[u]
-                extra = per.get(u, 0.0) if per is not None else overhead
-                b = float(self.agg_bytes_fn(u))
-                if shared:
-                    agg_extra[("aggdown", aid, u)] = extra
-                    down_cell.add(t, ("aggdown", aid, u), u, b)
+                    self.trace.append((tc, "uplink_done", uid))
+                    S.queue.append(tid)
+                    arrived = True
+            if arrived:
+                self._try_dispatch(t)
+            self._sched_cell(S.up_cell, "up_net")
+        elif kind == "served":
+            take, s, t_start = payload
+            ev = ServeEvent(uids=tuple(u for u, _ in take),
+                            rounds=tuple(r for _, r in take),
+                            slot=s, start=t_start, end=t)
+            self.serves.append(ev)
+            self.trace.append((t, "server_done", take[0][0]))
+            if self._on_serve is not None:
+                self._on_serve(ev)
+            for u, rnd in take:
+                j = S.jobs[(u, rnd)]
+                if net is not None and j.bc_bytes > 0:
+                    if self._shared:
+                        S.down_cell.add(t, (u, rnd), u, j.bc_bytes)
+                        continue
+                    dl = net.downlink_finish(u, t, j.bc_bytes)
                 else:
-                    push(net.downlink_finish(u, t, b) + extra,
-                         "aggdown_done", u)
-            if shared:
-                sched_cell(down_cell, "down_net")
-            # the merge refreshed acked credit; un-gate blocked clients
-            # (contributors still awaiting their download stay gated by
-            # start_round's awaiting guard)
-            for u in sorted(blocked):
-                if started[u] - acked[u] < cfg.max_inflight_rounds:
-                    blocked.discard(u)
-                    start_round(u, t)
+                    dl = t + j.t_bc
+                self.trace.append((dl, "downlink_done", u))
+                self.trace.append((dl + j.t_b, "client_done", u))
+                self._push(dl + j.t_b, "client_done", (u, rnd))
+            if self._shared and S.down_cell.active:
+                self._sched_cell(S.down_cell, "down_net")
+            self._try_dispatch(t)
+        elif kind == "down_net":
+            if payload != S.down_cell.version:
+                return True     # contention re-timed this prediction
+            for tc, tid, uid in S.down_cell.advance(t):
+                if tid[0] == "aggdown":   # adapter sync, not a job
+                    extra = S.agg_extra.pop(tid, 0.0)
+                    self._push(tc + extra, "aggdown_done", uid)
+                    continue
+                j = S.jobs[tid]
+                self.trace.append((tc, "downlink_done", uid))
+                self.trace.append((tc + j.t_b, "client_done", uid))
+                self._push(tc + j.t_b, "client_done", tid)
+            self._sched_cell(S.down_cell, "down_net")
+        elif kind == "aggup_done":
+            aid, u = payload
+            self._agg_upload_landed(aid, u, t)
+        elif kind == "aggdown_done":
+            self._agg_download_landed(payload, t)
+        elif kind == "client_done":
+            u, rnd = payload
+            S.finished[u] += 1
+            S.free_at[u] = t
+            S.buffer[u] = rnd
+            if len(S.buffer) >= cfg.buffer_k:
+                self._commit_buffer(t, forced=False)
+            if u not in S.blocked and S.started[u] == rnd + 1:
+                self._start_round(u, t)
+        return True
 
-        def agg_download_landed(u, t):
-            self.trace.append((t, "agg_downlink_done", u))
-            awaiting[u] -= 1
-            if awaiting[u] > 0:
-                return
-            del awaiting[u]
-            release[u] = max(release[u], t)
-            if u in blocked:
-                if started[u] - acked[u] < cfg.max_inflight_rounds:
-                    blocked.discard(u)
-                    start_round(u, t)
-            elif started[u] == finished[u]:
-                start_round(u, t)
+    # ------------------------------------------------------- checkpointing
+    def state_dict(self) -> dict:
+        """Fully JSON-able mid-flight snapshot of the clock.
 
-        commit_fn = begin_commit if routed else do_commit
+        Captures the global timeline (now/version/serves/commits/trace),
+        the sync wave index, and — when the async loop is live — the whole
+        event-loop state: the heap with in-flight rounds and their version
+        stamps, per-policy aggregation buffers and staleness bookkeeping,
+        inflight credits, and the shared cells' integrator state.  Taking
+        a snapshot is a pure read; ``load_state_dict`` on a freshly
+        constructed clock (same constructor arguments) followed by
+        :meth:`run` continues the timeline bit-for-bit (regression-tested
+        in tests/test_async_engine.py).  Floats survive the JSON round
+        trip exactly (CPython repr).  See docs/checkpointing.md."""
+        st = {
+            "schema": 1,
+            "now": self.now,
+            "version": self.version,
+            "sync_rnd": self._sync_rnd,
+            "serves": [[list(e.uids), list(e.rounds), e.slot, e.start, e.end]
+                       for e in self.serves],
+            "commits": [[c.time, c.version, list(c.contributors),
+                         list(c.staleness), c.forced, c.overhead]
+                        for c in self.commits],
+            "dropped": [list(d) for d in self.dropped],
+            "trace": [list(e) for e in self.trace],
+            "round_results": [self._enc_round(r) for r in self.round_results],
+            "async": None,
+        }
+        S = self._astate
+        if S is not None:
+            st["async"] = {
+                "heap": [[t, seq, kind, encode_tuples(p)]
+                         for t, seq, kind, p in S.heap],
+                "seq": S.seq, "agg_seq": S.agg_seq,
+                "started": list(S.started), "finished": list(S.finished),
+                "acked": list(S.acked),
+                "model_version": list(S.model_version),
+                "release": list(S.release), "free_at": list(S.free_at),
+                "blocked": sorted(S.blocked),
+                "jobs": [[u, r, [j.t_f, j.t_fc, j.t_s, j.t_bc, j.t_b,
+                                 j.arrival, j.priority, j.fc_bytes,
+                                 j.bc_bytes]]
+                         for (u, r), j in S.jobs.items()],
+                "queue": [list(e) for e in S.queue],
+                "slot_free": list(S.slot_free),
+                "buffer": [[u, r] for u, r in S.buffer.items()],
+                "pending_aggs": [[aid, list(info["contribs"]),
+                                  sorted(info["left"]), info["forced"]]
+                                 for aid, info in S.pending_aggs.items()],
+                "awaiting": [[u, k] for u, k in S.awaiting.items()],
+                "agg_extra": [[encode_tuples(tid), x]
+                              for tid, x in S.agg_extra.items()],
+                "up_cell": S.up_cell.state_dict() if S.up_cell else None,
+                "down_cell": S.down_cell.state_dict() if S.down_cell else None,
+            }
+        return st
 
-        for u in range(n):
-            start_round(u, 0.0)
+    def load_state_dict(self, st: dict) -> None:
+        """Restore a :meth:`state_dict` snapshot onto a freshly constructed
+        clock (same n_clients/rounds/cfg/network/callables).  The next
+        :meth:`run` call continues mid-flight instead of starting over."""
+        if st.get("schema") != 1:
+            raise ValueError(f"unknown clock snapshot schema "
+                             f"{st.get('schema')!r}")
+        self.now = float(st["now"])
+        self.version = int(st["version"])
+        self._sync_rnd = int(st["sync_rnd"])
+        self.serves = [ServeEvent(uids=tuple(u), rounds=tuple(r), slot=s,
+                                  start=t0, end=t1)
+                       for u, r, s, t0, t1 in st["serves"]]
+        self.commits = [CommitEvent(time=t, version=v,
+                                    contributors=tuple(c),
+                                    staleness=tuple(s), forced=f,
+                                    overhead=o)
+                        for t, v, c, s, f, o in st["commits"]]
+        self.dropped = [tuple(d) for d in st["dropped"]]
+        self.trace = [tuple(e) for e in st["trace"]]
+        self.round_results = [self._dec_round(r) for r in st["round_results"]]
+        A = st["async"]
+        if A is None:
+            self._astate = None
+            return
+        S = self._astate = self._async_fresh()
+        S.heap = [(t, seq, kind, decode_tuples(p))
+                  for t, seq, kind, p in A["heap"]]
+        S.seq, S.agg_seq = int(A["seq"]), int(A["agg_seq"])
+        S.started = [int(x) for x in A["started"]]
+        S.finished = [int(x) for x in A["finished"]]
+        S.acked = [int(x) for x in A["acked"]]
+        S.model_version = [int(x) for x in A["model_version"]]
+        S.release = [float(x) for x in A["release"]]
+        S.free_at = [float(x) for x in A["free_at"]]
+        S.blocked = set(A["blocked"])
+        S.jobs = {(u, r): Job(uid=u, t_f=f[0], t_fc=f[1], t_s=f[2],
+                              t_bc=f[3], t_b=f[4], arrival=f[5],
+                              priority=f[6], fc_bytes=f[7], bc_bytes=f[8])
+                  for u, r, f in A["jobs"]}
+        S.queue = [tuple(e) for e in A["queue"]]
+        S.slot_free = [float(x) for x in A["slot_free"]]
+        S.buffer = {int(u): int(r) for u, r in A["buffer"]}
+        S.pending_aggs = {int(aid): {"contribs": tuple(c), "left": set(left),
+                                     "forced": bool(f)}
+                          for aid, c, left, f in A["pending_aggs"]}
+        S.awaiting = {int(u): int(k) for u, k in A["awaiting"]}
+        S.agg_extra = {decode_tuples(tid): float(x)
+                       for tid, x in A["agg_extra"]}
+        if A["up_cell"] is not None:
+            S.up_cell.load_state_dict(A["up_cell"])
+        if A["down_cell"] is not None:
+            S.down_cell.load_state_dict(A["down_cell"])
 
-        while True:
-            if not heap:
-                if buffer:
-                    # tail flush: the remaining runners can no longer fill
-                    # the buffer to k on their own — commit what's there so
-                    # blocked clients regain credit and the tail of the
-                    # fleet reaches the global model (under plane-routed
-                    # aggregation the flush's transfers re-arm the heap)
-                    commit_fn(self.now, forced=True)
-                    if heap:
-                        continue
-                break
-            t, _, kind, payload = heapq.heappop(heap)
-            self.now = max(self.now, t)
-            if kind == "uplink":
-                queue.append(payload)
-                try_dispatch(t)
-            elif kind == "up_start":
-                u, rnd = payload
-                up_cell.add(t, payload, u, jobs[payload].fc_bytes)
-                sched_cell(up_cell, "up_net")
-            elif kind == "up_net":
-                if payload != up_cell.version:
-                    continue        # contention re-timed this prediction
-                arrived = False
-                for tc, tid, uid in up_cell.advance(t):
-                    if tid[0] == "aggup":     # adapter sync, not a job
-                        agg_upload_landed(tid[1], uid, tc)
-                    else:
-                        self.trace.append((tc, "uplink_done", uid))
-                        queue.append(tid)
-                        arrived = True
-                if arrived:
-                    try_dispatch(t)
-                sched_cell(up_cell, "up_net")
-            elif kind == "served":
-                take, s, t_start = payload
-                ev = ServeEvent(uids=tuple(u for u, _ in take),
-                                rounds=tuple(r for _, r in take),
-                                slot=s, start=t_start, end=t)
-                self.serves.append(ev)
-                self.trace.append((t, "server_done", take[0][0]))
-                if on_serve is not None:
-                    on_serve(ev)
-                for u, rnd in take:
-                    j = jobs[(u, rnd)]
-                    if net is not None and j.bc_bytes > 0:
-                        if shared:
-                            down_cell.add(t, (u, rnd), u, j.bc_bytes)
-                            continue
-                        dl = net.downlink_finish(u, t, j.bc_bytes)
-                    else:
-                        dl = t + j.t_bc
-                    self.trace.append((dl, "downlink_done", u))
-                    self.trace.append((dl + j.t_b, "client_done", u))
-                    push(dl + j.t_b, "client_done", (u, rnd))
-                if shared and down_cell.active:
-                    sched_cell(down_cell, "down_net")
-                try_dispatch(t)
-            elif kind == "down_net":
-                if payload != down_cell.version:
-                    continue        # contention re-timed this prediction
-                for tc, tid, uid in down_cell.advance(t):
-                    if tid[0] == "aggdown":   # adapter sync, not a job
-                        extra = agg_extra.pop(tid, 0.0)
-                        push(tc + extra, "aggdown_done", uid)
-                        continue
-                    j = jobs[tid]
-                    self.trace.append((tc, "downlink_done", uid))
-                    self.trace.append((tc + j.t_b, "client_done", uid))
-                    push(tc + j.t_b, "client_done", tid)
-                sched_cell(down_cell, "down_net")
-            elif kind == "aggup_done":
-                aid, u = payload
-                agg_upload_landed(aid, u, t)
-            elif kind == "aggdown_done":
-                agg_download_landed(payload, t)
-            elif kind == "client_done":
-                u, rnd = payload
-                finished[u] += 1
-                free_at[u] = t
-                buffer[u] = rnd
-                if len(buffer) >= cfg.buffer_k:
-                    commit_fn(t, forced=False)
-                if u not in blocked and started[u] == rnd + 1:
-                    start_round(u, t)
+    @staticmethod
+    def _enc_round(res: EngineResult) -> dict:
+        return {"round_time": res.round_time,
+                "service": [[r.slot, list(r.uids), r.start, r.end]
+                            for r in res.service],
+                "completion": [[u, t] for u, t in res.completion.items()],
+                "waits": [[u, w] for u, w in res.waits.items()],
+                "dropped": list(res.dropped),
+                "events": [list(e) for e in res.events]}
+
+    @staticmethod
+    def _dec_round(st: dict) -> EngineResult:
+        return EngineResult(
+            round_time=float(st["round_time"]),
+            service=[ServiceRecord(slot=s, uids=tuple(u), start=t0, end=t1)
+                     for s, u, t0, t1 in st["service"]],
+            completion={int(u): float(t) for u, t in st["completion"]},
+            waits={int(u): float(w) for u, w in st["waits"]},
+            dropped=[int(u) for u in st["dropped"]],
+            events=[tuple(e) for e in st["events"]])
 
     # ---------------------------------------------------------------- commit
     def _commit(self, contributors, staleness, on_commit, *, time=None,

@@ -52,7 +52,11 @@ def wallclock_curve(events: Sequence[Tuple], t_index: int = 0,
 
 def running_mean(values: np.ndarray, window: int) -> np.ndarray:
     """Trailing mean over the last ``window`` samples (shorter at the head) —
-    smooths noisy per-serve losses into a comparable trajectory."""
+    smooths noisy per-serve losses into a comparable trajectory.
+
+    >>> running_mean(np.array([4.0, 2.0, 6.0, 0.0]), 2).tolist()
+    [4.0, 3.0, 4.0, 3.0]
+    """
     if window < 1:
         raise ValueError("window must be >= 1")
     v = np.asarray(values, np.float64)

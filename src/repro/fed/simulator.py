@@ -126,6 +126,20 @@ class FedRunConfig:
     # rates, live fades, and shared-medium contention with in-flight
     # activation transfers all apply (event engine only).
     agg_transport: str = "nominal"       # nominal | plane
+    # -- mid-flight checkpoint / resume (event engine; docs/checkpointing.md) -
+    # snapshot_every writes a full-state snapshot (model + optimizer +
+    # event heap + RNG streams + network/control state) into snapshot_dir
+    # whenever the SIMULATED clock crosses the next multiple — at any
+    # event boundary under the async policies, at barrier boundaries under
+    # sync.  resume_from loads such a snapshot (file or rotated directory)
+    # before training and continues the run bit-for-bit.  preempt_at is
+    # the fault-injection knob: the clock is killed at the first safe
+    # boundary at or past that simulated instant (resume from the last
+    # snapshot to model server preemption + recovery).
+    snapshot_every: Optional[float] = None   # simulated seconds per snapshot
+    snapshot_dir: Optional[str] = None       # rotated snapshot directory
+    resume_from: Optional[str] = None        # snapshot file or directory
+    preempt_at: Optional[float] = None       # kill the clock at this instant
 
 
 def validate_run_config(run: FedRunConfig, n_clients: Optional[int] = None) -> None:
@@ -198,6 +212,20 @@ def validate_run_config(run: FedRunConfig, n_clients: Optional[int] = None) -> N
     if run.engine == "analytic" and run.agg_transport != "nominal":
         raise ValueError("plane-routed aggregation transfers are integrated "
                          "by the event engines; set engine='event'")
+    # ---- mid-flight checkpoint / resume knob ownership ----
+    if run.snapshot_every is not None and run.snapshot_every <= 0:
+        raise ValueError("snapshot_every must be > 0 when set")
+    if (run.snapshot_every is None) != (run.snapshot_dir is None):
+        raise ValueError("snapshot_every and snapshot_dir go together: the "
+                         "cadence needs a directory and vice versa")
+    if run.preempt_at is not None and run.preempt_at <= 0:
+        raise ValueError("preempt_at must be > 0 when set")
+    if run.engine == "analytic" and (run.snapshot_every is not None
+                                     or run.resume_from is not None
+                                     or run.preempt_at is not None):
+        raise ValueError("mid-flight snapshots, resume and preemption are "
+                         "event-clock notions (the closed form has no "
+                         "in-flight state); set engine='event'")
     # ---- network-plane knob ownership ----
     if (run.link_model == "trace") != (run.link_traces is not None):
         raise ValueError("link_traces and link_model='trace' go together: "
@@ -285,6 +313,7 @@ class Simulator:
         validate_run_config(run, len(devices))
         self.cfg, self.run = cfg, run
         self.devices, self.cuts = list(devices), [int(c) for c in cuts]
+        self._init_cuts = [int(c) for c in cuts]   # fingerprint anchor
         self.link, self.server_dev = link, server
         self.u = len(devices)
         # the network plane: per-client link models + optional shared medium
@@ -384,6 +413,18 @@ class Simulator:
         self._round_pull: dict = {}
         self._client_version = [0] * self.u
         self.discarded_updates: List[tuple] = []   # (uid, round)
+        # mid-flight checkpoint/resume plumbing (docs/checkpointing.md):
+        # the periodic snapshotter rides the clock's tick callback, a
+        # loaded clock snapshot waits here until _run_event builds the
+        # clock, and clock_result records the last run (incl. preemption)
+        self._snapshotter = None
+        if run.snapshot_every is not None:
+            from repro.checkpointing import PeriodicSnapshotter
+            self._snapshotter = PeriodicSnapshotter(run.snapshot_dir,
+                                                    run.snapshot_every)
+        self._pending_clock_state: Optional[dict] = None
+        self._resumed = False
+        self.clock_result = None
 
     # --------------------------------------------------------------- network
     def _build_network(self, links: Optional[Sequence[LinkModel]]) -> NetworkPlane:
@@ -716,27 +757,55 @@ class Simulator:
                                 network=self.network,
                                 agg_bytes_fn=agg_bytes_fn)
         self._clock = clock
-        self._wave_losses = []
-        if run.agg_policy == "sync":
-            clock.run(plan_fn=self._plan_wave, on_serve=self._on_serve,
-                      on_commit=self._commit_sync,
-                      on_round_end=lambda rnd, res:
-                          self._on_round_end(rnd, res, verbose))
+        if self._pending_clock_state is not None:
+            # resuming a mid-flight snapshot: the clock continues the
+            # restored event loop instead of starting at t=0, and the
+            # snapshot cadence continues past the resume point
+            clock.load_state_dict(self._pending_clock_state)
+            self._pending_clock_state = None
+            if self._snapshotter is not None:
+                self._snapshotter.fast_forward(clock.now)
         else:
-            clock.run(on_serve=self._on_serve,
-                      on_commit=lambda ev: self._commit_async(ev, verbose),
-                      on_round_start=self._on_round_start)
+            self._wave_losses = []
+        tick = self._on_tick if (self._snapshotter is not None
+                                 or run.preempt_at is not None) else None
+        if run.agg_policy == "sync":
+            res = clock.run(plan_fn=self._plan_wave, on_serve=self._on_serve,
+                            on_commit=self._commit_sync,
+                            on_round_end=lambda rnd, r:
+                                self._on_round_end(rnd, r, verbose),
+                            on_tick=tick)
+        else:
+            res = clock.run(on_serve=self._on_serve,
+                            on_commit=lambda ev:
+                                self._commit_async(ev, verbose),
+                            on_round_start=self._on_round_start,
+                            on_tick=tick)
             # final-state evaluation (the async analogue of the sync path's
-            # last-round eval)
-            if self.history and self.history[-1].accuracy is None:
+            # last-round eval) — not for preempted runs, which are resumed
+            # from the last snapshot rather than finished here
+            if not res.preempted and self.history \
+                    and self.history[-1].accuracy is None:
                 rec = self.history[-1]
                 rec.accuracy, rec.f1 = self.evaluate()
                 if verbose:
                     print(f"[{run.scheme}/{run.scheduler}/{run.agg_policy}] "
                           f"final t={rec.sim_time_s:9.1f}s "
                           f"acc={rec.accuracy:.4f} f1={rec.f1:.4f}")
+        self.clock_result = res
         self.sim_clock = clock.now
         return self.history
+
+    def _on_tick(self, now: float) -> bool:
+        """Clock tick callback (every event under async policies, every
+        barrier under sync): write a due snapshot, then apply the
+        fault-injection preemption knob.  Snapshots are pure reads — a run
+        with snapshotting enabled follows the identical timeline."""
+        if self._snapshotter is not None:
+            self._snapshotter.maybe_save(now, self.state_dict)
+        if self.run.preempt_at is not None and now >= self.run.preempt_at:
+            return False
+        return True
 
     def _on_round_start(self, u: int, rnd: int, t: float) -> None:
         """A client pulls its model copy when it ENTERS a local round; the
@@ -1021,6 +1090,8 @@ class Simulator:
     # ------------------------------------------------------------------ driver
     def run_training(self, verbose: bool = False):
         run = self.run
+        if run.resume_from is not None and not self._resumed:
+            self.resume(run.resume_from)
         if run.engine == "event":
             # time is owned by the FederationClock; this loop's per-round
             # stepping is the analytic closed-form path only
@@ -1032,12 +1103,54 @@ class Simulator:
         return self.history
 
     # ------------------------------------------------------------------ state
-    def state_dict(self) -> dict:
-        """Whole-fleet training state (adapters, heads, optimizers, clock)
-        for CheckpointManager.save / resume.  Async runs resume at WHOLE-RUN
-        boundaries only (the in-flight event heap is not serialized), but
-        the standing global model and the wall-clock loss trace survive."""
+    def _fingerprint(self) -> str:
+        """Identity hash of everything a snapshot is only valid against:
+        model shape, initial assignment, fleet size, and every run knob
+        except the snapshot/resume/preemption ones (the resuming config
+        legitimately differs in exactly those)."""
+        import hashlib
+        import json
+        run = dataclasses.asdict(self.run)
+        for k in ("snapshot_every", "snapshot_dir", "resume_from",
+                  "preempt_at"):
+            run.pop(k, None)
+        doc = {"model": self.cfg.name, "n_layers": self.cfg.n_layers,
+               "d_model": self.cfg.d_model, "cuts": self._init_cuts,
+               "n_clients": self.u, "run": run}
+        return hashlib.sha256(json.dumps(doc, sort_keys=True,
+                                         default=str).encode()).hexdigest()
+
+    def _des_state(self) -> dict:
+        """JSON-able discrete-event-side state for a mid-flight snapshot:
+        the clock (event heap, buffers, credits, cells), the network
+        plane's rate processes, the control plane, both RNG streams, and
+        the run log (history, pending wave losses, discard log)."""
         return {
+            "clock": (self._clock.state_dict()
+                      if self._clock is not None else None),
+            "net": self.network.state_dict(),
+            "control": (self._control.state_dict()
+                        if self._control is not None else None),
+            "round_rng": self._round_rng.bit_generator.state,
+            "async_rng": self._async_rng.bit_generator.state,
+            "history": [[r.round, r.sim_time_s, r.mean_loss, r.accuracy,
+                         r.f1] for r in self.history],
+            "wave_losses": list(self._wave_losses),
+            "discarded": [list(d) for d in self.discarded_updates],
+        }
+
+    def state_dict(self) -> dict:
+        """Whole-fleet training state for CheckpointManager.save / resume —
+        including, since snapshot schema 2, the MID-FLIGHT state of an
+        event-engine run: the clock's event loop, in-flight round pulls,
+        RNG stream positions, link/cell processes and the control plane.
+        Loading such a snapshot into an identically configured Simulator
+        and calling run_training continues the run bit-for-bit (see
+        docs/checkpointing.md for the format and guarantees)."""
+        from repro.checkpointing import pack_json
+        st = {
+            "schema_version": np.int64(2),
+            "fingerprint": pack_json(self._fingerprint()),
             "round": np.int64(len(self.history)),
             "sim_clock": np.float64(self.sim_clock),
             "cuts": np.asarray(self.cuts, np.int64),
@@ -1053,7 +1166,20 @@ class Simulator:
             "loss_events": (np.asarray(self.loss_events, np.float64)
                             if self.loss_events
                             else np.zeros((0, 4), np.float64)),
+            "des": pack_json(self._des_state()),
+            "client_version": np.asarray(self._client_version, np.int64),
+            # in-flight round pulls: the client-side state each live
+            # (uid, round) snapshot at round start — pytrees, so they ride
+            # the array checkpoint next to the adapters
+            "round_pull": {
+                f"{u}:{r}": {"lora": lora, "opt": tuple(opt),
+                             "ver": np.int64(ver)}
+                for (u, r), (lora, opt, ver) in self._round_pull.items()},
+            "ef_residual": {str(u): arr
+                            for u, arr in enumerate(self._ef_residual)
+                            if arr is not None},
         }
+        return st
 
     def load_state_dict(self, st: dict) -> int:
         from repro.optim import AdamWState
@@ -1084,7 +1210,60 @@ class Simulator:
             self._global_head = st["global_head"]
             self.loss_events = [(float(t), int(u), int(r), float(ls))
                                 for t, u, r, ls in np.asarray(st["loss_events"])]
+        # ---- mid-flight state (snapshot schema >= 2; docs/checkpointing.md)
+        if "des" in st:
+            from repro.checkpointing import unpack_json
+            des = unpack_json(st["des"])
+            self.network.load_state_dict(des["net"])
+            if des["control"] is not None:
+                if self._control is None:
+                    raise ValueError("snapshot carries control-plane state "
+                                     "but this run has controller='static'")
+                self._control.load_state_dict(des["control"])
+            self._round_rng.bit_generator.state = des["round_rng"]
+            self._async_rng.bit_generator.state = des["async_rng"]
+            self.history = [
+                RoundRecord(int(r), float(t), float(l),
+                            None if a is None else float(a),
+                            None if f1 is None else float(f1))
+                for r, t, l, a, f1 in des["history"]]
+            self._wave_losses = [float(x) for x in des["wave_losses"]]
+            self.discarded_updates = [tuple(d) for d in des["discarded"]]
+            # the clock is rebuilt by _run_event; its restored event loop
+            # waits here until then
+            self._pending_clock_state = des["clock"]
+        if "client_version" in st:
+            self._client_version = [int(v)
+                                    for v in np.asarray(st["client_version"])]
+        self._round_pull = {}
+        for key, rec in (st.get("round_pull") or {}).items():
+            u, r = (int(x) for x in key.split(":"))
+            self._round_pull[(u, r)] = (rec["lora"], AdamWState(*rec["opt"]),
+                                        int(np.asarray(rec["ver"])))
+        for u_str, arr in (st.get("ef_residual") or {}).items():
+            self._ef_residual[int(u_str)] = arr
         return int(st["round"])
+
+    def resume(self, path: str) -> int:
+        """Load a snapshot (checkpoint file, or a rotated snapshot
+        directory — resolves to the latest) written by an identically
+        configured run, and position this simulator to continue it.  The
+        snapshot's config fingerprint must match; the snapshot/resume/
+        preemption knobs are allowed to differ.  Returns the number of
+        history records restored."""
+        from repro.checkpointing import load_snapshot, unpack_json
+        st = load_snapshot(path)
+        if "fingerprint" in st:
+            want = unpack_json(st["fingerprint"])
+            if want != self._fingerprint():
+                raise ValueError(
+                    "snapshot fingerprint mismatch: it was written by a "
+                    "differently configured run (model/fleet/knobs); "
+                    "rebuild the Simulator with the original configuration "
+                    "to resume")
+        rnd = self.load_state_dict(st)
+        self._resumed = True
+        return rnd
 
     # ------------------------------------------------------------------ memory
     def server_memory_report(self):

@@ -72,12 +72,29 @@ class LinkModel:
     constant_rate = False
 
     def rate_bps_at(self, t: float) -> float:
+        """Instantaneous rate in bits/second at global instant ``t``."""
         raise NotImplementedError
 
     def next_change(self, t: float) -> float:
         """First instant strictly after ``t`` at which the rate may change
         (``math.inf`` for a constant link)."""
         raise NotImplementedError
+
+    # ------------------------------------------------------------ persistence
+    def state_dict(self) -> dict:
+        """JSON-able mutable state (empty for stateless rate processes).
+
+        Stateful processes (the seeded Gilbert–Elliott chain) override this
+        so a mid-flight snapshot captures exactly the materialized slot
+        sequence and RNG position — a resumed run observes the SAME fades
+        at the same instants as the uninterrupted one."""
+        return {}
+
+    def load_state_dict(self, st: dict) -> None:
+        """Restore :meth:`state_dict` output onto a freshly built link."""
+        if st:
+            raise ValueError(f"{type(self).__name__} carries no state, "
+                             f"got {sorted(st)}")
 
     @property
     def nominal_mbps(self) -> float:
@@ -105,6 +122,7 @@ class LinkModel:
             t = nxt
 
     def transfer_s(self, t_start: float, nbytes: float) -> float:
+        """Duration form of :meth:`finish_time` (seconds of airtime)."""
         return self.finish_time(t_start, nbytes) - t_start
 
 
@@ -119,6 +137,10 @@ class ConstantLink(LinkModel):
     constant_rate = True
 
     def __init__(self, rate_mbps: float):
+        """
+        >>> ConstantLink(100.0).finish_time(2.0, 12.5e6)  # 100 Mb / 100 Mbps
+        3.0
+        """
         if rate_mbps <= 0:
             raise ValueError("rate_mbps must be > 0")
         self.rate_mbps = float(rate_mbps)
@@ -134,7 +156,8 @@ class ConstantLink(LinkModel):
         return self.rate_mbps
 
     def finish_time(self, t_start: float, nbytes: float) -> float:
-        # exactly LinkProfile.transfer_s's expression, added to t_start
+        """Exactly ``LinkProfile.transfer_s``'s float expression, added to
+        ``t_start`` — the bit-for-bit legacy-parity guarantee."""
         return t_start + nbytes * 8.0 / (self.rate_mbps * 1e6)
 
     def __repr__(self):
@@ -280,6 +303,19 @@ class GilbertElliottLink(LinkModel):
         denom = self.p_gb + self.p_bg
         pi_g = self.p_bg / denom if denom > 0 else 1.0
         return pi_g * self.good_mbps + (1.0 - pi_g) * self.bad_mbps
+
+    # ------------------------------------------------------------ persistence
+    def state_dict(self) -> dict:
+        """Materialized slot chain + RNG position (JSON-able).  Restoring
+        both makes the fading process continue bit-identically: slots
+        already drawn replay verbatim, future slots draw from the exact
+        generator position the snapshot froze."""
+        return {"states": [int(s) for s in self._states],
+                "rng": self._rng.bit_generator.state}
+
+    def load_state_dict(self, st: dict) -> None:
+        self._states = [bool(s) for s in st["states"]]
+        self._rng.bit_generator.state = st["rng"]
 
     def __repr__(self):
         return (f"GilbertElliottLink(good={self.good_mbps}, "

@@ -34,6 +34,18 @@ __all__ = ["NetworkPlane", "SharedCell", "shared_finish_times"]
 _EPS_BITS = 1e-3
 
 
+def encode_tuples(x):
+    """Recursively encode (possibly nested) tuples of JSON scalars as
+    lists — the JSON-snapshot form of cell transfer ids and engine event
+    payloads.  Scalars pass through unchanged."""
+    return [encode_tuples(v) for v in x] if isinstance(x, tuple) else x
+
+
+def decode_tuples(x):
+    """Inverse of :func:`encode_tuples` (lists back to tuples)."""
+    return tuple(decode_tuples(v) for v in x) if isinstance(x, list) else x
+
+
 class SharedCell:
     """Exact processor-sharing integrator for one direction of a cell.
 
@@ -121,6 +133,22 @@ class SharedCell:
         self._integrate_to(t)
         return done
 
+    # ------------------------------------------------------------ persistence
+    def state_dict(self) -> dict:
+        """JSON-able integrator state: clock, version stamp, and each
+        in-flight transfer's remaining bits in admission order.  Transfer
+        ids are tuples in the engines; they are encoded as lists here and
+        re-tupled on load."""
+        return {"now": self.now, "version": self.version,
+                "active": [[encode_tuples(tid), uid, bits]
+                           for tid, (uid, bits) in self.active.items()]}
+
+    def load_state_dict(self, st: dict) -> None:
+        self.now = float(st["now"])
+        self.version = int(st["version"])
+        self.active = {decode_tuples(tid): [int(uid), float(bits)]
+                       for tid, uid, bits in st["active"]}
+
     # ------------------------------------------------------------- integrator
     def _integrate_to(self, t: float) -> None:
         """Drain bits from ``self.now`` to ``t`` assuming NO completion in
@@ -196,6 +224,7 @@ class NetworkPlane:
 
     @property
     def n_clients(self) -> int:
+        """Fleet size (one uplink/downlink pair per client)."""
         return len(self.uplinks)
 
     @property
@@ -208,21 +237,26 @@ class NetworkPlane:
                 and all(l.constant_rate for l in self.downlinks))
 
     def nominal_mbps(self, uid: int) -> float:
+        """Scalar rate summary the analytic Eq. 10 model plans with."""
         return self.uplinks[uid].nominal_mbps
 
     # ------------------------------------------------------ dedicated finishes
     def uplink_finish(self, uid: int, t_start: float, nbytes: float) -> float:
+        """Exact dedicated-uplink landing instant (LinkModel.finish_time)."""
         if self.shared:
             raise RuntimeError("shared-medium uplinks go through a SharedCell")
         return self.uplinks[uid].finish_time(t_start, nbytes)
 
     def downlink_finish(self, uid: int, t_start: float, nbytes: float) -> float:
+        """Exact dedicated-downlink landing instant (LinkModel.finish_time)."""
         if self.shared:
             raise RuntimeError("shared-medium downlinks go through a SharedCell")
         return self.downlinks[uid].finish_time(t_start, nbytes)
 
     # ------------------------------------------------------------ shared cells
     def make_cell(self, direction: str) -> SharedCell:
+        """Fresh stateful contention cell ("up" | "down") for one engine
+        run; each simulation owns its own integrators."""
         if not self.shared:
             raise RuntimeError("make_cell is shared-medium only")
         links = {"up": self.uplinks, "down": self.downlinks}[direction]
@@ -244,6 +278,33 @@ class NetworkPlane:
                                          concurrent=concurrent) \
                 if math.isfinite(nxt) else math.inf
         return t + float(nbytes) * 8.0 / r
+
+    # ------------------------------------------------------------ persistence
+    def state_dict(self) -> dict:
+        """JSON-able state of every link rate process (the cells are owned
+        by whichever engine made them via :meth:`make_cell` and snapshot
+        with that engine's state, not here).  Symmetric planes (downlinks
+        ARE the uplinks) serialize the shared list once."""
+        st = {"uplinks": [l.state_dict() for l in self.uplinks]}
+        if self.downlinks is not self.uplinks:
+            st["downlinks"] = [l.state_dict() for l in self.downlinks]
+        return st
+
+    def load_state_dict(self, st: dict) -> None:
+        if len(st["uplinks"]) != len(self.uplinks):
+            raise ValueError(f"snapshot carries {len(st['uplinks'])} uplink "
+                             f"states for a {len(self.uplinks)}-client plane")
+        for link, s in zip(self.uplinks, st["uplinks"]):
+            link.load_state_dict(s)
+        if "downlinks" in st:
+            if self.downlinks is self.uplinks:
+                raise ValueError("snapshot carries asymmetric downlink state "
+                                 "but this plane is symmetric")
+            if len(st["downlinks"]) != len(self.downlinks):
+                raise ValueError("snapshot downlink count does not match "
+                                 "the plane")
+            for link, s in zip(self.downlinks, st["downlinks"]):
+                link.load_state_dict(s)
 
     @classmethod
     def constant(cls, rate_mbps: float, n_clients: int) -> "NetworkPlane":

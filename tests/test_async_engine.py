@@ -202,6 +202,15 @@ BAD_CONFIGS = [
     (ValueError, dict(engine="event", max_inflight_rounds=2)),
     (ValueError, dict(engine="event", agg_buffer_k=3)),
     (ValueError, dict(engine="event", staleness_alpha=0.5)),
+    # mid-flight snapshot/resume knob ownership
+    (ValueError, dict(engine="event", snapshot_every=1.0)),
+    (ValueError, dict(engine="event", snapshot_dir="snaps")),
+    (ValueError, dict(engine="event", snapshot_every=0.0,
+                      snapshot_dir="snaps")),
+    (ValueError, dict(engine="event", preempt_at=0.0)),
+    (ValueError, dict(snapshot_every=1.0, snapshot_dir="snaps")),
+    (ValueError, dict(resume_from="snaps")),
+    (ValueError, dict(preempt_at=1.0)),
     # async cross-knob rejections (agg_interval=1 keeps them async-valid
     # so each case isolates the knob under test)
     (ValueError, dict(engine="event", agg_policy="buffered",
@@ -239,7 +248,9 @@ def test_validation_matrix_accepts_valid_combos():
                dict(engine="event", agg_policy="staleness", agg_interval=1,
                     max_inflight_rounds=4, staleness_alpha=1.0),
                dict(scheme="sfl"), dict(scheme="sl"),
-               dict(participation=0.5, straggler_prob=0.3)):
+               dict(participation=0.5, straggler_prob=0.3),
+               dict(engine="event", snapshot_every=1.0, snapshot_dir="s"),
+               dict(engine="event", resume_from="s", preempt_at=2.0)):
         validate_run_config(FedRunConfig(**kw), n_clients=6)
 
 
@@ -403,3 +414,234 @@ def test_async_buffered_inflight(sim_setup):
     times = [r.sim_time_s for r in sim.history]
     assert times == sorted(times)
     assert sim._clock.version == len(sim._clock.commits)
+
+
+# -- mid-flight checkpoint / resume (docs/checkpointing.md) -------------------
+# The acceptance bar: killing a run at a random snapshot boundary and
+# resuming from the snapshot must reproduce the UNINTERRUPTED run's
+# timeline, metrics and final model bit-for-bit, for every
+# agg_policy x link_model x shared_medium x controller combination.
+
+import json  # noqa: E402
+
+from repro.configs import REGISTRY  # noqa: E402
+from repro.control import ControlLoop  # noqa: E402
+from repro.fed.devices import SERVER, make_fleet  # noqa: E402
+from repro.net import (ConstantLink, GilbertElliottLink, NetworkPlane,  # noqa: E402
+                       TraceLink)
+
+_DES_N, _DES_ROUNDS = 5, 3
+
+
+def _des_links(link_model: str, seed: int):
+    if link_model == "constant":
+        return [ConstantLink(100.0 + 10.0 * u) for u in range(_DES_N)]
+    if link_model == "trace":
+        return [TraceLink([0.0, 0.4 + 0.2 * u, 1.5 + 0.3 * u],
+                          [120.0, 15.0 + 5.0 * u, 90.0])
+                for u in range(_DES_N)]
+    return [GilbertElliottLink(120.0, 8.0, p_gb=0.3, p_bg=0.3, dwell_s=0.2,
+                               seed=seed * 7919 + u) for u in range(_DES_N)]
+
+
+def _des_build(agg_policy, link_model, shared, controller, seed=11):
+    """One DES federation: clock + plane (+ control loop), fresh objects
+    with identical constructor arguments every call — restoring snapshot
+    state onto a fresh build must continue the original timeline."""
+    net = NetworkPlane(_des_links(link_model, seed), shared=shared,
+                       capacity_mbps=160.0 if shared else None)
+    rng = np.random.default_rng(seed)
+    import dataclasses
+    ts = [dataclasses.replace(st, fc_bytes=rng.uniform(1e6, 4e6),
+                              bc_bytes=rng.uniform(1e6, 4e6))
+          for st in _times(rng, _DES_N)]
+    loop = None
+    if controller != "static":
+        cfg = REGISTRY["bert-base"]
+        devices = make_fleet(_DES_N, seed=seed)
+        cuts = [2] * _DES_N
+        loop = ControlLoop(cfg, devices, SERVER, net, cuts, batch=16,
+                           seq_len=128, controller=controller,
+                           hysteresis=0.2)
+        times_fn = loop.times_fn
+        agg_bytes = loop.agg_bytes
+        pri = loop.pri
+    else:
+        times_fn = lambda u, r: ts[u]           # noqa: E731
+        agg_bytes = lambda u: 2e6               # noqa: E731
+        pri = None
+    kw = dict(agg_policy=agg_policy)
+    if agg_policy == "sync":
+        kw["agg_interval"] = 1
+    else:
+        kw.update(policy="fifo", buffer_k=2, max_inflight_rounds=2)
+    clk = FederationClock(_DES_N, _DES_ROUNDS, ClockConfig(**kw),
+                          times_fn=times_fn, priorities=pri, network=net,
+                          agg_bytes_fn=agg_bytes)
+    return clk, net, loop, ts
+
+
+def _des_run(clk, net, loop, ts, *, kill_at_tick=None):
+    """Drive one DES federation to completion (or to a preemption)."""
+    plan_fn = None
+    if clk.cfg.agg_policy == "sync":
+        plan_fn = lambda rnd: RoundPlan(                       # noqa: E731
+            jobs=jobs_from_times([clk.times_fn(u, rnd) for u in range(_DES_N)],
+                                 range(_DES_N)), policy="fifo")
+    ticks = [0]
+
+    def tick(now):
+        ticks[0] += 1
+        return kill_at_tick is None or ticks[0] < kill_at_tick
+
+    on_commit = loop.on_commit if loop is not None else (lambda ev: 0.05)
+    on_serve = loop.on_serve if loop is not None else None
+    return clk.run(plan_fn=plan_fn, on_commit=on_commit, on_serve=on_serve,
+                   on_tick=tick)
+
+
+def _full_state(clk, net, loop):
+    return {"clock": clk.state_dict(), "net": net.state_dict(),
+            "control": None if loop is None else loop.state_dict()}
+
+
+_CKPT_GRID = [(p, lm, sh, ctl)
+              for p in ("sync", "buffered", "staleness")
+              for lm in ("constant", "trace", "gilbert")
+              for sh in (False, True)
+              for ctl in ("static", "reactive")]
+
+
+@pytest.mark.parametrize("agg_policy,link_model,shared,controller",
+                         _CKPT_GRID,
+                         ids=[f"{p}-{lm}-{'cell' if sh else 'ded'}-{c}"
+                              for p, lm, sh, c in _CKPT_GRID])
+def test_kill_resume_bit_for_bit(agg_policy, link_model, shared, controller):
+    """Acceptance: kill at a pseudo-random snapshot boundary, restore onto
+    freshly built objects, run to completion — the final clock state
+    (timeline, commits, trace, makespan) must equal the uninterrupted
+    run's EXACTLY, and a snapshot must round-trip through JSON unchanged."""
+    # uninterrupted reference
+    clk, net, loop, ts = _des_build(agg_policy, link_model, shared, controller)
+    _des_run(clk, net, loop, ts)
+    ref = json.dumps(_full_state(clk, net, loop), sort_keys=True)
+
+    # kill at a pseudo-random tick (sync ticks once per barrier wave)
+    import zlib
+    combo_id = f"{agg_policy}-{link_model}-{shared}-{controller}"
+    rng = np.random.default_rng(zlib.crc32(combo_id.encode()))
+    kill = int(rng.integers(2, _DES_ROUNDS + 1)) if agg_policy == "sync" \
+        else int(rng.integers(5, 40))
+    clk2, net2, loop2, ts2 = _des_build(agg_policy, link_model, shared,
+                                        controller)
+    res2 = _des_run(clk2, net2, loop2, ts2, kill_at_tick=kill)
+    snap = json.loads(json.dumps(_full_state(clk2, net2, loop2)))
+    if res2.preempted:
+        assert clk2.now <= clk.now + 1e-12
+
+    # restore onto fresh objects; snapshot must round-trip identically
+    clk3, net3, loop3, ts3 = _des_build(agg_policy, link_model, shared,
+                                        controller)
+    net3.load_state_dict(snap["net"])
+    clk3.load_state_dict(snap["clock"])
+    if loop3 is not None:
+        loop3.load_state_dict(snap["control"])
+    assert json.dumps(_full_state(clk3, net3, loop3), sort_keys=True) == \
+        json.dumps(snap, sort_keys=True)
+
+    # ... and the resumed run must finish the reference timeline exactly
+    _des_run(clk3, net3, loop3, ts3)
+    assert json.dumps(_full_state(clk3, net3, loop3), sort_keys=True) == ref
+
+
+def _hist(sim):
+    return (np.array([(r.sim_time_s, r.mean_loss) for r in sim.history]),
+            [r.accuracy for r in sim.history])
+
+
+def _assert_identical_runs(a, b):
+    """Timeline, metrics curve and final global model all bit-for-bit."""
+    import jax
+    assert b._clock.now == a._clock.now
+    ta, aa = _hist(a)
+    tb, ab = _hist(b)
+    np.testing.assert_array_equal(tb, ta)   # NaN-tolerant exact equality
+    assert ab == aa
+    assert b.loss_events == a.loss_events
+    assert json.dumps(b._clock.state_dict(), sort_keys=True) == \
+        json.dumps(a._clock.state_dict(), sort_keys=True)
+    for x, y in zip(jax.tree.leaves(b._global_full),
+                    jax.tree.leaves(a._global_full)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for x, y in zip(jax.tree.leaves(b._global_head),
+                    jax.tree.leaves(a._global_head)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+_SIM_CKPT_COMBOS = [
+    dict(scheduler="fifo", agg_policy="buffered", agg_buffer_k=2,
+         max_inflight_rounds=2, link_model="gilbert"),
+    dict(scheduler="ours", agg_policy="sync"),
+    dict(scheduler="fifo", agg_policy="staleness", max_inflight_rounds=2,
+         staleness_alpha=0.5, link_model="gilbert", shared_medium=True,
+         medium_capacity_mbps=150.0, agg_transport="plane",
+         controller="reactive", hysteresis=0.2),
+]
+
+
+@pytest.mark.parametrize("combo", _SIM_CKPT_COMBOS,
+                         ids=["buffered-gilbert", "sync",
+                              "staleness-cell-plane-reactive"])
+def test_simulator_kill_resume_bit_for_bit(sim_setup, tmp_path, combo):
+    """Real-math acceptance: run with periodic snapshots + a mid-run
+    preemption, resume from the snapshot directory in a FRESH simulator,
+    and match the uninterrupted run bit-for-bit — timeline, loss/accuracy
+    curves, wall-clock loss events, and the final global model."""
+    cfg, train, test = sim_setup
+
+    def mk(**extra):
+        rc = FedRunConfig(scheme="ours", rounds=3, agg_interval=1,
+                          batch_size=4, seq_len=16, lr=3e-3, eval_every=100,
+                          engine="event", **combo, **extra)
+        return Simulator(cfg, PAPER_CLIENTS[:4], [1, 1, 1, 1], train, test, rc)
+
+    ref = mk()
+    ref.run_training()
+    span = ref._clock.now
+
+    snap_dir = str(tmp_path / "snaps")
+    killed = mk(snapshot_every=span / 7, snapshot_dir=snap_dir,
+                preempt_at=span * 0.6)
+    killed.run_training()
+    assert killed.clock_result.preempted
+    assert killed._clock.now < ref._clock.now
+
+    resumed = mk(resume_from=snap_dir)
+    resumed.run_training()
+    assert not resumed.clock_result.preempted
+    _assert_identical_runs(ref, resumed)
+
+
+def test_resume_rejects_mismatched_config(sim_setup, tmp_path):
+    """A snapshot only resumes against an identically configured run: the
+    fingerprint guards against silently continuing the wrong federation."""
+    cfg, train, test = sim_setup
+
+    def mk(**extra):
+        rc = FedRunConfig(scheme="ours", scheduler="fifo", rounds=2,
+                          agg_interval=1, batch_size=4, seq_len=16, lr=3e-3,
+                          eval_every=100, engine="event",
+                          agg_policy="buffered", agg_buffer_k=2, **extra)
+        return Simulator(cfg, PAPER_CLIENTS[:4], [1, 1, 1, 1], train, test, rc)
+
+    sim = mk()
+    sim.run_training()
+    from repro.checkpointing import save
+    path = str(tmp_path / "snap.ckpt")
+    save(path, sim.state_dict())
+    with pytest.raises(ValueError, match="fingerprint"):
+        mk(seed=1).resume(path)
+    # the identical config resumes fine (whole-run boundary: a no-op run)
+    fresh = mk(resume_from=path)
+    fresh.run_training()
+    _assert_identical_runs(sim, fresh)

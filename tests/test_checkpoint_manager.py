@@ -58,7 +58,10 @@ def test_federated_resume_identical(tmp_path):
     simC = fresh()
     start = simC.load_state_dict(mgr.restore())
     assert start == 2
+    # snapshot-schema-2 restore carries the run log: the first two history
+    # records come back verbatim and the resumed rounds extend them
+    assert [rec.mean_loss for rec in simC.history] == lossesA[:2]
     for r in range(start, 4):
         simC.run_round(r)
     lossesC = [rec.mean_loss for rec in simC.history]
-    np.testing.assert_allclose(lossesA[2:], lossesC, rtol=1e-6)
+    np.testing.assert_allclose(lossesA, lossesC, rtol=1e-6)

@@ -1,0 +1,64 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the docs CI job.
+
+Scans the given markdown files for inline links/images and verifies that
+every RELATIVE target exists on disk (fragments are stripped; absolute
+URLs, mailto: and pure in-page anchors are skipped).  Exits non-zero
+listing each broken link as ``file:line: target``.
+
+Usage: python tools/check_links.py README.md ROADMAP.md docs/*.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    in_code_fence = False
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_code_fence = not in_code_fence
+        if in_code_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (path.parent / rel).exists():
+                errors.append(f"{path}:{lineno}: {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    errors: list[str] = []
+    checked = 0
+    for arg in argv:
+        p = Path(arg)
+        if not p.exists():
+            errors.append(f"{p}: file not found")
+            continue
+        checked += 1
+        errors.extend(check_file(p))
+    if errors:
+        print("broken markdown links:", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print(f"{checked} files checked, all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
