@@ -1,0 +1,114 @@
+"""Population-scale DES hot path: vectorized kernel vs per-object engine.
+
+One barrier round of a 10^4-client heterogeneous fleet through BOTH
+round kernels — the struct-of-arrays ``vectorized_round`` and the exact
+per-object ``simulate_round`` it replaces — on identical jobs.  The two
+must agree on the makespan TO THE BIT (the parity grid in
+tests/test_population.py is the fine-grained anchor; the bench records
+the wall-clock ratio, target >= 20x).  A second pair of rows runs the
+full ``PopulationClock`` (sampling + rounds + commits) flat vs two-tier
+hierarchical, so the edge/cloud commit composition shows up in the perf
+trajectory too.
+
+Rows (``us_per_call`` is wall-clock per round kernel invocation):
+
+  population_vectorized_round   SoA kernel, 10^4 clients
+  population_object_round       per-object DES, same jobs
+  population_speedup            derived ratio (acceptance: >= 20x)
+  population_clock_flat         4-round PopulationClock, cloud-only commits
+  population_clock_hierarchical same, 100 edge cells + backhaul summaries
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs import REGISTRY
+from repro.fed.config import (AggConfig, EngineConfig, FedRunConfig,
+                              FleetConfig)
+from repro.fed.fleet import FleetSpec
+from repro.fed.population import (JobArrays, PopulationClock,
+                                  step_time_arrays, vectorized_round)
+from repro.fed.engine import simulate_round
+
+N_CLIENTS = 10_000
+SLOTS, CHUNK = 4, 8
+
+
+def _round_arrays(cfg, fleet):
+    import numpy as np
+    t = step_time_arrays(cfg, fleet, _server(), batch=16, seq_len=128)
+    return JobArrays(uids=np.arange(fleet.n), t_f=t["t_f"], t_fc=t["t_fc"],
+                     t_s=t["t_s"], t_bc=t["t_bc"], t_b=t["t_b"],
+                     arrival=np.zeros(fleet.n), fc_bytes=t["fc_bytes"],
+                     bc_bytes=t["bc_bytes"])
+
+
+def _server():
+    from repro.fed.devices import SERVER
+    return SERVER
+
+
+def run(csv: bool = False):
+    cfg = REGISTRY["gemma-2b"]
+    fleet = FleetSpec(n=N_CLIENTS, seed=0, link_model="constant").population()
+    arrays = _round_arrays(cfg, fleet)
+    kw = dict(policy="fifo", slots=SLOTS, cohort_chunk=CHUNK,
+              chunk_efficiency=0.9)
+
+    t0 = time.perf_counter()
+    vec = vectorized_round(arrays, collect_events=False, **kw)
+    t_vec = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    obj = simulate_round(arrays.to_jobs(), **kw)
+    t_obj = time.perf_counter() - t0
+
+    if vec.round_time != obj.round_time:
+        raise AssertionError(
+            f"kernel divergence: vectorized {vec.round_time!r} "
+            f"!= per-object {obj.round_time!r}")
+    speedup = t_obj / t_vec
+    events = 6 * len(vec.completion)
+
+    rows = [
+        ("population_vectorized_round", t_vec * 1e6,
+         f"n={N_CLIENTS} makespan={vec.round_time:.3f}s "
+         f"events_per_s={events / t_vec:.0f}"),
+        ("population_object_round", t_obj * 1e6,
+         f"n={N_CLIENTS} makespan={obj.round_time:.3f}s "
+         f"events_per_s={events / t_obj:.0f}"),
+        ("population_speedup", 0.0,
+         f"{speedup:.1f}x vectorized vs per-object (target >= 20x, "
+         f"makespans bit-identical)"),
+    ]
+
+    # full driver: sampling + rounds + commits, flat vs two-tier
+    base = dict(rounds=4, batch_size=16, seq_len=128,
+                agg=AggConfig(interval=2),
+                engine=EngineConfig(mode="event", scheduler="ours",
+                                    slots=SLOTS, cohort_chunk=CHUNK,
+                                    chunk_efficiency=0.9))
+    for label, fc in (
+            ("population_clock_flat",
+             FleetConfig(sampling="pareto", rate=0.2,
+                         population_threshold=1)),
+            ("population_clock_hierarchical",
+             FleetConfig(sampling="pareto", rate=0.2,
+                         population_threshold=1, edge_cells=100))):
+        t0 = time.perf_counter()
+        res = PopulationClock(cfg, fleet,
+                              FedRunConfig(fleet=fc, **base)).run()
+        dt = time.perf_counter() - t0
+        rows.append((label, dt * 1e6 / len(res.round_makespans),
+                     f"n={N_CLIENTS} rounds={len(res.round_makespans)} "
+                     f"cohort={res.cohort_sizes[0]} "
+                     f"makespan={res.makespan:.3f}s modes={set(res.modes)}"))
+
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(csv=True)

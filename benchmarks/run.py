@@ -4,6 +4,7 @@
   bench_table1      — paper Table I (memory / round time / convergence)
   bench_scheduling  — §V scheduling comparison (ours/FIFO/WF/optimal)
   bench_control     — adaptive cut control plane vs static on deep fades
+  bench_population  — 10^4-client vectorized DES vs per-object (>= 20x)
   bench_kernels     — Pallas kernel wrappers + arithmetic-intensity deltas
   bench_fig2        — Fig. 2 accuracy/F1-vs-time curves (real reduced run)
   roofline          — §Roofline aggregation of the dry-run records
@@ -106,13 +107,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_ablations, bench_control, bench_fig2,
-                            bench_kernels, bench_scheduling, bench_table1,
-                            roofline)
+                            bench_kernels, bench_population,
+                            bench_scheduling, bench_table1, roofline)
     benches = [
         ("table1", bench_table1.run),
         ("scheduling", bench_scheduling.run),
         ("network", bench_scheduling.run_network),
         ("control", bench_control.run),
+        ("population", bench_population.run),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]

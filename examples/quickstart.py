@@ -9,7 +9,8 @@ every I rounds (Eqs. 5-9); Alg. 2 orders the server queue.
 """
 from repro.configs import REGISTRY, reduced
 from repro.data import make_emotion_dataset
-from repro.fed import FedRunConfig, PAPER_CLIENTS, Simulator
+from repro.fed import (AggConfig, EngineConfig, FedRunConfig, PAPER_CLIENTS,
+                       Simulator)
 
 # 1. a reduced BERT (2 layers, d=256) so the demo runs in ~a minute on CPU
 cfg = reduced(REGISTRY["bert-base"], n_layers=4, d_model=256)
@@ -20,8 +21,11 @@ train = make_emotion_dataset(2000, seq_len=32, vocab_size=cfg.vocab_size, seed=0
 test = make_emotion_dataset(400, seq_len=32, vocab_size=cfg.vocab_size, seed=1)
 
 # 3. the paper's §V setup: 6 devices, cuts per device capacity, Alg. 2 order
-run = FedRunConfig(scheme="ours", scheduler="ours", rounds=12, agg_interval=4,
-                   batch_size=16, seq_len=32, lr=3e-3, eval_every=4)
+#    (training knobs at the top level, subsystem knobs in grouped sub-configs)
+run = FedRunConfig(scheme="ours", rounds=12, batch_size=16, seq_len=32,
+                   lr=3e-3, eval_every=4,
+                   engine=EngineConfig(scheduler="ours"),
+                   agg=AggConfig(interval=4))
 sim = Simulator(cfg, PAPER_CLIENTS, cuts=[1, 1, 2, 2, 3, 3],
                 train=train, test=test, run=run)
 

@@ -23,7 +23,8 @@ import numpy as np
 from repro.configs import REGISTRY, reduced
 from repro.core.partition import assign_cuts
 from repro.data import make_emotion_dataset
-from repro.fed import (AGG_POLICIES, FedRunConfig, PAPER_CLIENTS, PAPER_CUTS,
+from repro.fed import (AGG_POLICIES, AggConfig, ControlConfig, EngineConfig,
+                       FedRunConfig, NetConfig, PAPER_CLIENTS, PAPER_CUTS,
                        Simulator, validate_run_config)
 
 
@@ -152,27 +153,32 @@ def main():
     for entry in args.schemes.split(","):
         scheme, _, sched = entry.partition("-")
         sched = sched or "ours"
-        run = FedRunConfig(scheme=scheme, scheduler=sched, rounds=args.rounds,
-                           agg_interval=args.agg_interval,
+        run = FedRunConfig(scheme=scheme, rounds=args.rounds,
                            batch_size=args.batch, seq_len=args.seq,
                            lr=args.lr, alpha=args.alpha, seed=args.seed,
                            eval_every=max(args.rounds // 10, 1),
-                           engine=args.engine, agg_policy=args.agg_policy,
-                           max_inflight_rounds=args.max_inflight_rounds,
-                           agg_buffer_k=args.agg_buffer_k,
-                           staleness_alpha=args.staleness_alpha,
-                           link_model=link_model,
-                           link_traces=link_traces,
-                           shared_medium=args.shared_medium,
-                           medium_capacity_mbps=args.medium_capacity_mbps,
-                           controller=args.controller,
-                           resolve_every=args.resolve_every,
-                           hysteresis=args.hysteresis,
-                           agg_transport=args.agg_transport,
                            snapshot_every=args.snapshot_every,
                            snapshot_dir=args.snapshot_dir,
                            resume_from=args.resume_from,
-                           preempt_at=args.kill_at)
+                           preempt_at=args.kill_at,
+                           engine=EngineConfig(mode=args.engine,
+                                               scheduler=sched),
+                           agg=AggConfig(
+                               policy=args.agg_policy,
+                               interval=args.agg_interval,
+                               buffer_k=args.agg_buffer_k,
+                               max_inflight=args.max_inflight_rounds,
+                               staleness_alpha=args.staleness_alpha,
+                               transport=args.agg_transport),
+                           net=NetConfig(
+                               link_model=link_model,
+                               traces=link_traces,
+                               shared=args.shared_medium,
+                               capacity_mbps=args.medium_capacity_mbps),
+                           control=ControlConfig(
+                               policy=args.controller,
+                               resolve_every=args.resolve_every,
+                               hysteresis=args.hysteresis))
         try:   # surface the FedRunConfig validation matrix as argparse errors
             validate_run_config(run, len(PAPER_CLIENTS))
         except (KeyError, ValueError) as e:

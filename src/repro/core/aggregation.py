@@ -82,6 +82,55 @@ def staleness_weights(data_sizes: Sequence[int], staleness: Sequence[int],
     return normalize_weights(raw)
 
 
+def composed_staleness_discount(client_staleness: int, edge_staleness: int,
+                                alpha: float) -> float:
+    """Two-tier staleness discount: a contribution that was ``s_c`` versions
+    old when its EDGE merged it, inside an edge summary that was ``s_e``
+    versions old when the CLOUD merged that, discounts multiplicatively —
+    ``(1+s_c)^-alpha * (1+s_e)^-alpha``.  Each tier applies the same
+    polynomial family it would apply alone, so a zero-staleness tier is the
+    identity and the flat (single-tier) discount is the ``s_e = 0`` case."""
+    return (staleness_discount(client_staleness, alpha)
+            * staleness_discount(edge_staleness, alpha))
+
+
+def hierarchical_aggregate(full_loras: Sequence[PyTree],
+                           weights: Sequence[float],
+                           cells: Sequence[Sequence[int]]):
+    """Two-tier Eq. 6-8: each edge cell partially merges its members'
+    full-depth adapters with the members' data-size weights, then the cloud
+    merges the edge summaries weighted by each cell's total data mass.
+
+    ``cells`` holds member INDICES into ``full_loras`` (a partition of the
+    contributors; cells with no contributing member may be omitted).  The
+    two-level weighted mean telescopes to the flat Eq. 6-8 weighted mean —
+    total client weight is conserved (to float tolerance, since each tier
+    normalizes in float32) — which the property tests pin down.
+
+    Returns ``(aggregated_full, edge_summaries, edge_weights)`` so callers
+    can keep per-edge partials (for staleness bookkeeping or edge-local
+    serving) alongside the cloud adapter.
+    """
+    if len(full_loras) != len(weights):
+        raise ValueError("one weight per adapter tree required")
+    idx_seen = [i for cell in cells for i in cell]
+    if len(set(idx_seen)) != len(idx_seen):
+        raise ValueError("edge cells must not share contributors")
+    if set(idx_seen) != set(range(len(full_loras))):
+        raise ValueError("edge cells must cover every contributor exactly "
+                         "once")
+    summaries, cell_masses = [], []
+    for cell in cells:
+        if not cell:
+            continue
+        cell_w = [float(weights[i]) for i in cell]
+        summaries.append(aggregate_full_weighted(
+            [full_loras[i] for i in cell], cell_w))
+        cell_masses.append(sum(cell_w))
+    agg = aggregate_full_weighted(summaries, cell_masses)
+    return agg, summaries, cell_masses
+
+
 def merge_into_global(global_full: PyTree, contrib_fulls: Sequence[PyTree],
                       contrib_weights: Sequence[float],
                       anchor_weight: float) -> PyTree:

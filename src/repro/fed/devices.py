@@ -1,14 +1,11 @@
 """Device fleet from the paper's §V simulation setup."""
 from __future__ import annotations
 
-import math
+import warnings
 from typing import List
 
-import numpy as np
-
 from repro.core.cost_model import DeviceProfile, LinkProfile
-from repro.net import (ConstantLink, GilbertElliottLink, LinkModel,
-                       TraceLink)
+from repro.net import LinkModel
 
 # six heterogeneous clients (name, TFLOPS, memory GB) — paper §V
 JETSON_NANO = DeviceProfile("jetson-nano", tflops=0.472, mem_gb=4.0)
@@ -33,24 +30,14 @@ TPU_V5E = DeviceProfile("tpu-v5e", tflops=197.0, mem_gb=16.0, utilization=0.55)
 
 
 def make_fleet(n: int, seed: int = 0, jitter: float = 0.25) -> List[DeviceProfile]:
-    """A heterogeneous n-client fleet for beyond-paper cohorts: cycle the six
-    §V device profiles with a deterministic +/-``jitter`` TFLOPS spread so no
-    two clients pace identically (ragged arrivals are what the async
-    aggregation policies exploit)."""
-    if n < 1:
-        raise ValueError("fleet size must be >= 1")
-    if not 0.0 <= jitter < 1.0:
-        raise ValueError("jitter must be in [0, 1)")
-    rng = np.random.default_rng(seed)
-    fleet = []
-    for i in range(n):
-        base = PAPER_CLIENTS[i % len(PAPER_CLIENTS)]
-        scale = 1.0 + jitter * float(rng.uniform(-1.0, 1.0))
-        fleet.append(DeviceProfile(f"{base.name}#{i}",
-                                   tflops=base.tflops * scale,
-                                   mem_gb=base.mem_gb,
-                                   utilization=base.utilization))
-    return fleet
+    """Deprecated: use ``repro.fed.fleet.FleetSpec(n, seed, jitter=...).devices()``.
+
+    Thin wrapper kept for compatibility — the FleetSpec path reproduces
+    this function's rng stream exactly."""
+    warnings.warn("make_fleet is deprecated; use FleetSpec(...).devices()",
+                  DeprecationWarning, stacklevel=2)
+    from repro.fed.fleet import FleetSpec
+    return FleetSpec(n=n, seed=seed, jitter=jitter).devices()
 
 
 def make_link_fleet(n: int, seed: int = 0, *, model: str = "gilbert",
@@ -61,52 +48,16 @@ def make_link_fleet(n: int, seed: int = 0, *, model: str = "gilbert",
                     bad_fraction: float = 0.1,
                     p_gb: float = 0.2,
                     p_bg: float = 0.4) -> List[LinkModel]:
-    """Heterogeneous per-client links for the network plane — the wireless
-    counterpart of ``make_fleet`` (same deterministic-jitter idea).
+    """Deprecated: use ``repro.fed.fleet.FleetSpec(n, seed, link_model=...,
+    link_jitter=...).links()``.
 
-    model="constant"  per-client fixed rates with a +/- ``jitter`` spread;
-    model="trace"     piecewise traces: a slow sinusoidal fade with
-                      per-client phase plus per-segment jitter, sampled
-                      every ``dwell_s`` over ``horizon_s`` (the last rate
-                      holds beyond the horizon);
-    model="gilbert"   seeded two-state fading channels whose good rate
-                      carries the jitter spread; the bad state drops to
-                      ``bad_fraction`` of the good rate and the chain flips
-                      with ``p_gb``/``p_bg`` per ``dwell_s`` slot.  Long
-                      dwells + small ``bad_fraction``/``p_bg`` give the
-                      DEEP multi-second fades the control-plane benches
-                      react to (a fade must outlive a re-assignment for
-                      adaptation to pay).
-
-    Feed the result to ``Simulator(links=..., run.link_model="custom")`` or
-    directly into a ``NetworkPlane``.
-    """
-    if n < 1:
-        raise ValueError("fleet size must be >= 1")
-    if not 0.0 <= jitter < 1.0:
-        raise ValueError("jitter must be in [0, 1)")
-    if not 0.0 < bad_fraction <= 1.0:
-        raise ValueError("bad_fraction must be in (0, 1]")
-    rng = np.random.default_rng(seed)
-    links: List[LinkModel] = []
-    for i in range(n):
-        rate = base_mbps * (1.0 + jitter * float(rng.uniform(-1.0, 1.0)))
-        if model == "constant":
-            links.append(ConstantLink(rate))
-        elif model == "trace":
-            phase = float(rng.uniform(0.0, 2.0 * math.pi))
-            period = float(rng.uniform(8.0, 20.0)) * dwell_s
-            ts = np.arange(0.0, horizon_s, dwell_s)
-            # deep fades: troughs reach ~1/8 of the client's peak rate
-            fade = 0.125 + 0.875 * (0.5 + 0.5 * np.sin(
-                2.0 * math.pi * ts / period + phase))
-            noise = 1.0 + 0.2 * rng.uniform(-1.0, 1.0, size=ts.size)
-            rates = np.maximum(rate * fade * noise, base_mbps * 0.02)
-            links.append(TraceLink(ts.tolist(), rates.tolist()))
-        elif model == "gilbert":
-            links.append(GilbertElliottLink(
-                rate, rate * bad_fraction, p_gb=p_gb, p_bg=p_bg,
-                dwell_s=dwell_s, seed=int(rng.integers(0, 2 ** 31))))
-        else:
-            raise KeyError(f"unknown link fleet model {model!r}")
-    return links
+    Thin wrapper kept for compatibility — the FleetSpec path reproduces
+    this function's rng stream exactly (see the FleetSpec docstring for the
+    trace/gilbert link shapes these knobs control)."""
+    warnings.warn("make_link_fleet is deprecated; use FleetSpec(...).links()",
+                  DeprecationWarning, stacklevel=2)
+    from repro.fed.fleet import FleetSpec
+    return FleetSpec(n=n, seed=seed, link_model=model, base_mbps=base_mbps,
+                     link_jitter=jitter, dwell_s=dwell_s,
+                     horizon_s=horizon_s, bad_fraction=bad_fraction,
+                     p_gb=p_gb, p_bg=p_bg).links()

@@ -41,6 +41,7 @@ from typing import (Callable, Dict, List, Mapping, Optional, Sequence,
 from repro.core.cost_model import StepTimes, chunked_service_time
 from repro.net import NetworkPlane, shared_finish_times
 from repro.net.plane import decode_tuples, encode_tuples
+from repro.net.topology import EdgeTopology, edge_commit_legs
 
 __all__ = ["AGG_POLICIES", "ClockConfig", "ClockResult", "CommitEvent",
            "EngineResult", "FederationClock", "Job", "RoundPlan",
@@ -507,7 +508,9 @@ class FederationClock:
                  times_fn: Optional[Callable[[int, int], StepTimes]] = None,
                  priorities: Optional[Sequence[float]] = None,
                  network: Optional[NetworkPlane] = None,
-                 agg_bytes_fn: Optional[Callable[[int], float]] = None):
+                 agg_bytes_fn: Optional[Callable[[int], float]] = None,
+                 edges: Optional[EdgeTopology] = None,
+                 summary_bytes: float = 0.0):
         if n_clients < 1 or rounds < 1:
             raise ValueError("need at least one client and one round")
         if cfg.agg_policy != "sync" and times_fn is None:
@@ -519,10 +522,22 @@ class FederationClock:
         if agg_bytes_fn is not None and network is None:
             raise ValueError("plane-routed aggregation (agg_bytes_fn) needs "
                              "a network plane to route through")
+        if edges is not None:
+            if agg_bytes_fn is None:
+                raise ValueError("two-tier commits route adapters through "
+                                 "the plane; edges needs agg_bytes_fn")
+            if cfg.agg_policy != "sync":
+                raise ValueError("two-tier hierarchical aggregation commits "
+                                 "at sync barriers")
+            covered = {u for cell in edges.cells for u in cell}
+            if covered != set(range(n_clients)):
+                raise ValueError("edge cells must partition the fleet")
         self.n, self.rounds, self.cfg = n_clients, rounds, cfg
         self.times_fn, self.priorities = times_fn, priorities
         self.network = network
         self.agg_bytes_fn = agg_bytes_fn
+        self.edges = edges
+        self.summary_bytes = float(summary_bytes)
         self.now = 0.0
         self.version = 0              # global model version (commit count)
         self.serves: List[ServeEvent] = []
@@ -620,11 +635,25 @@ class FederationClock:
                     # merge at the last upload, resume at the last download.
                     # Download payloads are read AFTER on_commit ran — a
                     # control decision there redistributes at the new cuts.
-                    t_merge = max(self._routed_leg(served, self.now,
-                                                   "up").values())
+                    # With an edge topology, members sync their own edge
+                    # cell first and only merged summaries ride the
+                    # backhaul (the cloud merge waits for the slowest
+                    # cell, not the slowest client).
+                    if self.edges is not None:
+                        _, t_merge = edge_commit_legs(
+                            self.edges, self.network, served, self.now,
+                            self.agg_bytes_fn, self.summary_bytes, "up")
+                    else:
+                        t_merge = max(self._routed_leg(served, self.now,
+                                                       "up").values())
                     overhead, per = self._commit(served, zeros, on_commit,
                                                  time=t_merge)
-                    down_f = self._routed_leg(served, t_merge, "down")
+                    if self.edges is not None:
+                        down_f, _ = edge_commit_legs(
+                            self.edges, self.network, served, t_merge,
+                            self.agg_bytes_fn, self.summary_bytes, "down")
+                    else:
+                        down_f = self._routed_leg(served, t_merge, "down")
                     extra = per if per is not None \
                         else {u: overhead for u in served}
                     self.now = max(self.now,

@@ -38,260 +38,26 @@ from repro.core.scheduling import (ONLINE_DISCIPLINES, SCHEDULERS,
                                    resolve_online, resolve_order)
 from repro.data import ClassificationLoader, EmotionDataset, dirichlet_partition
 from repro.fed import metrics as M
+# the run configuration moved to fed/config.py (grouped sub-configs with
+# flat-kwarg compatibility shims); re-exported here so every existing
+# ``from repro.fed.simulator import FedRunConfig`` keeps working
+from repro.fed.config import (AggConfig, ControlConfig, EngineConfig,  # noqa: F401
+                              FedRunConfig, FleetConfig, LINK_MODELS,
+                              NetConfig, validate_run_config)
 from repro.fed.devices import LINK, SERVER
 from repro.fed.engine import (AGG_POLICIES, ClockConfig, FederationClock,
                               RoundPlan, jobs_from_times)
+from repro.net.topology import EdgeTopology
 from repro.models import build_model
 from repro.optim import AdamW
 
 SFL_FRAGMENTATION = 1.04   # multi-model GPU contention overhead (paper §V-B)
-
-LINK_MODELS = ("constant", "trace", "gilbert", "custom")
 
 # Gilbert–Elliott defaults for link_model="gilbert": the bad state drops to
 # a tenth of the nominal rate; dwell/transition values give ~1/3 bad time
 # at the 100 Mbps / ~0.5 s-transfer scale of the paper's setup
 GE_BAD_FRACTION = 0.1
 GE_P_GB, GE_P_BG, GE_DWELL_S = 0.2, 0.4, 0.5
-
-
-@dataclasses.dataclass
-class FedRunConfig:
-    scheme: str = "ours"            # ours | sfl | sl
-    scheduler: str = "ours"         # ours | fifo | wf | optimal
-    rounds: int = 50
-    agg_interval: int = 5           # the paper's I
-    batch_size: int = 16
-    seq_len: int = 128
-    lr: float = 1e-5
-    alpha: float = 0.5              # dirichlet non-IID concentration
-    seed: int = 0
-    eval_every: int = 5             # sync: barrier rounds between evals;
-    #                                 async: aggregation COMMITS between evals
-    #                                 (staleness with agg_buffer_k=1 commits
-    #                                 per upload — raise eval_every to keep
-    #                                 evaluation cost comparable)
-    target_accuracy: Optional[float] = None   # early-stop => convergence round
-    # -- beyond-paper system knobs (EXPERIMENTS.md §Perf / ablations) --------
-    quantize_activations: bool = False   # int8+EF on the wireless links
-    participation: float = 1.0           # fraction of clients sampled per round
-    straggler_prob: float = 0.0          # per-client chance of a slow round
-    straggler_slowdown: float = 3.0      # compute slowdown when straggling
-    # -- server engine (fed/engine.py) ---------------------------------------
-    engine: str = "analytic"             # analytic (Eq. 10-12) | event (DES)
-    # cohort_chunk works under BOTH engines (it picks the batched vmapped
-    # server step for chunks > 1); with engine="analytic" the round TIME
-    # stays the sequential makespan — only "event" models chunked service.
-    cohort_chunk: int = 1                # clients per batched server dispatch
-    # event-only knobs (rejected under engine="analytic"):
-    chunk_efficiency: float = 1.0        # k>1 chunk cost vs summed sequential
-    server_slots: int = 1                # concurrent server executors
-    round_deadline: Optional[float] = None  # drop stragglers mid-round
-    # -- continuous-time async federation (event engine only) ----------------
-    # "sync" is the paper's barrier round; "buffered" commits whenever
-    # agg_buffer_k distinct client uploads accumulate; "staleness" adds the
-    # polynomial (1+s)^-alpha discount to the Eq. 6-8 weights.
-    agg_policy: str = "sync"             # sync | buffered | staleness
-    max_inflight_rounds: int = 1         # local rounds a client may run past
-    #                                      its last aggregation commit
-    agg_buffer_k: Optional[int] = None   # commit threshold (default: U//2 for
-    #                                      buffered, 1 for staleness)
-    staleness_alpha: Optional[float] = None  # polynomial discount exponent
-    #                                      (staleness policy only; default 0.5)
-    # -- network plane (repro/net; time-varying links need engine='event') ----
-    # "constant" is byte-exact parity with the legacy fixed-rate arithmetic;
-    # "trace" drives each client from a piecewise bandwidth trace
-    # (link_traces); "gilbert" gives each client a seeded two-state fading
-    # channel; "custom" takes LinkModels via Simulator(links=...).
-    link_model: str = "constant"         # constant | trace | gilbert | custom
-    link_traces: Optional[Sequence] = None  # per-client (breakpoints, rates)
-    #                                      tuples OR paths to bandwidth CSVs
-    #                                      (TraceLink.from_csv)
-    shared_medium: bool = False          # concurrent transfers split a cell
-    medium_capacity_mbps: Optional[float] = None  # cell capacity per direction
-    # -- adaptive control plane (repro/control; needs engine='event') ---------
-    # "static" freezes the setup-phase assignment (bit-exact legacy parity);
-    # "periodic" re-solves the cut assignment every resolve_every commits;
-    # "reactive" re-solves when a client's live link-rate estimate leaves
-    # its hysteresis band or its memory headroom goes negative.  Accepted
-    # re-assignments ship prefix weights + adapters through the network
-    # plane and are only taken when the predicted gain pays that bill.
-    controller: str = "static"           # static | periodic | reactive
-    resolve_every: int = 1               # periodic-only: commits per re-solve
-    hysteresis: Optional[float] = None   # reactive-only band (default 0.25)
-    # -- aggregation transport ------------------------------------------------
-    # "nominal" keeps the legacy scalar-link adapter-sync charge (2x the
-    # slowest upload at the nominal rate); "plane" routes every
-    # contributor's adapter sync through the network plane — per-client
-    # rates, live fades, and shared-medium contention with in-flight
-    # activation transfers all apply (event engine only).
-    agg_transport: str = "nominal"       # nominal | plane
-    # -- mid-flight checkpoint / resume (event engine; docs/checkpointing.md) -
-    # snapshot_every writes a full-state snapshot (model + optimizer +
-    # event heap + RNG streams + network/control state) into snapshot_dir
-    # whenever the SIMULATED clock crosses the next multiple — at any
-    # event boundary under the async policies, at barrier boundaries under
-    # sync.  resume_from loads such a snapshot (file or rotated directory)
-    # before training and continues the run bit-for-bit.  preempt_at is
-    # the fault-injection knob: the clock is killed at the first safe
-    # boundary at or past that simulated instant (resume from the last
-    # snapshot to model server preemption + recovery).
-    snapshot_every: Optional[float] = None   # simulated seconds per snapshot
-    snapshot_dir: Optional[str] = None       # rotated snapshot directory
-    resume_from: Optional[str] = None        # snapshot file or directory
-    preempt_at: Optional[float] = None       # kill the clock at this instant
-
-
-def validate_run_config(run: FedRunConfig, n_clients: Optional[int] = None) -> None:
-    """Exhaustive FedRunConfig validation matrix.
-
-    Every engine/scheme/policy knob combination is either meaningful or
-    rejected here — nothing is silently ignored.  Enum membership raises
-    KeyError; range and cross-knob violations raise ValueError.
-    """
-    # ---- enums ----
-    if run.scheme not in ("ours", "sfl", "sl"):
-        raise KeyError(f"unknown scheme {run.scheme!r}")
-    if run.scheduler not in SCHEDULERS:
-        raise KeyError(f"unknown scheduling policy {run.scheduler!r}")
-    if run.engine not in ("analytic", "event"):
-        raise KeyError(f"unknown engine {run.engine!r}")
-    if run.agg_policy not in AGG_POLICIES:
-        raise KeyError(f"unknown aggregation policy {run.agg_policy!r}")
-    if run.link_model not in LINK_MODELS:
-        raise KeyError(f"unknown link model {run.link_model!r}")
-    if run.controller not in CONTROLLERS:
-        raise KeyError(f"unknown controller {run.controller!r}")
-    if run.agg_transport not in ("nominal", "plane"):
-        raise KeyError(f"unknown aggregation transport {run.agg_transport!r}")
-    # ---- scalar ranges ----
-    if run.rounds < 1 or run.agg_interval < 1 or run.eval_every < 1:
-        raise ValueError("rounds, agg_interval and eval_every must be >= 1")
-    if run.batch_size < 1 or run.seq_len < 1:
-        raise ValueError("batch_size and seq_len must be >= 1")
-    if run.lr <= 0 or run.alpha <= 0:
-        raise ValueError("lr and alpha must be > 0")
-    if not 0.0 < run.participation <= 1.0:
-        raise ValueError("participation must be in (0, 1]")
-    if not 0.0 <= run.straggler_prob <= 1.0:
-        raise ValueError("straggler_prob must be in [0, 1]")
-    if run.straggler_slowdown < 1.0:
-        raise ValueError("straggler_slowdown must be >= 1")
-    if run.cohort_chunk < 1 or run.server_slots < 1:
-        raise ValueError("cohort_chunk and server_slots must be >= 1")
-    if not 0.0 < run.chunk_efficiency <= 1.0:
-        raise ValueError("chunk_efficiency must be in (0, 1]")
-    if run.round_deadline is not None and run.round_deadline <= 0:
-        raise ValueError("round_deadline must be > 0 when set")
-    if run.max_inflight_rounds < 1:
-        raise ValueError("max_inflight_rounds must be >= 1")
-    if run.staleness_alpha is not None and run.staleness_alpha < 0:
-        raise ValueError("staleness_alpha must be >= 0")
-    if run.agg_buffer_k is not None:
-        if run.agg_buffer_k < 1:
-            raise ValueError("agg_buffer_k must be >= 1 when set")
-        if n_clients is not None and run.agg_buffer_k > n_clients:
-            raise ValueError("agg_buffer_k cannot exceed the fleet size")
-    # ---- control-plane knob ownership ----
-    if run.resolve_every < 1:
-        raise ValueError("resolve_every must be >= 1")
-    if run.controller != "periodic" and run.resolve_every != 1:
-        raise ValueError("resolve_every is the PERIODIC controller's "
-                         "cadence; other controllers would silently "
-                         "ignore it")
-    if run.hysteresis is not None:
-        if run.controller != "reactive":
-            raise ValueError("hysteresis is only read by "
-                             "controller='reactive'")
-        if run.hysteresis <= 0:
-            raise ValueError("hysteresis must be > 0 when set")
-    if run.engine == "analytic" and run.controller != "static":
-        raise ValueError("online re-assignment observes telemetry at the "
-                         "event clock's commit boundaries; the closed form "
-                         "has none — set engine='event'")
-    if run.engine == "analytic" and run.agg_transport != "nominal":
-        raise ValueError("plane-routed aggregation transfers are integrated "
-                         "by the event engines; set engine='event'")
-    # ---- mid-flight checkpoint / resume knob ownership ----
-    if run.snapshot_every is not None and run.snapshot_every <= 0:
-        raise ValueError("snapshot_every must be > 0 when set")
-    if (run.snapshot_every is None) != (run.snapshot_dir is None):
-        raise ValueError("snapshot_every and snapshot_dir go together: the "
-                         "cadence needs a directory and vice versa")
-    if run.preempt_at is not None and run.preempt_at <= 0:
-        raise ValueError("preempt_at must be > 0 when set")
-    if run.engine == "analytic" and (run.snapshot_every is not None
-                                     or run.resume_from is not None
-                                     or run.preempt_at is not None):
-        raise ValueError("mid-flight snapshots, resume and preemption are "
-                         "event-clock notions (the closed form has no "
-                         "in-flight state); set engine='event'")
-    # ---- network-plane knob ownership ----
-    if (run.link_model == "trace") != (run.link_traces is not None):
-        raise ValueError("link_traces and link_model='trace' go together: "
-                         "traces drive exactly that model")
-    if run.link_traces is not None and n_clients is not None \
-            and len(run.link_traces) != n_clients:
-        raise ValueError("need one (breakpoints, rates) trace per client")
-    if run.shared_medium:
-        if run.medium_capacity_mbps is None or run.medium_capacity_mbps <= 0:
-            raise ValueError("shared_medium needs medium_capacity_mbps > 0")
-    elif run.medium_capacity_mbps is not None:
-        raise ValueError("medium_capacity_mbps is only read with "
-                         "shared_medium=True")
-    if run.engine == "analytic" and (run.link_model != "constant"
-                                     or run.shared_medium):
-        raise ValueError("time-varying / contended links are integrated by "
-                         "the event engines; the closed form only knows the "
-                         "nominal scalar rate — set engine='event'")
-    # ---- engine cross-knob matrix ----
-    if run.engine == "analytic":
-        if (run.chunk_efficiency != 1.0 or run.server_slots != 1
-                or run.round_deadline is not None):
-            raise ValueError("chunk_efficiency / server_slots / "
-                             "round_deadline model the event-driven round "
-                             "clock; set engine='event' to use them")
-        if run.agg_policy != "sync" or run.max_inflight_rounds != 1:
-            raise ValueError("async federation (agg_policy, "
-                             "max_inflight_rounds) needs the "
-                             "continuous-time clock; set engine='event'")
-    else:   # event
-        if run.scheme != "ours":
-            # the DES models the paper's single shared-server queue; sfl
-            # (concurrent submodels) and sl (strictly sequential) keep
-            # their own closed-form time models
-            raise ValueError("engine='event' only models scheme='ours'")
-    # ---- aggregation-policy knob ownership (no knob silently ignored) ----
-    if run.agg_policy != "staleness" and run.staleness_alpha is not None:
-        raise ValueError("staleness_alpha is only read by "
-                         "agg_policy='staleness'")
-    if run.agg_policy == "sync":
-        if run.agg_buffer_k is not None:
-            raise ValueError("agg_buffer_k is the ASYNC commit threshold; "
-                             "sync commits every agg_interval barriers")
-        if run.max_inflight_rounds != 1:
-            raise ValueError("sync aggregation is a barrier: "
-                             "max_inflight_rounds must be 1")
-    else:
-        if run.agg_interval != 1:
-            raise ValueError("async commit cadence is agg_buffer_k uploads, "
-                             "not rounds; set agg_interval=1 (the sync-only "
-                             "knob would be silently ignored otherwise)")
-        if run.participation < 1.0:
-            raise ValueError("per-round cohort sampling is a synchronous "
-                             "notion; async policies pace every client "
-                             "continuously (set participation=1.0)")
-        if run.round_deadline is not None:
-            raise ValueError("round_deadline is a synchronous notion; async "
-                             "policies bound lag via max_inflight_rounds")
-        if run.scheduler not in ONLINE_DISCIPLINES:
-            raise ValueError(f"scheduler {run.scheduler!r} has no online "
-                             "form; async policies re-sort a live queue "
-                             f"(choose from {sorted(ONLINE_DISCIPLINES)})")
-        if run.target_accuracy is not None:
-            raise ValueError("target_accuracy early-stop is defined on "
-                             "barrier rounds; not supported under async "
-                             "aggregation policies")
 
 
 @dataclasses.dataclass
@@ -304,21 +70,50 @@ class RoundRecord:
 
 
 class Simulator:
-    def __init__(self, cfg: ModelConfig, devices: Sequence[DeviceProfile],
-                 cuts: Sequence[int], train: EmotionDataset,
-                 test: EmotionDataset, run: FedRunConfig,
+    def __init__(self, cfg: ModelConfig, devices: Optional[Sequence[DeviceProfile]] = None,
+                 cuts: Optional[Sequence[int]] = None,
+                 train: EmotionDataset = None,
+                 test: EmotionDataset = None, run: FedRunConfig = None,
                  link: LinkProfile = LINK, server: DeviceProfile = SERVER,
-                 links: Optional[Sequence[LinkModel]] = None):
+                 links: Optional[Sequence[LinkModel]] = None,
+                 fleet: Optional["FleetSpec"] = None):
+        if fleet is not None:
+            # FleetSpec builder path: ONE seeded spec yields devices, cuts
+            # and (under link_model="custom") the per-client LinkModels
+            if devices is not None or cuts is not None:
+                raise ValueError("pass either fleet=FleetSpec(...) or "
+                                 "explicit devices/cuts, not both")
+            devices, cuts = fleet.devices(), fleet.cuts()
+            if links is None and run is not None \
+                    and run.net.link_model == "custom":
+                links = fleet.links()
+        if devices is None or cuts is None or run is None:
+            raise TypeError("Simulator needs devices+cuts (or fleet=) and run=")
         assert len(devices) == len(cuts)
         validate_run_config(run, len(devices))
+        if run.fleet.size is not None and run.fleet.size != len(devices):
+            raise ValueError(f"run.fleet.size={run.fleet.size} but "
+                             f"{len(devices)} devices were materialized")
         self.cfg, self.run = cfg, run
         self.devices, self.cuts = list(devices), [int(c) for c in cuts]
         self._init_cuts = [int(c) for c in cuts]   # fingerprint anchor
         self.link, self.server_dev = link, server
         self.u = len(devices)
         # the network plane: per-client link models + optional shared medium
-        # (run.link_model="constant" is byte-exact legacy parity)
+        # (run.net.link_model="constant" is byte-exact legacy parity)
         self.network = self._build_network(links)
+        if run.engine.mode == "analytic" and not self.network.constant_rate:
+            raise ValueError("the closed-form engine needs constant-rate "
+                             "links (custom LinkModels must be ConstantLink);"
+                             " set engine mode='event' for time-varying ones")
+        # two-tier edge/cloud topology for hierarchical aggregation
+        self._edges: Optional[EdgeTopology] = None
+        if run.fleet.edge_cells > 1:
+            self._edges = EdgeTopology.grouped(
+                self.u, run.fleet.edge_cells,
+                backhaul_mbps=run.fleet.backhaul_mbps,
+                cell_capacity_mbps=run.fleet.edge_capacity_mbps)
+        self._cap_ranks: Optional[np.ndarray] = None
         self.model = build_model(cfg)
         rng = jax.random.PRNGKey(run.seed)
         self.params = self.model.init_params(rng)
@@ -382,12 +177,12 @@ class Simulator:
         # static controller attaches nothing at all — the legacy code path
         # runs untouched (regression-tested bit-for-bit).
         self._control: Optional[ControlLoop] = None
-        if run.controller != "static":
+        if run.control.policy != "static":
             self._control = ControlLoop(
                 cfg, self.devices, server, self.network, self.cuts,
                 batch=run.batch_size, seq_len=run.seq_len,
-                controller=run.controller, resolve_every=run.resolve_every,
-                hysteresis=run.hysteresis, scheduler=run.scheduler,
+                controller=run.control.policy, resolve_every=run.control.resolve_every,
+                hysteresis=run.control.hysteresis, scheduler=run.engine.scheduler,
                 max_cut=cfg.n_layers - 1)
         self.history: List[RoundRecord] = []
         self.sim_clock = 0.0
@@ -431,7 +226,7 @@ class Simulator:
         """Materialize the run's network plane from the link knobs (or the
         caller-supplied LinkModels under link_model='custom')."""
         run = self.run
-        if run.link_model == "custom":
+        if run.net.link_model == "custom":
             if links is None:
                 raise ValueError("link_model='custom' needs Simulator("
                                  "links=[LinkModel, ...])")
@@ -440,12 +235,12 @@ class Simulator:
             ups = list(links)
         elif links is not None:
             raise ValueError("explicit links= require link_model='custom'")
-        elif run.link_model == "constant":
+        elif run.net.link_model == "constant":
             ups = [ConstantLink(self.link.rate_mbps) for _ in range(self.u)]
-        elif run.link_model == "trace":
+        elif run.net.link_model == "trace":
             # entries are (breakpoints, rates) tuples or bandwidth-CSV paths
             ups = [TraceLink.from_csv(tr) if isinstance(tr, (str, Path))
-                   else TraceLink(tr[0], tr[1]) for tr in run.link_traces]
+                   else TraceLink(tr[0], tr[1]) for tr in run.net.traces]
         else:   # gilbert
             base = self.link.rate_mbps
             ups = [GilbertElliottLink(base, base * GE_BAD_FRACTION,
@@ -453,8 +248,8 @@ class Simulator:
                                       dwell_s=GE_DWELL_S,
                                       seed=run.seed * 7919 + u)
                    for u in range(self.u)]
-        return NetworkPlane(ups, shared=run.shared_medium,
-                            capacity_mbps=run.medium_capacity_mbps)
+        return NetworkPlane(ups, shared=run.net.shared,
+                            capacity_mbps=run.net.capacity_mbps)
 
     # ------------------------------------------------------------------ time
     def _transport_ratio(self) -> float:
@@ -475,11 +270,11 @@ class Simulator:
         for u, st in enumerate(self.times):
             t_f, t_b, t_fc, t_bc = st.t_f, st.t_b, st.t_fc, st.t_bc
             fcb, bcb = st.fc_bytes, st.bc_bytes
-            if run.straggler_prob > 0 and \
-                    self._round_rng.random() < run.straggler_prob:
-                t_f *= run.straggler_slowdown
-                t_b *= run.straggler_slowdown
-            if run.quantize_activations:
+            if run.fleet.straggler_prob > 0 and \
+                    self._round_rng.random() < run.fleet.straggler_prob:
+                t_f *= run.fleet.straggler_slowdown
+                t_b *= run.fleet.straggler_slowdown
+            if run.net.quantize:
                 ratio = self._transport_ratio()
                 t_fc *= ratio
                 t_bc *= ratio
@@ -498,11 +293,11 @@ class Simulator:
         st = self.times[u]
         t_f, t_b, t_fc, t_bc = st.t_f, st.t_b, st.t_fc, st.t_bc
         fcb, bcb = st.fc_bytes, st.bc_bytes
-        if run.straggler_prob > 0 and \
-                self._async_rng.random() < run.straggler_prob:
-            t_f *= run.straggler_slowdown
-            t_b *= run.straggler_slowdown
-        if run.quantize_activations:
+        if run.fleet.straggler_prob > 0 and \
+                self._async_rng.random() < run.fleet.straggler_prob:
+            t_f *= run.fleet.straggler_slowdown
+            t_b *= run.fleet.straggler_slowdown
+        if run.net.quantize:
             ratio = self._transport_ratio()
             t_fc *= ratio
             t_bc *= ratio
@@ -522,23 +317,39 @@ class Simulator:
         run = self.run
         t = self._times_this_round
         tfl = [d.tflops for d in self.devices]
-        chunk = max(1, int(run.cohort_chunk))
-        order = resolve_order(run.scheduler, t, self.cuts, tfl)
+        chunk = max(1, int(run.engine.cohort_chunk))
+        order = resolve_order(run.engine.scheduler, t, self.cuts, tfl)
         order = [u for u in order if u in self._active]
         self._last_event = None
         return [order[i:i + chunk] for i in range(0, len(order), chunk)]
 
     def _sample_cohort(self) -> None:
-        """Partial participation: sample this round's client cohort into
-        ``self._active`` (one rng draw per sampled round, shared by the
-        analytic loop and the sync barrier waves for stream parity)."""
+        """Per-round cohort sampling into ``self._active`` via the fleet
+        sampling policy (one rng draw per sampled round, shared by the
+        analytic loop and the sync barrier waves for stream parity).
+        ``uniform`` reproduces the legacy scalar-``participation`` stream
+        bit-for-bit; ``pareto`` biases the same-size draw toward capable
+        clients with rank-Pareto weights (Jung et al. 2024)."""
         run = self.run
-        if run.participation < 1.0 and run.scheme != "sl":
-            k = max(1, int(round(run.participation * self.u)))
-            self._active = sorted(self._round_rng.choice(
-                self.u, size=k, replace=False).tolist())
-        else:
+        if run.fleet.sampling == "full" or run.scheme == "sl":
             self._active = list(range(self.u))
+            return
+        from repro.fed.population import sample_cohort
+        self._active = sample_cohort(
+            self._round_rng, self.u, run.fleet.sampling, run.fleet.rate,
+            ranks=self._capability_ranks(),
+            pareto_alpha=run.fleet.pareto_alpha)
+
+    def _capability_ranks(self) -> np.ndarray:
+        """Dense capability ranks (0 = fastest client, ties by uid) for the
+        Pareto-biased sampler — cached; the fleet's TFLOPS never change."""
+        if self._cap_ranks is None:
+            tfl = np.array([d.tflops for d in self.devices])
+            order = np.lexsort((np.arange(self.u), -tfl))
+            ranks = np.empty(self.u, dtype=np.int64)
+            ranks[order] = np.arange(self.u)
+            self._cap_ranks = ranks
+        return self._cap_ranks
 
     def _round_time(self, order: Sequence[int]) -> float:
         t = self._times_this_round
@@ -568,7 +379,7 @@ class Simulator:
         """One closed-form (analytic-engine) barrier round.  Event-engine
         rounds are driven by the FederationClock inside ``run_training``."""
         run = self.run
-        if run.engine == "event":
+        if run.engine.mode == "event":
             raise RuntimeError("engine='event' rounds are owned by the "
                                "FederationClock; call run_training()")
         self._times_this_round = self._adjusted_times()
@@ -580,7 +391,7 @@ class Simulator:
         self.sim_clock += self._round_time(order)
 
         # aggregation phase (not for SL)
-        if run.scheme in ("ours", "sfl") and (rnd + 1) % run.agg_interval == 0:
+        if run.scheme in ("ours", "sfl") and (rnd + 1) % run.agg.interval == 0:
             self.sim_clock += self._commit_sync(None)
 
         # a deadline can cut every client out of a round -> no losses
@@ -617,7 +428,7 @@ class Simulator:
             batches[u] = batch
             fwd, _ = self._cli_steps[self.cuts[u]]
             v = fwd(self.client_params[u], self.client_lora[u], batch)
-            if run.quantize_activations:
+            if run.net.quantize:
                 # int8 + error-feedback uplink (repro/comm)
                 from repro.comm import dequantize, quantize_with_feedback
                 qx, self._ef_residual[u] = quantize_with_feedback(
@@ -658,7 +469,7 @@ class Simulator:
         self.server_opt[u] = new_opt
 
     def _client_backward(self, u: int, batch, dv):
-        if self.run.quantize_activations:
+        if self.run.net.quantize:
             from repro.comm import dequantize, quantize
             dv = dequantize(quantize(dv), dv.dtype)   # downlink int8
         _, bwd = self._cli_steps[self.cuts[u]]
@@ -710,22 +521,27 @@ class Simulator:
     # jitted math at every server dispatch and into a commit handler at every
     # aggregation, and the driver folds the results into history/loss_events.
 
+    def _summary_bytes(self) -> float:
+        """One edge summary = the full-depth adapter set (every cell merges
+        its members into one full LoRA tree before the backhaul hop)."""
+        return lora_upload_bytes(self.cfg, self.cfg.n_layers)
+
     def _resolved_buffer_k(self) -> int:
         run = self.run
-        if run.agg_buffer_k is not None:
-            return run.agg_buffer_k
+        if run.agg.buffer_k is not None:
+            return run.agg.buffer_k
         # buffered: semi-sync half-cohort; staleness: fully async (every
         # upload commits, the discount keeps stale ones from dominating)
-        return 1 if run.agg_policy == "staleness" else max(1, self.u // 2)
+        return 1 if run.agg.policy == "staleness" else max(1, self.u // 2)
 
     def _run_event(self, verbose: bool = False):
         run = self.run
         tfl = [d.tflops for d in self.devices]
-        if run.agg_policy == "sync":
+        if run.agg.policy == "sync":
             policy = "fifo"              # per-wave RoundPlan carries the real
             pri = None                   # discipline / fixed order
         else:
-            policy, needs_pri = resolve_online(run.scheduler)
+            policy, needs_pri = resolve_online(run.engine.scheduler)
             if not needs_pri:
                 pri = None
             elif self._control is not None:
@@ -735,16 +551,16 @@ class Simulator:
                 pri = self._control.pri
             else:
                 pri = alg2_priorities(self.cuts, tfl)
-        ccfg = ClockConfig(policy=policy, slots=run.server_slots,
-                           cohort_chunk=max(1, int(run.cohort_chunk)),
-                           chunk_efficiency=run.chunk_efficiency,
-                           deadline=run.round_deadline,
-                           agg_policy=run.agg_policy,
-                           agg_interval=run.agg_interval,
+        ccfg = ClockConfig(policy=policy, slots=run.engine.slots,
+                           cohort_chunk=max(1, int(run.engine.cohort_chunk)),
+                           chunk_efficiency=run.engine.chunk_efficiency,
+                           deadline=run.engine.deadline,
+                           agg_policy=run.agg.policy,
+                           agg_interval=run.agg.interval,
                            buffer_k=self._resolved_buffer_k(),
-                           max_inflight_rounds=run.max_inflight_rounds)
+                           max_inflight_rounds=run.agg.max_inflight)
         agg_bytes_fn = None
-        if run.agg_transport == "plane":
+        if run.agg.transport == "plane":
             # live cuts: a migrated client ships its NEW adapter payload.
             # With a control loop attached, use ITS accounting so the DES
             # benches and the Simulator charge identical payloads.
@@ -755,7 +571,12 @@ class Simulator:
         clock = FederationClock(self.u, run.rounds, ccfg,
                                 times_fn=self._async_times, priorities=pri,
                                 network=self.network,
-                                agg_bytes_fn=agg_bytes_fn)
+                                agg_bytes_fn=agg_bytes_fn,
+                                edges=(self._edges if agg_bytes_fn is not None
+                                       else None),
+                                summary_bytes=(self._summary_bytes()
+                                               if self._edges is not None
+                                               else 0.0))
         self._clock = clock
         if self._pending_clock_state is not None:
             # resuming a mid-flight snapshot: the clock continues the
@@ -769,7 +590,7 @@ class Simulator:
             self._wave_losses = []
         tick = self._on_tick if (self._snapshotter is not None
                                  or run.preempt_at is not None) else None
-        if run.agg_policy == "sync":
+        if run.agg.policy == "sync":
             res = clock.run(plan_fn=self._plan_wave, on_serve=self._on_serve,
                             on_commit=self._commit_sync,
                             on_round_end=lambda rnd, r:
@@ -789,7 +610,7 @@ class Simulator:
                 rec = self.history[-1]
                 rec.accuracy, rec.f1 = self.evaluate()
                 if verbose:
-                    print(f"[{run.scheme}/{run.scheduler}/{run.agg_policy}] "
+                    print(f"[{run.scheme}/{run.engine.scheduler}/{run.agg.policy}] "
                           f"final t={rec.sim_time_s:9.1f}s "
                           f"acc={rec.accuracy:.4f} f1={rec.f1:.4f}")
         self.clock_result = res
@@ -846,13 +667,13 @@ class Simulator:
         t = self._times_this_round
         tfl = [d.tflops for d in self.devices]
         uids = sorted(self._active)
-        if run.scheduler in ONLINE_DISCIPLINES:
-            policy, needs_pri = ONLINE_DISCIPLINES[run.scheduler]
+        if run.engine.scheduler in ONLINE_DISCIPLINES:
+            policy, needs_pri = ONLINE_DISCIPLINES[run.engine.scheduler]
             pri = alg2_priorities(self.cuts, tfl) if needs_pri else None
             return RoundPlan(jobs=jobs_from_times(t, uids, priorities=pri),
                              policy=policy)
         # e.g. "optimal": no online form — replay its fixed order
-        order = [u for u in resolve_order(run.scheduler, t, self.cuts, tfl)
+        order = [u for u in resolve_order(run.engine.scheduler, t, self.cuts, tfl)
                  if u in self._active]
         return RoundPlan(jobs=jobs_from_times(t, uids), order=order)
 
@@ -880,8 +701,25 @@ class Simulator:
         servers_split = [lora_lib.split_lora(self.server_lora[u],
                                              self.cuts[u])[1]
                          for u in range(self.u)]
-        new_c, new_s, agg_full = agg_lib.aggregation_round(
-            self.client_lora, servers_split, self.cuts, self.data_sizes)
+        if self._edges is not None:
+            # two-tier Eq. 6-8: edge cells partially merge their members,
+            # the cloud merges the edge summaries (telescopes to the flat
+            # weighted mean; edge partials kept for inspection/tests)
+            fulls = [lora_lib.assemble_full(self.client_lora[u],
+                                            servers_split[u], self.cuts[u])
+                     for u in range(self.u)]
+            agg_full, self.edge_summaries, self.edge_masses = \
+                agg_lib.hierarchical_aggregate(
+                    fulls, [float(s) for s in self.data_sizes],
+                    [list(cell) for cell in self._edges.cells])
+            new_c, new_s = [], []
+            for cut in self.cuts:
+                c, s = lora_lib.split_lora(agg_full, cut)
+                new_c.append(c)
+                new_s.append(s)
+        else:
+            new_c, new_s, agg_full = agg_lib.aggregation_round(
+                self.client_lora, servers_split, self.cuts, self.data_sizes)
         # the UPLOAD leg shipped the adapters the clients actually trained —
         # price it at the PRE-migration cuts, before any decision applies
         up_old = max(self.link.transfer_s(lora_upload_bytes(self.cfg, cut))
@@ -913,18 +751,42 @@ class Simulator:
         self.client_opt = [self.opt.init(c) for c in self.client_lora]
         self.server_opt = [self.opt.init({"lora": s, "head": self.heads[u]})
                            for u, s in enumerate(self.server_lora)]
-        if self.run.agg_transport == "plane":
-            # the clock ships the adapters through the plane; we only add
-            # the migration charges (per-client extra past each download)
-            return mig
+        if self.run.agg.transport == "plane":
+            if ev is not None:
+                # the clock ships the adapters through the plane (two-tier
+                # legs included); we only add the migration charges
+                # (per-client extra past each download)
+                return mig
+            # ANALYTIC plane routing (closed form): the guard in __init__
+            # pinned every link to a constant rate, so both legs price in
+            # closed form from a barrier instant — per-client rates, and
+            # the two-tier cell/backhaul composition when edges are on.
+            # Controller is static under analytic, so old cuts == new cuts.
+            bytes_of = lambda u: lora_upload_bytes(self.cfg, self.cuts[u])  # noqa: E731
+            if self._edges is not None:
+                from repro.net.topology import edge_commit_legs
+                _, up_bar = edge_commit_legs(
+                    self._edges, self.network, range(self.u), 0.0,
+                    bytes_of, self._summary_bytes(), "up")
+                _, down_bar = edge_commit_legs(
+                    self._edges, self.network, range(self.u), up_bar,
+                    bytes_of, self._summary_bytes(), "down")
+                return down_bar
+            up = max(self.network.uplinks[u].finish_time(0.0, bytes_of(u))
+                     for u in range(self.u))
+            return max(self.network.downlinks[u].finish_time(up, bytes_of(u))
+                       for u in range(self.u))
         # aggregation transfer at the scalar nominal link: upload at the
-        # old cuts, download (the redistribute) at the new ones
+        # old cuts, download (the redistribute) at the new ones; two-tier
+        # topologies add one summary per direction over the backhaul
+        hier = (2.0 * self._edges.backhaul_s(self._summary_bytes())
+                if self._edges is not None else 0.0)
         if changes:
             down_new = max(self.link.transfer_s(
                 lora_upload_bytes(self.cfg, cut)) for cut in self.cuts)
-            return {u: up_old + down_new + mig.get(u, 0.0)
+            return {u: up_old + down_new + hier + mig.get(u, 0.0)
                     for u in range(self.u)}
-        return 2 * up_old
+        return 2 * up_old + hier
 
     def _commit_async(self, ev, verbose: bool = False) -> float:
         """Async commit: fold the buffered contributors into the standing
@@ -940,8 +802,8 @@ class Simulator:
                      self.cuts[u])
                  for u in contribs]
         alpha = 0.0
-        if run.agg_policy == "staleness":
-            alpha = 0.5 if run.staleness_alpha is None else run.staleness_alpha
+        if run.agg.policy == "staleness":
+            alpha = 0.5 if run.agg.staleness_alpha is None else run.agg.staleness_alpha
         w = [self.data_sizes[u] * agg_lib.staleness_discount(s, alpha)
              for u, s in zip(contribs, ev.staleness)]
         anchor = float(sum(self.data_sizes)
@@ -977,7 +839,7 @@ class Simulator:
             self.server_opt[u] = self.opt.init(
                 {"lora": self.server_lora[u], "head": self._global_head})
             self._client_version[u] += 1   # in-flight rounds of u now race
-        if self.run.agg_transport == "plane":
+        if self.run.agg.transport == "plane":
             # the clock routes the adapter syncs; migrations ride as
             # per-client extras past each contributor's download
             ret: Union[float, Dict[int, float]] = mig
@@ -1000,7 +862,7 @@ class Simulator:
         if len(self.history) % run.eval_every == 0:
             rec.accuracy, rec.f1 = self.evaluate()
             if verbose:
-                print(f"[{run.scheme}/{run.scheduler}/{run.agg_policy}] "
+                print(f"[{run.scheme}/{run.engine.scheduler}/{run.agg.policy}] "
                       f"commit {ev.version:4d} t={rec.sim_time_s:9.1f}s "
                       f"loss={rec.mean_loss:.4f} acc={rec.accuracy:.4f} "
                       f"f1={rec.f1:.4f} "
@@ -1042,7 +904,7 @@ class Simulator:
         if (rnd + 1) % run.eval_every == 0 or rnd == run.rounds - 1:
             rec.accuracy, rec.f1 = self.evaluate()
             if verbose:
-                print(f"[{run.scheme}/{run.scheduler}] round {rnd+1:4d} "
+                print(f"[{run.scheme}/{run.engine.scheduler}] round {rnd+1:4d} "
                       f"t={rec.sim_time_s:9.1f}s loss={rec.mean_loss:.4f} "
                       f"acc={rec.accuracy:.4f} f1={rec.f1:.4f}")
             if (run.target_accuracy is not None
@@ -1055,7 +917,7 @@ class Simulator:
         """Global model = aggregate of current full adapters (ours/sfl), the
         traveling set (sl), or the standing async global (buffered/staleness
         policies); evaluated centrally on the held-out set."""
-        if self.run.agg_policy != "sync":
+        if self.run.agg.policy != "sync":
             full = self._global_full
             head = self._global_head
         elif self.run.scheme == "sl":
@@ -1092,7 +954,7 @@ class Simulator:
         run = self.run
         if run.resume_from is not None and not self._resumed:
             self.resume(run.resume_from)
-        if run.engine == "event":
+        if run.engine.mode == "event":
             # time is owned by the FederationClock; this loop's per-round
             # stepping is the analytic closed-form path only
             return self._run_event(verbose)

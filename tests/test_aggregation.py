@@ -191,3 +191,73 @@ def test_aggregation_a_b_separate(setup):
         # separate-mean property
         a2, b2 = dict((p, (a, b)) for p, a, b in lora_lib.adapter_list(l2))[path]
         np.testing.assert_allclose(np.asarray(ao), (np.asarray(a1) + np.asarray(a2)) / 2, atol=1e-5)
+
+
+# -- two-tier hierarchical aggregation (population-scale fleets) --------------
+
+def test_hierarchical_telescopes_to_flat(setup):
+    """Edge-cell partial merges + cloud merge of summaries == the flat
+    Eq. 6-8 weighted mean, for every partition shape."""
+    cfg, model = setup
+    loras = [_rand_lora(model, s) for s in range(6)]
+    weights = [3.0, 1.0, 2.0, 5.0, 1.0, 4.0]
+    flat = agg.aggregate_full_weighted(loras, weights)
+    for cells in ([[0, 1, 2], [3, 4, 5]],
+                  [[0], [1], [2], [3], [4], [5]],
+                  [[0, 1, 2, 3, 4, 5]],
+                  [[5, 0], [4, 1], [3, 2]]):
+        hier, summaries, masses = agg.hierarchical_aggregate(
+            loras, weights, cells)
+        assert len(summaries) == len(cells)
+        for a, b in zip(jax.tree.leaves(hier), jax.tree.leaves(flat)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+
+
+def test_hierarchical_conserves_total_weight(setup):
+    """Property: cell masses sum to the total client weight, and a fleet of
+    identical adapters aggregates to itself (mean-preserving)."""
+    cfg, model = setup
+    rng = np.random.default_rng(0)
+    for trial in range(3):
+        n = int(rng.integers(3, 8))
+        weights = rng.uniform(0.5, 9.0, size=n).tolist()
+        cut = sorted(rng.choice(n - 1, size=min(2, n - 1),
+                                replace=False).tolist())
+        bounds = [0] + [c + 1 for c in cut] + [n]
+        cells = [list(range(bounds[i], bounds[i + 1]))
+                 for i in range(len(bounds) - 1) if bounds[i] < bounds[i + 1]]
+        same = _rand_lora(model, 42)
+        hier, _, masses = agg.hierarchical_aggregate([same] * n, weights,
+                                                     cells)
+        assert sum(masses) == pytest.approx(sum(weights))
+        for a, b in zip(jax.tree.leaves(hier), jax.tree.leaves(same)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+
+
+def test_hierarchical_rejects_bad_partitions(setup):
+    cfg, model = setup
+    loras = [_rand_lora(model, s) for s in range(3)]
+    with pytest.raises(ValueError):   # overlap
+        agg.hierarchical_aggregate(loras, [1, 1, 1], [[0, 1], [1, 2]])
+    with pytest.raises(ValueError):   # incomplete cover
+        agg.hierarchical_aggregate(loras, [1, 1, 1], [[0, 1]])
+    with pytest.raises(ValueError):   # weight arity
+        agg.hierarchical_aggregate(loras, [1, 1], [[0, 1, 2]])
+
+
+def test_composed_staleness_discount_properties():
+    """(1+s_c)^-a * (1+s_e)^-a: zero-staleness tiers are the identity and
+    the composition reduces to the flat discount when one tier is fresh."""
+    assert agg.composed_staleness_discount(0, 0, 0.7) == 1.0
+    for s in range(4):
+        assert agg.composed_staleness_discount(s, 0, 0.5) \
+            == agg.staleness_discount(s, 0.5)
+        assert agg.composed_staleness_discount(0, s, 0.5) \
+            == agg.staleness_discount(s, 0.5)
+    assert agg.composed_staleness_discount(2, 3, 0.5) == pytest.approx(
+        agg.staleness_discount(2, 0.5) * agg.staleness_discount(3, 0.5))
+    # monotone: staler contributions never gain weight
+    vals = [agg.composed_staleness_discount(s, 1, 0.5) for s in range(5)]
+    assert all(a > b for a, b in zip(vals, vals[1:]))

@@ -1,0 +1,329 @@
+"""Population-scale fleets: the vectorized DES kernel must reproduce the
+per-object engine bit-for-bit, FleetSpec materializations must share one
+rng stream, and the PopulationClock's mode switch must never change the
+timeline."""
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.core.cost_model import LinkProfile, client_step_times
+from repro.fed.config import (AggConfig, EngineConfig, FedRunConfig,
+                              FleetConfig, NetConfig)
+from repro.fed.engine import Job, simulate_round
+from repro.fed.fleet import FleetSpec
+from repro.fed.population import (JobArrays, PopulationClock, pareto_weights,
+                                  sample_cohort, step_time_arrays,
+                                  vectorized_round)
+from repro.net import (ConstantLink, GilbertElliottLink, NetworkPlane,
+                       TraceLink)
+
+
+# ---------------------------------------------------------------------------
+# vectorized_round == simulate_round, bit for bit
+# ---------------------------------------------------------------------------
+
+N_JOBS = 12
+
+
+def _jobs(seed):
+    rng = np.random.default_rng(seed)
+    return [Job(uid=u, t_f=float(rng.uniform(0.2, 2.0)),
+                t_fc=float(rng.uniform(0.1, 1.0)),
+                t_s=float(rng.uniform(0.3, 1.5)),
+                t_bc=float(rng.uniform(0.1, 1.0)),
+                t_b=float(rng.uniform(0.2, 1.0)),
+                arrival=float(rng.uniform(0.0, 0.5)),
+                fc_bytes=float(rng.uniform(1e5, 5e6)),
+                bc_bytes=float(rng.uniform(1e5, 5e6)))
+            for u in range(N_JOBS)]
+
+
+def _planes():
+    rng = np.random.default_rng(99)
+    rates = rng.uniform(20.0, 120.0, size=N_JOBS)
+    yield "none", None
+    yield "constant", NetworkPlane([ConstantLink(r) for r in rates])
+    yield "shared", NetworkPlane([ConstantLink(r) for r in rates],
+                                 shared=True, capacity_mbps=150.0)
+    yield "trace", NetworkPlane(
+        [TraceLink([0.0, 3.0, 8.0], [r, r * 0.3, r * 0.8]) for r in rates])
+    yield "gilbert", NetworkPlane(
+        [GilbertElliottLink(r, r * 0.1, p_gb=0.2, p_bg=0.4, dwell_s=0.5,
+                            seed=u) for u, r in enumerate(rates)])
+
+
+def _assert_same(a, b, ctx):
+    assert a.round_time == b.round_time, ctx
+    assert a.completion == b.completion, ctx
+    assert a.waits == b.waits, ctx
+    assert a.dropped == b.dropped, ctx
+    assert a.events == b.events, ctx
+    assert [(r.uids, r.start, r.end) for r in a.service] \
+        == [(r.uids, r.start, r.end) for r in b.service], ctx
+
+
+@pytest.mark.parametrize("plane_name,plane", list(_planes()),
+                         ids=[n for n, _ in _planes()])
+def test_vectorized_round_bit_exact_grid(plane_name, plane):
+    """The regression anchor: every (slots, chunk, deadline, discipline,
+    t_origin) cell of the grid reproduces the per-object DES exactly —
+    same completions, waits, drops, event trace and service records."""
+    jobs = _jobs(7)
+    arrays = JobArrays.from_jobs(jobs)
+    fixed_order = sorted(range(N_JOBS), key=lambda u: -jobs[u].t_s)
+    for slots in (1, 3):
+        for chunk in (1, 2):
+            for deadline in (None, 6.0):
+                for t_origin in (0.0, 37.5):
+                    for order in (None, fixed_order):
+                        kw = dict(policy="fifo", order=order, slots=slots,
+                                  cohort_chunk=chunk, chunk_efficiency=0.8,
+                                  deadline=deadline, network=plane,
+                                  t_origin=t_origin)
+                        ref = simulate_round([Job(**vars(j)) for j in jobs],
+                                             **kw)
+                        vec = vectorized_round(arrays, **kw)
+                        _assert_same(ref, vec,
+                                     (plane_name, slots, chunk, deadline,
+                                      t_origin, order is not None))
+
+
+def test_vectorized_round_rejects_online_priority_policies():
+    arrays = JobArrays.from_jobs(_jobs(3))
+    with pytest.raises(ValueError):
+        vectorized_round(arrays, policy="priority")
+
+
+# ---------------------------------------------------------------------------
+# step_time_arrays == scalar client_step_times per element
+# ---------------------------------------------------------------------------
+
+def test_step_time_arrays_matches_scalar():
+    cfg = tiny("bert-base", n_layers=4, d_model=64)
+    spec = FleetSpec(n=10, seed=5, link_model="constant")
+    fleet = spec.population()
+    from repro.fed.devices import SERVER
+    arr = step_time_arrays(cfg, fleet, SERVER, batch=8, seq_len=32)
+    for u, dev in enumerate(spec.devices()):
+        st = client_step_times(cfg, int(fleet.cuts[u]), dev, SERVER,
+                               LinkProfile(float(fleet.rate_mbps[u])),
+                               8, 32)
+        assert float(arr["t_f"][u]) == st.t_f
+        assert float(arr["t_fc"][u]) == st.t_fc
+        assert float(arr["t_s"][u]) == st.t_s
+        assert float(arr["t_bc"][u]) == st.t_bc
+        assert float(arr["t_b"][u]) == st.t_b
+        assert float(arr["fc_bytes"][u]) == st.fc_bytes
+        assert float(arr["bc_bytes"][u]) == st.bc_bytes
+
+
+# ---------------------------------------------------------------------------
+# FleetSpec: one rng stream, every materialization
+# ---------------------------------------------------------------------------
+
+def test_fleet_spec_population_matches_objects():
+    for model in ("constant", "trace", "gilbert"):
+        spec = FleetSpec(n=14, seed=11, link_model=model)
+        pop = spec.population()
+        devs = spec.devices()
+        np.testing.assert_array_equal(pop.tflops,
+                                      [d.tflops for d in devs])
+        np.testing.assert_array_equal(pop.mem_gb, [d.mem_gb for d in devs])
+        np.testing.assert_array_equal(pop.cuts, spec.cuts())
+        links = spec.links()
+        if model == "constant":
+            np.testing.assert_array_equal(pop.rate_mbps,
+                                          [l.rate_mbps for l in links])
+        elif model == "gilbert":
+            np.testing.assert_array_equal(pop.rate_mbps,
+                                          [l.good_mbps for l in links])
+
+
+def test_fleet_spec_vectorized_draw_matches_scalar_stream():
+    """population() consumes the device rng in ONE vectorized draw; it must
+    land on exactly the per-device scalar draws devices() makes."""
+    spec = FleetSpec(n=9, seed=2, jitter=0.4)
+    np.testing.assert_array_equal(spec.population().tflops,
+                                  [d.tflops for d in spec.devices()])
+    rng = np.random.default_rng(2)
+    scalar = np.array([float(rng.uniform(-1.0, 1.0)) for _ in range(9)])
+    vec = np.random.default_rng(2).uniform(-1.0, 1.0, size=9)
+    np.testing.assert_array_equal(scalar, vec)
+
+
+def test_deprecated_fleet_builders_delegate():
+    from repro.fed.devices import make_fleet, make_link_fleet
+    with pytest.deprecated_call():
+        devs = make_fleet(7, seed=4)
+    assert [d.tflops for d in devs] \
+        == [d.tflops for d in FleetSpec(n=7, seed=4).devices()]
+    with pytest.deprecated_call():
+        links = make_link_fleet(7, seed=4, model="constant")
+    assert [l.rate_mbps for l in links] \
+        == [l.rate_mbps
+            for l in FleetSpec(n=7, seed=4, link_model="constant").links()]
+
+
+# ---------------------------------------------------------------------------
+# cohort sampling policies
+# ---------------------------------------------------------------------------
+
+def test_sample_cohort_uniform_is_legacy_stream():
+    rng1 = np.random.default_rng(123)
+    rng2 = np.random.default_rng(123)
+    got = sample_cohort(rng1, 20, "uniform", 0.4)
+    k = max(1, int(round(0.4 * 20)))
+    want = sorted(rng2.choice(20, size=k, replace=False).tolist())
+    assert got == want
+
+
+def test_sample_cohort_full_consumes_no_rng():
+    rng = np.random.default_rng(1)
+    before = rng.bit_generator.state
+    assert sample_cohort(rng, 8, "full", 1.0) == list(range(8))
+    assert rng.bit_generator.state == before
+
+
+def test_sample_cohort_pareto_biases_capable_clients():
+    n = 200
+    ranks = np.arange(n)          # uid == capability rank
+    rng = np.random.default_rng(0)
+    picks = np.concatenate([
+        sample_cohort(rng, n, "pareto", 0.1, ranks=ranks, pareto_alpha=1.16)
+        for _ in range(300)])
+    uni = np.concatenate([
+        sample_cohort(rng, n, "uniform", 0.1) for _ in range(300)])
+    assert picks.mean() < uni.mean() * 0.75   # strong pull toward rank 0
+    assert len(sample_cohort(rng, n, "pareto", 0.1, ranks=ranks)) \
+        == len(sample_cohort(rng, n, "uniform", 0.1))
+
+
+def test_sample_cohort_errors():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        sample_cohort(rng, 5, "pareto", 0.5)          # needs ranks
+    with pytest.raises(KeyError):
+        sample_cohort(rng, 5, "bogus", 0.5)
+    with pytest.raises(ValueError):
+        pareto_weights(np.arange(3), 0.0)
+
+
+def test_capability_ranks_dense_and_tie_stable():
+    fleet = FleetSpec(n=12, seed=0).population()
+    ranks = fleet.capability_ranks()
+    assert sorted(ranks.tolist()) == list(range(12))
+    order = np.argsort(ranks)
+    tf = fleet.tflops[order]
+    assert all(tf[i] >= tf[i + 1] for i in range(11))
+
+
+# ---------------------------------------------------------------------------
+# PopulationClock: mode switch never changes the timeline
+# ---------------------------------------------------------------------------
+
+def _clock_run(cfg, fleet, run, force, **kw):
+    return PopulationClock(cfg, fleet, run, force=force, **kw).run()
+
+
+def _assert_runs_equal(a, b):
+    assert a.makespan == b.makespan
+    assert a.round_makespans == b.round_makespans
+    assert a.commit_times == b.commit_times
+    assert a.cohort_sizes == b.cohort_sizes
+
+
+@pytest.fixture(scope="module")
+def pop_cfg():
+    return tiny("bert-base", n_layers=4, d_model=64)
+
+
+@pytest.mark.parametrize("fleet_cfg", [
+    FleetConfig(sampling="uniform", rate=0.5),
+    FleetConfig(sampling="pareto", rate=0.5, straggler_prob=0.3),
+    FleetConfig(sampling="uniform", rate=0.5, edge_cells=3),
+], ids=["uniform", "pareto-stragglers", "edges"])
+@pytest.mark.parametrize("transport", ["nominal", "plane"])
+def test_population_clock_mode_parity(pop_cfg, fleet_cfg, transport):
+    fleet = FleetSpec(n=24, seed=6, link_model="constant").population()
+    run = FedRunConfig(rounds=4, batch_size=4, seq_len=16,
+                       agg=AggConfig(interval=2, transport=transport),
+                       engine=EngineConfig(mode="event", scheduler="ours",
+                                           slots=2, cohort_chunk=2,
+                                           chunk_efficiency=0.9),
+                       fleet=fleet_cfg)
+    obj = _clock_run(pop_cfg, fleet, run, "objects")
+    vec = _clock_run(pop_cfg, fleet, run, "vectorized")
+    _assert_runs_equal(obj, vec)
+    assert set(obj.modes) == {"objects"} and set(vec.modes) == {"vectorized"}
+
+
+def test_population_clock_shared_medium_parity(pop_cfg):
+    spec = FleetSpec(n=16, seed=3, link_model="constant")
+    fleet = spec.population()
+    run = FedRunConfig(rounds=2, batch_size=4, seq_len=16,
+                       agg=AggConfig(interval=1, transport="plane"),
+                       engine=EngineConfig(mode="event", scheduler="fifo"),
+                       net=NetConfig(shared=True, capacity_mbps=200.0))
+    obj = _clock_run(pop_cfg, fleet, run, "objects", links=spec.links())
+    vec = _clock_run(pop_cfg, fleet, run, "vectorized", links=spec.links())
+    _assert_runs_equal(obj, vec)
+
+
+def test_population_clock_threshold_switches_modes(pop_cfg):
+    fleet = FleetSpec(n=10, seed=1).population()
+    run = FedRunConfig(rounds=2, batch_size=4, seq_len=16,
+                       agg=AggConfig(interval=1),
+                       engine=EngineConfig(mode="event"),
+                       fleet=FleetConfig(population_threshold=4,
+                                         sampling="uniform", rate=0.3))
+    res = PopulationClock(pop_cfg, fleet, run).run()
+    assert set(res.modes) == {"objects"}     # cohorts of 3 < threshold 4
+    run2 = FedRunConfig(rounds=2, batch_size=4, seq_len=16,
+                        agg=AggConfig(interval=1),
+                        engine=EngineConfig(mode="event"),
+                        fleet=FleetConfig(population_threshold=4))
+    res2 = PopulationClock(pop_cfg, fleet, run2).run()
+    assert set(res2.modes) == {"vectorized"}   # full 10 >= threshold
+
+
+def test_population_clock_hierarchical_commit_adds_backhaul(pop_cfg):
+    fleet = FleetSpec(n=12, seed=8, link_model="constant").population()
+    base = dict(rounds=2, batch_size=4, seq_len=16,
+                agg=AggConfig(interval=2),
+                engine=EngineConfig(mode="event"))
+    flat = PopulationClock(pop_cfg, fleet,
+                           FedRunConfig(**base)).run()
+    hier = PopulationClock(
+        pop_cfg, fleet,
+        FedRunConfig(fleet=FleetConfig(edge_cells=3, backhaul_mbps=500.0),
+                     **base)).run()
+    assert hier.round_makespans == flat.round_makespans
+    assert len(flat.commit_times) == len(hier.commit_times) == 1
+    from repro.net.topology import EdgeTopology
+    topo = EdgeTopology.grouped(12, 3, backhaul_mbps=500.0)
+    clock = PopulationClock(pop_cfg, fleet,
+                            FedRunConfig(**base))
+    extra = 2.0 * topo.backhaul_s(clock._summary_bytes)
+    assert hier.commit_times[0] == pytest.approx(flat.commit_times[0] + extra,
+                                                 rel=0, abs=1e-12)
+
+
+def test_population_clock_async_contract(pop_cfg):
+    fleet = FleetSpec(n=6, seed=0).population()
+    run = FedRunConfig(rounds=2, batch_size=4, seq_len=16,
+                       agg=AggConfig(policy="buffered", interval=1,
+                                     buffer_k=3),
+                       engine=EngineConfig(mode="event", scheduler="fifo"))
+    with pytest.raises(ValueError):
+        PopulationClock(pop_cfg, fleet, run, force="vectorized")
+    res = PopulationClock(pop_cfg, fleet, run).run()
+    assert set(res.modes) == {"objects"}
+    assert res.commit_times
+    big = FleetSpec(n=8, seed=0).population()
+    tight = FedRunConfig(rounds=2, batch_size=4, seq_len=16,
+                         agg=AggConfig(policy="buffered", interval=1,
+                                       buffer_k=3),
+                         engine=EngineConfig(mode="event", scheduler="fifo"),
+                         fleet=FleetConfig(population_threshold=4))
+    with pytest.raises(ValueError):
+        PopulationClock(pop_cfg, big, tight)
