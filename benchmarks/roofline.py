@@ -43,14 +43,41 @@ def markdown_table(recs):
     return "\n".join(lines)
 
 
+def cohort_step_row(L=12, cuts=(2, 2, 4, 4, 6, 6, 8, 8), d=2048, s=512, b=4,
+                    rank=16):
+    """Analytical ragged-vs-padded server cohort step (no dryrun needed).
+
+    The vmap server step runs all ``L`` layers per client under a mask;
+    the ragged (cut-grouped) step runs only layers ``[cut_i, L)``.  Per
+    layer-step FLOPs/bytes use a dense-transformer estimate: ~12*d^2
+    MACs per token plus the LoRA adapter pair on four projections.
+    """
+    u = len(cuts)
+    tok = b * s
+    layer_flops = tok * (24 * d * d + 4 * 4 * d * rank)
+    layer_bytes = 4 * (12 * d * d + 4 * 2 * d * rank + 2 * tok * d)
+    padded, ragged = u * L, sum(L - c for c in cuts)
+    fl_p, fl_r = padded * layer_flops, ragged * layer_flops
+    by_p, by_r = padded * layer_bytes, ragged * layer_bytes
+    return ("roofline_cohort_step", 0.0,
+            f"analytical;U={u};L={L};padded_tflops={fl_p/1e12:.2f};"
+            f"ragged_tflops={fl_r/1e12:.2f};"
+            f"padded_flops_reduction={fl_p/fl_r:.3f}x;"
+            f"hbm_gb_padded={by_p/2**30:.2f};hbm_gb_ragged={by_r/2**30:.2f};"
+            f"intensity={layer_flops/layer_bytes:.0f}flops_per_byte")
+
+
 def run(csv=False, path="experiments/dryrun"):
     recs = load_records(path)
-    out = []
+    out = [cohort_step_row()]
+    if not csv:
+        _, _, d = out[0]
+        print(f"cohort step (analytical, ragged vs vmap-padded): {d}")
     if not recs:
         if not csv:
             print(f"(no dry-run records under {path}; run "
                   f"`python -m repro.launch.dryrun` first)")
-        return [("roofline_records", 0.0, "none")]
+        return out + [("roofline_records", 0.0, "none")]
     if not csv:
         print(markdown_table(recs))
         doms = defaultdict(int)

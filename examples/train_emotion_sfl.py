@@ -55,6 +55,13 @@ def main():
                     help="local rounds a client may run past its last commit")
     ap.add_argument("--agg-buffer-k", type=int, default=None,
                     help="async commit threshold (distinct client uploads)")
+    ap.add_argument("--cohort-impl", choices=("vmap", "ragged"),
+                    default="vmap",
+                    help="batched server step: padded vmap over traced cuts "
+                    "vs cut-grouped ragged concat (layers [cut, L) only)")
+    ap.add_argument("--fused-lora", action="store_true",
+                    help="run adapted projections through the Pallas "
+                    "fused/grouped LoRA kernels (interpret mode on CPU)")
     ap.add_argument("--staleness-alpha", type=float, default=None,
                     help="polynomial (1+s)^-alpha discount exponent "
                     "(staleness policy only; default 0.5)")
@@ -162,7 +169,9 @@ def main():
                            resume_from=args.resume_from,
                            preempt_at=args.kill_at,
                            engine=EngineConfig(mode=args.engine,
-                                               scheduler=sched),
+                                               scheduler=sched,
+                                               cohort_impl=args.cohort_impl,
+                                               fused_lora=args.fused_lora),
                            agg=AggConfig(
                                policy=args.agg_policy,
                                interval=args.agg_interval,

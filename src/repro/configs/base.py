@@ -35,6 +35,10 @@ class LoRAConfig:
     # which projections carry adapters; names are matched against param paths
     targets: Tuple[str, ...] = ("wq", "wk", "wv", "wo")
     dropout: float = 0.0
+    # how adapted projections execute: "einsum" (pure-jnp oracle) or
+    # "fused" (Pallas kernels — fused per-client, grouped for ragged
+    # cohorts; see models/layers.lora_apply)
+    impl: str = "einsum"
 
 
 @dataclasses.dataclass(frozen=True)

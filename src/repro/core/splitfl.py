@@ -20,8 +20,11 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.lora import STACKED_KEYS
+from repro.models import layers as L
 from repro.optim.adamw import AdamW
 
 PyTree = Any
@@ -124,9 +127,147 @@ def _tree_concat(parts) -> PyTree:
     return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
 
 
+# ---------------------------------------------------------------------------
+# ragged cohort packing (impl="ragged" of the batched server steps)
+# ---------------------------------------------------------------------------
+
+def _cohort_to_layer_major(lora_s: PyTree) -> PyTree:
+    """Swap cohort-stacked adapter leaves (G, L, ...) to layer-major
+    (L, G, ...), so the sliced path's per-layer indexing hands every
+    projection a grouped (G, r, K) adapter — the grouped-kernel dispatch
+    contract of ``models.layers.lora_apply``.  Server-only keys (e.g.
+    hybrid "shared") stay cohort-stacked: their leaves are already
+    (G, r, K)."""
+    out = {}
+    for key, sub in lora_s.items():
+        if key in STACKED_KEYS:
+            out[key] = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), sub)
+        else:
+            out[key] = sub
+    return out
+
+
+def _flatten_cohort(tree: PyTree) -> PyTree:
+    """(G, B, ...) leaves -> (G*B, ...): the ragged concat batch."""
+    return jax.tree.map(
+        lambda a: a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:]), tree)
+
+
+def _concrete_cuts(cuts) -> np.ndarray:
+    try:
+        arr = np.asarray(cuts, dtype=np.int64)
+    except Exception:
+        raise ValueError(
+            "impl='ragged' groups the cohort by CONCRETE cut values (each "
+            "distinct cut compiles a static-slice step over only its owned "
+            "layers); pass cuts as python ints / numpy — the vmap impl "
+            "accepts traced cuts") from None
+    if arr.ndim != 1:
+        raise ValueError(f"cuts must be a 1-D cohort vector, got {arr.shape}")
+    return arr
+
+
+def _ragged_chunks(cuts: np.ndarray, cohort_chunk: Optional[int]):
+    """Group lane indices by cut value (stable), split by cohort_chunk.
+    Yields (orig_indices, cut) with indices as python int lists."""
+    order = np.argsort(cuts, kind="stable")
+    chunks = []
+    lo = 0
+    while lo < len(order):
+        hi = lo
+        while hi < len(order) and cuts[order[hi]] == cuts[order[lo]]:
+            hi += 1
+        grp = order[lo:hi].tolist()
+        for sl in _chunk_slices(len(grp), cohort_chunk):
+            chunks.append((grp[sl], int(cuts[order[lo]])))
+        lo = hi
+    return chunks
+
+
+def _make_server_step_ragged(model, opt: AdamW, *,
+                             cohort_chunk: Optional[int] = None,
+                             with_head: bool = False):
+    """impl="ragged" of the batched server steps: the cohort is grouped by
+    cut value and each group runs ONE dispatch over the concatenated
+    (G*B, S, d) activation batch — the sliced path executes only layers
+    [cut, L) (no masked full-depth scan), and every adapted projection sees
+    cohort-grouped (G, r, K) adapters, dispatching to the grouped ragged
+    Pallas kernel when ``cfg.lora.impl == 'fused'``.
+
+    Per-client losses are exact: row segments are computationally
+    independent, so grad(sum of per-client mean xents) yields each client's
+    own gradients; the per-client AdamW update is a vmap.  Known delta vs
+    the vmap impl: the sliced path reports no MoE router aux loss (aux=0).
+    """
+    cfg = model.cfg
+
+    def group_step(params, lora_g, heads_g, opt_g, v_g, batch_g, cut):
+        gsz, bsz = v_g.shape[0], v_g.shape[1]
+        v_flat = v_g.reshape((gsz * bsz,) + v_g.shape[2:])
+        batch_flat = _flatten_cohort(batch_g)
+
+        def loss_fn(trainable, vf):
+            lo_lm = _cohort_to_layer_major(
+                trainable["lora"] if with_head else trainable)
+            if with_head:
+                h, _ = model.forward_hidden(params, lo_lm, batch_flat,
+                                            cut=cut, side="server",
+                                            path="sliced", x0=vf)
+                h = L.apply_norm(cfg, params["final_norm"], h)
+                pooled = h.reshape(gsz, bsz, *h.shape[1:])[:, :, 0, :]
+                logits = jnp.einsum("gbd,gdc->gbc",
+                                    pooled.astype(jnp.float32),
+                                    trainable["head"])   # per-client heads
+                losses = jax.vmap(lambda lg, lb: L.softmax_xent(
+                    lg[:, None, :], lb[:, None]))(logits, batch_g["label"])
+            else:
+                _, logits = model.loss(params, lo_lm, batch_flat, cut=cut,
+                                       side="server", path="sliced", x0=vf)
+                logits = logits.reshape((gsz, bsz) + logits.shape[1:])
+                losses = jax.vmap(L.softmax_xent)(logits, batch_g["targets"])
+            return losses.sum(), losses
+
+        # opt_state mirrors the trainable tree: {"lora", "head"} for the
+        # classification step, the bare adapter tree for the LM step
+        trainable = {"lora": lora_g, "head": heads_g} if with_head else lora_g
+        (_, losses), (g_tr, g_v) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(trainable, v_flat)
+        new_tr, new_opt = jax.vmap(opt.update)(g_tr, opt_g, trainable)
+        dv = g_v.reshape(v_g.shape)
+        if with_head:
+            return losses, new_tr["lora"], new_tr["head"], new_opt, dv
+        return losses, new_tr, new_opt, dv
+
+    jitted = jax.jit(group_step, static_argnames=("cut",))
+
+    def take(tree, idx):
+        return jax.tree.map(lambda a: jnp.take(a, idx, axis=0), tree)
+
+    def step(params, lora_s, *rest):
+        if with_head:
+            heads, opt_state, v, batch, cuts = rest
+        else:
+            opt_state, v, batch, cuts = rest
+            heads = None
+        cuts_np = _concrete_cuts(cuts)
+        outs, perm = [], []
+        for idx_list, cut in _ragged_chunks(cuts_np, cohort_chunk):
+            idx = jnp.asarray(idx_list, jnp.int32)
+            outs.append(jitted(
+                params, take(lora_s, idx),
+                jnp.take(heads, idx, axis=0) if with_head else None,
+                take(opt_state, idx), jnp.take(v, idx, axis=0),
+                take(batch, idx), cut=cut))
+            perm.extend(idx_list)
+        inv = jnp.asarray(np.argsort(np.asarray(perm)), jnp.int32)
+        return take(_tree_concat(outs), inv)   # back to cohort order
+
+    return step
+
+
 def make_server_step_batched(model, opt: AdamW, *,
                              cohort_chunk: Optional[int] = None,
-                             donate: bool = True):
+                             donate: bool = True, impl: str = "vmap"):
     """Cohort-batched server step: ONE vmapped executable advances a whole
     chunk of clients instead of U sequential dispatches.
 
@@ -140,7 +281,22 @@ def make_server_step_batched(model, opt: AdamW, *,
     so heterogeneous cuts share the compiled executable.  ``cohort_chunk``
     bounds how many clients are materialized per dispatch — the paper's
     sequential server is exactly ``cohort_chunk=1``.
+
+    ``impl`` selects the execution path (EngineConfig.cohort_impl):
+      * "vmap" (default): the masked-scan lane-per-client form above — every
+        lane computes all L layers and masks the client prefix;
+      * "ragged": cut-grouped concat batches through
+        :func:`_make_server_step_ragged` — each group computes only its own
+        [cut, L) suffix (the padded-FLOPs win grows with cut spread) and
+        feeds cohort-grouped adapters to the grouped Pallas kernel path.
     """
+    if impl == "ragged":
+        return _make_server_step_ragged(model, opt,
+                                        cohort_chunk=cohort_chunk,
+                                        with_head=False)
+    if impl != "vmap":
+        raise KeyError(f"unknown batched-server impl {impl!r}; "
+                       f"choose 'vmap' or 'ragged'")
     def one(params, lora_s, opt_state, v, batch, cut):
         def loss_fn(lo, vv):
             loss, _ = server_loss(model, params, lo, vv, batch, cut,
@@ -167,7 +323,7 @@ def make_server_step_batched(model, opt: AdamW, *,
 
 def make_server_step_cls_batched(model, opt: AdamW, *,
                                  cohort_chunk: Optional[int] = None,
-                                 donate: bool = False):
+                                 donate: bool = False, impl: str = "vmap"):
     """Cohort-batched classification server step (per-client heads train
     alongside the server adapters).
 
@@ -175,8 +331,16 @@ def make_server_step_cls_batched(model, opt: AdamW, *,
                (losses, new_lora_s, new_heads, new_opt_state, dv)
     with the same leading cohort axis conventions as
     :func:`make_server_step_batched`; ``opt_state`` is over the stacked
-    pytree {"lora": ..., "head": ...}.
+    pytree {"lora": ..., "head": ...}.  ``impl`` as in
+    :func:`make_server_step_batched`.
     """
+    if impl == "ragged":
+        return _make_server_step_ragged(model, opt,
+                                        cohort_chunk=cohort_chunk,
+                                        with_head=True)
+    if impl != "vmap":
+        raise KeyError(f"unknown batched-server impl {impl!r}; "
+                       f"choose 'vmap' or 'ragged'")
     def one(params, lora_s, head, opt_state, v, batch, cut):
         def loss_fn(trainable, vv):
             pp = dict(params)

@@ -62,12 +62,19 @@ class EngineConfig:
     chunk_efficiency: float = 1.0       # k>1 chunk cost vs summed sequential
     slots: int = 1                      # concurrent server executors
     deadline: Optional[float] = None    # per-round straggler cut (event only)
+    cohort_impl: str = "vmap"           # vmap (padded, traced cuts) | ragged
+                                        # (cut-grouped concat, static cuts)
+    fused_lora: bool = False            # route adapted projections through
+                                        # the Pallas kernels (LoRAConfig.impl
+                                        # thread; replaces set_fused_lora)
 
     def validate(self) -> None:
         if self.mode not in ("analytic", "event"):
             raise KeyError(f"unknown engine {self.mode!r}")
         if self.scheduler not in SCHEDULERS:
             raise KeyError(f"unknown scheduling policy {self.scheduler!r}")
+        if self.cohort_impl not in ("vmap", "ragged"):
+            raise KeyError(f"unknown cohort impl {self.cohort_impl!r}")
         if self.cohort_chunk < 1 or self.slots < 1:
             raise ValueError("cohort_chunk and server_slots must be >= 1")
         if not 0.0 < self.chunk_efficiency <= 1.0:

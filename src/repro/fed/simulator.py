@@ -94,6 +94,10 @@ class Simulator:
         if run.fleet.size is not None and run.fleet.size != len(devices):
             raise ValueError(f"run.fleet.size={run.fleet.size} but "
                              f"{len(devices)} devices were materialized")
+        if run.engine.fused_lora:
+            # thread the kernel choice through config — no process-global
+            # state (the deprecated set_fused_lora shim is gone from here)
+            cfg = cfg.with_(lora=dataclasses.replace(cfg.lora, impl="fused"))
         self.cfg, self.run = cfg, run
         self.devices, self.cuts = list(devices), [int(c) for c in cuts]
         self._init_cuts = [int(c) for c in cuts]   # fingerprint anchor
@@ -159,8 +163,10 @@ class Simulator:
                 self.model, self.opt, cut, path="sliced")
         # cohort-batched server step: ONE vmapped executable with traced
         # per-client cuts serves any chunk handed over by the round clock
+        # (cohort_impl="ragged" instead groups the chunk by cut value and
+        # runs each group's [cut, L) suffix over a concatenated batch)
         self._srv_step_batched = splitfl.make_server_step_cls_batched(
-            self.model, self.opt)
+            self.model, self.opt, impl=run.engine.cohort_impl)
         self._last_event = None   # EngineResult of the last event-driven round
 
         # analytic per-step Eq.10 terms (fixed per client); wireless terms

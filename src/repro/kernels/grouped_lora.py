@@ -1,0 +1,137 @@
+"""Grouped ragged-cohort LoRA matmul — one Pallas launch for a whole
+heterogeneous-cut cohort (ROADMAP item 2).
+
+Every cohort member i shares the frozen base W but carries its own adapter
+(A_i, B_i) and scale s_i:
+
+    y_i = x_i @ W + s_i * (x_i @ A_i^T) @ B_i^T
+
+The cohort's activation rows are concatenated (group-gemm style): each
+group's rows are padded only to the next ``bm`` multiple — never to the
+largest group — and a tile -> group-id table ``gid`` tells each m-tile which
+adapter to use.  ``gid``/``scales`` ride in SMEM; the adapter slabs are
+blocked whole ((G, r, bk) / (G, bn, r)) and indexed dynamically in-kernel,
+so the base-matmul grid stays a plain (M/bm, N/bn, K/bk) sweep.
+
+Two formulations, the chunked-vs-recurrent dual-mode idiom of the rwkv6
+kernel family (SNIPPETS #3):
+
+  * mode="chunk":  K innermost in the grid, f32 accumulators in VMEM
+    scratch — the deep-K form (d_model beyond one VMEM tile);
+  * mode="direct": single full-K pass per (m, n) tile, no scratch — the
+    short-K form (one block holds the whole reduction), fewer grid steps
+    and no accumulator round-trips.
+
+VMEM bound: the adapter slabs keep G * r * (bk + bn) f32 elements resident
+(~1 MiB at G=16, r=64, 128-blocks) — cohorts are small by construction
+(``EngineConfig.cohort_chunk``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+MODES = ("chunk", "direct")
+
+
+def _kernel_chunk(gid_ref, scales_ref, x_ref, w_ref, a_ref, b_ref, o_ref,
+                  acc_ref, xa_ref, *, nk: int):
+    """K-sweep form: grid (M/bm, N/bn, K/bk), K innermost."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xa_ref[...] = jnp.zeros_like(xa_ref)
+
+    g = gid_ref[pl.program_id(0)]
+    xblk = x_ref[...]
+    acc_ref[...] += jnp.dot(xblk, w_ref[...], preferred_element_type=jnp.float32)
+    # this tile's adapter down-projection rides along the same K sweep
+    xa_ref[...] += jnp.dot(xblk, a_ref[g].T, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        up = jnp.dot(xa_ref[...], b_ref[g].T, preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + scales_ref[g] * up).astype(o_ref.dtype)
+
+
+def _kernel_direct(gid_ref, scales_ref, x_ref, w_ref, a_ref, b_ref, o_ref):
+    """Single full-K pass: grid (M/bm, N/bn), no scratch accumulators."""
+    g = gid_ref[pl.program_id(0)]
+    xblk = x_ref[...]
+    acc = jnp.dot(xblk, w_ref[...], preferred_element_type=jnp.float32)
+    xa = jnp.dot(xblk, a_ref[g].T, preferred_element_type=jnp.float32)
+    up = jnp.dot(xa, b_ref[g].T, preferred_element_type=jnp.float32)
+    o_ref[...] = (acc + scales_ref[g] * up).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "bm", "bn", "bk", "interpret"))
+def grouped_lora_matmul(x: jax.Array, w: jax.Array, a: jax.Array,
+                        b: jax.Array, gid: jax.Array, scales: jax.Array, *,
+                        mode: str = "chunk", bm: int = DEFAULT_BM,
+                        bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                        interpret: bool = False) -> jax.Array:
+    """x: (M, K) per-group row-padded concat; w: (K, N); a: (G, r, K);
+    b: (G, N, r); gid: (M//bm,) int32 tile -> group; scales: (G,) f32.
+
+    M, N, K must be divisible by the block sizes and every group's row span
+    must be bm-aligned (callers pad; see ops.py).  The group structure is
+    carried by the *arrays* gid/scales, so two cohorts with the same padded
+    shapes share one compiled executable regardless of cut composition.
+    """
+    m, kdim = x.shape
+    _, n = w.shape
+    ngroups, r, _ = a.shape
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (m, n, kdim)
+    assert gid.shape == (m // bm,) and scales.shape == (ngroups,)
+    if mode not in MODES:
+        raise KeyError(f"unknown grouped-lora mode {mode!r}; "
+                       f"choose from {MODES}")
+    nk = kdim // bk
+
+    if mode == "direct":
+        return pl.pallas_call(
+            _kernel_direct,
+            grid=(m // bm, n // bn),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.SMEM),               # gid
+                pl.BlockSpec(memory_space=pltpu.SMEM),               # scales
+                pl.BlockSpec((bm, kdim), lambda i, j: (i, 0)),       # x
+                pl.BlockSpec((kdim, bn), lambda i, j: (0, j)),       # w
+                pl.BlockSpec((ngroups, r, kdim), lambda i, j: (0, 0, 0)),
+                pl.BlockSpec((ngroups, bn, r), lambda i, j: (0, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+            interpret=interpret,
+        )(gid, scales, x, w, a, b)
+
+    return pl.pallas_call(
+        functools.partial(_kernel_chunk, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                   # gid
+            pl.BlockSpec(memory_space=pltpu.SMEM),                   # scales
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),          # x
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),          # w
+            pl.BlockSpec((ngroups, r, bk), lambda i, j, k: (0, 0, k)),
+            pl.BlockSpec((ngroups, bn, r), lambda i, j, k: (0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),    # base accumulator
+            pltpu.VMEM((bm, r), jnp.float32),     # x @ A_g^T accumulator
+        ],
+        interpret=interpret,
+    )(gid, scales, x, w, a, b)

@@ -1,13 +1,22 @@
-"""Jit'd public wrappers around the Pallas kernels: shape normalization,
-padding to block multiples, CPU interpret-mode fallback."""
+"""Public wrappers around the Pallas kernels: shape normalization, padding
+to block multiples, CPU interpret-mode fallback.
+
+The padding wrappers are deliberately EAGER (not jitted): padding buckets
+every dimension to the next block multiple, so the jitted kernels underneath
+(`lora_matmul`, `grouped_lora_matmul`) are keyed on *bucketed* shapes and
+jittered raw batch sizes (m=100 vs m=120 -> one 128-row executable) reuse
+one compiled executable instead of retracing per (m, n, k) combo.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
+from repro.kernels.grouped_lora import grouped_lora_matmul as _grouped_raw
 from repro.kernels.lora_matmul import lora_matmul
 from repro.kernels.rwkv6_scan import wkv6
 
@@ -26,29 +35,198 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "bk", "interpret"))
+def _fused_run(x2, w, a, b, scale, bm, bn, bk, interpret):
+    """Pad the 2-D problem to block multiples, launch, unpad."""
+    m, n = x2.shape[0], w.shape[1]
+    x2 = _pad_to(_pad_to(x2, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    ap = _pad_to(a, 1, bk)
+    bp = _pad_to(b, 0, bn)
+    y = lora_matmul(x2, wp, ap, bp, scale=float(scale), bm=bm, bn=bn, bk=bk,
+                    interpret=interpret)
+    return y[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _fused_vjp(x2, w, a, b, scale, bm, bn, bk, interpret):
+    return _fused_run(x2, w, a, b, scale, bm, bn, bk, interpret)
+
+
+def _fused_vjp_fwd(x2, w, a, b, scale, bm, bn, bk, interpret):
+    y = _fused_run(x2, w, a, b, scale, bm, bn, bk, interpret)
+    return y, (x2, w, a, b)
+
+
+def _fused_vjp_bwd(scale, bm, bn, bk, interpret, res, g):
+    x2, w, a, b = res
+    # dx = g @ W^T + s*(g @ B) @ A — the same fused form with the roles of
+    # the down/up projections swapped, so the backward reuses the kernel
+    # (Pallas has no native autodiff).
+    dx = _fused_run(g, jnp.swapaxes(w, 0, 1), jnp.swapaxes(b, 0, 1),
+                    jnp.swapaxes(a, 0, 1), scale, bm, bn, bk,
+                    interpret).astype(x2.dtype)
+    gf = g.astype(jnp.float32)
+    xf = x2.astype(jnp.float32)
+    # dw DCE'd whenever the base stays frozen (always, in SFL fine-tuning)
+    dw = jnp.dot(xf.T, gf).astype(w.dtype)
+    gb = jnp.dot(gf, b.astype(jnp.float32))             # (m, r)
+    da = (scale * jnp.dot(gb.T, xf)).astype(a.dtype)    # (r, K)
+    db = (scale * jnp.dot(gf.T, jnp.dot(xf, a.astype(jnp.float32).T))
+          ).astype(b.dtype)                             # (N, r)
+    return dx, dw, da, db
+
+
+_fused_vjp.defvjp(_fused_vjp_fwd, _fused_vjp_bwd)
+
+
 def fused_lora_matmul(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
                       *, scale: float, bm: int = 128, bn: int = 128,
                       bk: int = 128, interpret: bool | None = None) -> jax.Array:
     """y = x @ w + scale*(x@a.T)@b.T for x of shape (..., K).
 
     Pads every dim to the block multiple, runs the fused kernel, unpads.
-    ``interpret=None`` auto-selects interpret mode off-TPU.
+    ``interpret=None`` auto-selects interpret mode off-TPU.  Only the inner
+    ``lora_matmul`` is jitted — keyed on the bucketed padded shapes — so
+    any raw m in (0, bm] (and likewise n/k) shares one executable.
+    Differentiable w.r.t. x/w/a/b (custom VJP; dx reuses the kernel).
     """
     if interpret is None:
         interpret = _on_cpu()
     *lead, kdim = x.shape
     n = w.shape[1]
-    x2 = x.reshape(-1, kdim)
-    m = x2.shape[0]
+    y = _fused_vjp(x.reshape(-1, kdim), w, a, b, float(scale), bm, bn, bk,
+                   interpret)
+    return y.reshape(*lead, n)
 
-    x2 = _pad_to(_pad_to(x2, 0, bm), 1, bk)
+
+# ---------------------------------------------------------------------------
+# grouped ragged-cohort LoRA matmul (kernels/grouped_lora.py)
+# ---------------------------------------------------------------------------
+
+def _auto_mode(mode: str, kdim: int, bk: int) -> str:
+    if mode == "auto":
+        return "direct" if kdim <= bk else "chunk"
+    return mode
+
+
+def _group_offsets(group_sizes):
+    return np.concatenate([[0], np.cumsum(group_sizes)]).tolist()
+
+
+def _grouped_run(x, w, a, b, group_sizes, scales, mode, bm, bn, bk,
+                 interpret):
+    """Pad per group, build the tile->group table, launch, unpad."""
+    m_total, kdim = x.shape
+    n = w.shape[1]
+    offs = _group_offsets(group_sizes)
+
+    parts, gid = [], []
+    for g, mg in enumerate(group_sizes):
+        seg = _pad_to(jax.lax.slice_in_dim(x, offs[g], offs[g + 1], axis=0),
+                      0, bm)
+        parts.append(seg)
+        gid.extend([g] * (seg.shape[0] // bm))
+    xp = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+    xp = _pad_to(xp, 1, bk)
     wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
-    ap = _pad_to(a, 1, bk)
-    bp = _pad_to(b, 0, bn)
-    y = lora_matmul(x2, wp, ap, bp, scale=scale, bm=bm, bn=bn, bk=bk,
-                    interpret=interpret)
-    return y[:m, :n].reshape(*lead, n)
+    ap = _pad_to(a, 2, bk)
+    bp = _pad_to(b, 1, bn)
+    y = _grouped_raw(xp, wp, ap, bp, jnp.asarray(gid, jnp.int32),
+                     jnp.asarray(scales, jnp.float32),
+                     mode=_auto_mode(mode, xp.shape[1], bk),
+                     bm=bm, bn=bn, bk=bk, interpret=interpret)
+    outs, off = [], 0
+    for mg in group_sizes:
+        outs.append(jax.lax.slice_in_dim(y, off, off + mg, axis=0))
+        off += mg + (-mg) % bm
+    y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+    return y[:, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10))
+def _grouped_vjp(x, w, a, b, group_sizes, scales, mode, bm, bn, bk,
+                 interpret):
+    return _grouped_run(x, w, a, b, group_sizes, scales, mode, bm, bn, bk,
+                        interpret)
+
+
+def _grouped_vjp_fwd(x, w, a, b, group_sizes, scales, mode, bm, bn, bk,
+                     interpret):
+    y = _grouped_run(x, w, a, b, group_sizes, scales, mode, bm, bn, bk,
+                     interpret)
+    return y, (x, w, a, b)
+
+
+def _grouped_vjp_bwd(group_sizes, scales, mode, bm, bn, bk, interpret,
+                     res, g):
+    x, w, a, b = res
+    # dx = g @ W^T + s_i * (g @ B_i) @ A_i — the same grouped fused form
+    # with (W^T, B_i as down-proj, A_i as up-proj), so the backward pass
+    # reuses the kernel (Pallas has no native autodiff).
+    dx = _grouped_run(g, jnp.swapaxes(w, 0, 1), jnp.swapaxes(b, 1, 2),
+                      jnp.swapaxes(a, 1, 2), group_sizes, scales, mode,
+                      bm, bn, bk, interpret).astype(x.dtype)
+    # dw = x^T g (DCE'd whenever the base stays frozen, i.e. always in SFL)
+    dw = jnp.dot(x.astype(jnp.float32).T,
+                 g.astype(jnp.float32)).astype(w.dtype)
+    offs = _group_offsets(group_sizes)
+    da, db = [], []
+    for i in range(len(group_sizes)):
+        xg = jax.lax.slice_in_dim(x, offs[i], offs[i + 1],
+                                  axis=0).astype(jnp.float32)
+        gg = jax.lax.slice_in_dim(g, offs[i], offs[i + 1],
+                                  axis=0).astype(jnp.float32)
+        s = float(scales[i])
+        gb = jnp.dot(gg, b[i].astype(jnp.float32))          # (mg, r)
+        da.append(s * jnp.dot(gb.T, xg))                    # (r, K)
+        db.append(s * jnp.dot(gg.T, jnp.dot(xg, a[i].astype(jnp.float32).T)))
+    return (dx, dw, jnp.stack(da).astype(a.dtype),
+            jnp.stack(db).astype(b.dtype))
+
+
+_grouped_vjp.defvjp(_grouped_vjp_fwd, _grouped_vjp_bwd)
+
+
+def grouped_lora_matmul(x: jax.Array, w: jax.Array, a: jax.Array,
+                        b: jax.Array, *, group_sizes, scale=None, scales=None,
+                        mode: str = "auto", bm: int = 128, bn: int = 128,
+                        bk: int = 128,
+                        interpret: bool | None = None) -> jax.Array:
+    """y_i = x_i @ w + s_i * (x_i @ a_i.T) @ b_i.T — one launch per cohort.
+
+    x: (sum(group_sizes), K) ragged concat of the cohort's rows (group i
+    owns rows [offset_i, offset_i + group_sizes[i])); w: (K, N) shared
+    frozen base; a: (G, r, K) / b: (G, N, r) per-group adapters.  Pass one
+    ``scale`` for a uniform cohort or per-group ``scales`` (a zero scale
+    turns a group's adapter off — heterogeneous-rank cohorts zero-pad).
+
+    ``group_sizes`` is static (a tuple keys the trace); the *composition*
+    is not — gid/scales are runtime arrays, so cohorts with equal padded
+    totals share the compiled kernel.  mode="auto" picks the single-pass
+    "direct" form when K fits one block, else the K-sweep "chunk" form.
+    Differentiable w.r.t. x/a/b (custom VJP; the dx pass reuses the kernel).
+    """
+    group_sizes = tuple(int(s) for s in group_sizes)
+    if not group_sizes or any(s < 1 for s in group_sizes):
+        raise ValueError(f"group_sizes must be non-empty positive ints, "
+                         f"got {group_sizes}")
+    if x.shape[0] != sum(group_sizes):
+        raise ValueError(f"x has {x.shape[0]} rows but group_sizes sum to "
+                         f"{sum(group_sizes)}")
+    if a.shape[0] != len(group_sizes) or b.shape[0] != len(group_sizes):
+        raise ValueError("need one (a, b) adapter pair per group")
+    if (scales is None) == (scale is None):
+        raise ValueError("pass exactly one of scale= / scales=")
+    if scales is None:
+        scales = (float(scale),) * len(group_sizes)
+    else:
+        scales = tuple(float(s) for s in scales)
+        if len(scales) != len(group_sizes):
+            raise ValueError("need one scale per group")
+    if interpret is None:
+        interpret = _on_cpu()
+    return _grouped_vjp(x, w, a, b, group_sizes, scales, mode, bm, bn, bk,
+                        interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
@@ -77,6 +255,7 @@ def wkv6_apply(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
 
 # re-exported oracles (tests use these as the source of truth)
 lora_matmul_ref = ref.lora_matmul_ref
+grouped_lora_matmul_ref = ref.grouped_lora_matmul_ref
 wkv6_ref = ref.wkv6_ref
 
 

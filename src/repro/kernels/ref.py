@@ -17,6 +17,23 @@ def lora_matmul_ref(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
     return y.astype(x.dtype)
 
 
+def grouped_lora_matmul_ref(x: jax.Array, w: jax.Array, a: jax.Array,
+                            b: jax.Array, group_sizes, scales) -> jax.Array:
+    """y_i = x_i @ w + s_i * (x_i @ a_i.T) @ b_i.T over a ragged concat batch.
+
+    x: (sum(group_sizes), K) — group rows concatenated in order; w: (K, N)
+    shared; a: (G, r, K), b: (G, N, r) per-group adapters; scales: length-G.
+    f32 accumulation, per group via :func:`lora_matmul_ref`.
+    """
+    outs, off = [], 0
+    for i, mg in enumerate(group_sizes):
+        mg = int(mg)
+        outs.append(lora_matmul_ref(x[off:off + mg], w, a[i], b[i],
+                                    float(scales[i])))
+        off += mg
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+
+
 def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
              u: jax.Array, state: jax.Array):
     """RWKV6 WKV recurrence oracle (time-major scan, f32).

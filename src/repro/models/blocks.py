@@ -178,7 +178,7 @@ def _router(cfg: ModelConfig, p: dict, lora, xg: Array):
     """xg: (T, d) -> normalized top-k gates (T, k) + expert ids (T, k) + probs."""
     scale = cfg.lora.alpha / cfg.lora.rank
     logits = L.lora_apply(xg.astype(jnp.float32), p["wr_router"],
-                          (lora or {}).get("wr_router"), scale)
+                          (lora or {}).get("wr_router"), scale, impl=cfg.lora.impl)
     probs = jax.nn.softmax(logits, axis=-1)
     gates, eidx = jax.lax.top_k(probs, cfg.moe.top_k)
     gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
@@ -417,10 +417,10 @@ def _tm_projections(cfg: ModelConfig, p: dict, lora, x: Array, x_prev: Array):
     xw, xk, xv, xr, xg = _ddlerp(p, x, x_prev)
     w = p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["wd1"]) @ p["wd2"]
     decay = jnp.exp(-jnp.exp(w))                       # (B,S,d) in (0,1)
-    r = L.lora_apply(xr, p["wr"], lget("wr"), scale)
-    k = L.lora_apply(xk, p["wk"], lget("wk"), scale)
-    v = L.lora_apply(xv, p["wv"], lget("wv"), scale)
-    g = jax.nn.silu(L.lora_apply(xg, p["wg"], lget("wg"), scale))
+    r = L.lora_apply(xr, p["wr"], lget("wr"), scale, impl=cfg.lora.impl)
+    k = L.lora_apply(xk, p["wk"], lget("wk"), scale, impl=cfg.lora.impl)
+    v = L.lora_apply(xv, p["wv"], lget("wv"), scale, impl=cfg.lora.impl)
+    g = jax.nn.silu(L.lora_apply(xg, p["wg"], lget("wg"), scale, impl=cfg.lora.impl))
     b, s, d = x.shape
     shp = (b, s, h, dh)
     return (r.reshape(shp), k.reshape(shp), v.reshape(shp),
@@ -514,7 +514,7 @@ def _tm_out(cfg: ModelConfig, p: dict, lora, wkv_out: Array, g: Array):
     b, s, h, dh = wkv_out.shape
     o = L.group_norm(wkv_out.reshape(b, s, h * dh).astype(g.dtype),
                      p["ln_x_scale"], p["ln_x_bias"], n_groups=h)
-    return L.lora_apply(o * g, p["wo"], (lora or {}).get("wo"), scale)
+    return L.lora_apply(o * g, p["wo"], (lora or {}).get("wo"), scale, impl=cfg.lora.impl)
 
 
 def _shift(x: Array, x_last: Optional[Array] = None):
@@ -529,9 +529,9 @@ def _cm_apply(cfg: ModelConfig, p: dict, lora, x: Array, x_prev: Array):
     xx = x_prev - x
     xk = x + xx * p["mu_k"].astype(x.dtype)
     xr = x + xx * p["mu_r"].astype(x.dtype)
-    kk = jnp.square(jax.nn.relu(L.lora_apply(xk, p["wk"], lget("wk"), scale)))
-    vv = L.lora_apply(kk, p["wv"], lget("wv"), scale)
-    return jax.nn.sigmoid(L.lora_apply(xr, p["wr"], lget("wr"), scale)) * vv
+    kk = jnp.square(jax.nn.relu(L.lora_apply(xk, p["wk"], lget("wk"), scale, impl=cfg.lora.impl)))
+    vv = L.lora_apply(kk, p["wv"], lget("wv"), scale, impl=cfg.lora.impl)
+    return jax.nn.sigmoid(L.lora_apply(xr, p["wr"], lget("wr"), scale, impl=cfg.lora.impl)) * vv
 
 
 def rwkv_train(cfg: ModelConfig, p: dict, lora, x: Array, ctx: dict):
@@ -635,7 +635,7 @@ def _mamba_split(cfg: ModelConfig, p: dict, lora, x: Array):
     scale = cfg.lora.alpha / cfg.lora.rank
     s = cfg.ssm
     d_in, nh, _ = _mamba_dims(cfg)
-    proj = L.lora_apply(x, p["in_proj"], (lora or {}).get("in_proj"), scale)
+    proj = L.lora_apply(x, p["in_proj"], (lora or {}).get("in_proj"), scale, impl=cfg.lora.impl)
     z, xc, bmat, cmat, dt_raw = jnp.split(
         proj, [d_in, 2 * d_in, 2 * d_in + s.d_state, 2 * d_in + 2 * s.d_state], axis=-1)
     return z, xc, bmat, cmat, dt_raw
@@ -746,7 +746,7 @@ def _mamba_core(cfg: ModelConfig, p: dict, lora, x: Array,
     y = y.reshape(b, sq, d_in).astype(x.dtype)
     y = L.apply_norm(cfg.with_(norm="rmsnorm"), p["norm"], y * jax.nn.silu(z))
     scale = cfg.lora.alpha / cfg.lora.rank
-    out = L.lora_apply(y, p["out_proj"], (lora or {}).get("out_proj"), scale)
+    out = L.lora_apply(y, p["out_proj"], (lora or {}).get("out_proj"), scale, impl=cfg.lora.impl)
     return out, new_hist, state
 
 

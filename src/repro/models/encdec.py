@@ -39,20 +39,20 @@ def _cross_attend(cfg: ModelConfig, p: dict, lora, x: Array,
     scale = cfg.lora.alpha / cfg.lora.rank
     lget = (lora or {}).get
     b, s, _ = x.shape
-    q = L.lora_apply(x, p["wq"], lget("wq"), scale, p.get("bq"))
+    q = L.lora_apply(x, p["wq"], lget("wq"), scale, p.get("bq"), impl=cfg.lora.impl)
     q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
     t = xk.shape[1]
     out = L.attention_full(q, xk, xv, causal=False, window=None,
                            q_pos=jnp.arange(s), k_pos=jnp.arange(t))
-    return L.lora_apply(out, p["wo"], lget("wo"), scale)
+    return L.lora_apply(out, p["wo"], lget("wo"), scale, impl=cfg.lora.impl)
 
 
 def _cross_kv(cfg: ModelConfig, p: dict, lora, enc: Array):
     scale = cfg.lora.alpha / cfg.lora.rank
     lget = (lora or {}).get
     b, t, _ = enc.shape
-    k = L.lora_apply(enc, p["wk"], lget("wk"), scale, p.get("bk"))
-    v = L.lora_apply(enc, p["wv"], lget("wv"), scale, p.get("bv"))
+    k = L.lora_apply(enc, p["wk"], lget("wk"), scale, p.get("bk"), impl=cfg.lora.impl)
+    v = L.lora_apply(enc, p["wv"], lget("wv"), scale, p.get("bv"), impl=cfg.lora.impl)
     return (k.reshape(b, t, cfg.n_kv_heads, cfg.head_dim),
             v.reshape(b, t, cfg.n_kv_heads, cfg.head_dim))
 

@@ -77,25 +77,82 @@ def group_norm(x: Array, weight: Array, bias: Array, n_groups: int, eps: float =
 # LoRA-aware projection
 # ---------------------------------------------------------------------------
 
-# trace-time switch routing adapted projections through the fused Pallas
-# kernel (kernels/lora_matmul.py). Off by default: the jnp path is the
-# oracle; the kernel is the TPU deployment form (interpret-mode on CPU).
+# how adapted projections execute (threaded from LoRAConfig.impl; the
+# federated engine sets it via EngineConfig.fused_lora):
+#   einsum — pure-jnp oracle (default);
+#   fused  — the Pallas kernels (kernels/lora_matmul.py for per-client 2-D
+#            adapters, kernels/grouped_lora.py for cohort-grouped 3-D
+#            adapters); interpret-mode on CPU, compiled on TPU.
+LORA_IMPLS = ("einsum", "fused")
+
+# deprecated process-global override — see set_fused_lora
 _FUSED_LORA = False
 
 
 def set_fused_lora(flag: bool) -> None:
+    """Deprecated: thread the kernel choice through config instead
+    (``LoRAConfig.impl='fused'``, or ``EngineConfig.fused_lora=True`` for a
+    federated run).  Kept as a process-global override shim."""
+    import warnings
+    warnings.warn("set_fused_lora is deprecated; set LoRAConfig.impl="
+                  "'fused' (EngineConfig.fused_lora threads it through the "
+                  "simulator) instead of mutating process-global state",
+                  DeprecationWarning, stacklevel=2)
     global _FUSED_LORA
     _FUSED_LORA = bool(flag)
 
 
+def _lora_apply_grouped(x: Array, w: Array, lora: dict, scale: float,
+                        bias: Optional[Array], impl: str) -> Array:
+    """Cohort-grouped adapters: a (G, r, K), b (G, N, r) against a shared
+    base w (K, N).  x's leading axes flatten into G equal row segments
+    (segment g owns adapter g) — the ragged server step arranges this."""
+    a, b = lora["a"], lora["b"]
+    g = a.shape[0]
+    *lead, kdim = x.shape
+    x2 = x.reshape(-1, kdim)
+    m = x2.shape[0]
+    if m % g:
+        raise ValueError(f"grouped lora_apply: {m} rows are not divisible "
+                         f"into G={g} equal segments")
+    if impl == "fused":
+        from repro.kernels import ops as _kops  # lazy: avoid import cycle
+        y2 = _kops.grouped_lora_matmul(
+            x2.astype(w.dtype), w, a.astype(w.dtype), b.astype(w.dtype),
+            group_sizes=(m // g,) * g, scale=float(scale))
+        y = y2.reshape(*lead, w.shape[1]).astype(x.dtype)
+    else:
+        y = jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
+        xg = x2.reshape(g, m // g, kdim)
+        lo = jnp.einsum("gmi,gri->gmr", xg, a.astype(x.dtype))
+        up = jnp.einsum("gmr,gor->gmo", lo, b.astype(x.dtype))
+        y = y + scale * up.reshape(*lead, -1)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
 def lora_apply(x: Array, w: Array, lora: Optional[dict], scale: float,
-               bias: Optional[Array] = None) -> Array:
+               bias: Optional[Array] = None,
+               impl: Optional[str] = None) -> Array:
     """y = x @ w [+ bias] + scale * (x @ a.T) @ b.T   with a:(r,in), b:(out,r).
+
+    A 3-D adapter (G, r, in) is a cohort-grouped stack: x's rows split into
+    G equal segments, each applying its own adapter against the shared w
+    (the ragged batched server step; see core/splitfl.py).
 
     The frozen path and the adapter path are kept separate so autodiff only
     produces gradients for (a, b) when w/bias are treated as constants.
     """
-    if _FUSED_LORA and lora is not None and w.ndim == 2:
+    if impl is None:
+        impl = "einsum"
+    elif impl not in LORA_IMPLS:
+        raise KeyError(f"unknown lora impl {impl!r}; choose from {LORA_IMPLS}")
+    if _FUSED_LORA:   # deprecated process-global override (set_fused_lora)
+        impl = "fused"
+    if lora is not None and lora["a"].ndim == 3 and w.ndim == 2:
+        return _lora_apply_grouped(x, w, lora, scale, bias, impl)
+    if impl == "fused" and lora is not None and w.ndim == 2:
         from repro.kernels import ops as _kops  # lazy: avoid import cycle
         y = _kops.fused_lora_matmul(x.astype(w.dtype), w, lora["a"].astype(w.dtype),
                                     lora["b"].astype(w.dtype), scale=float(scale))
@@ -271,13 +328,14 @@ def _act(cfg: ModelConfig, x: Array) -> Array:
 
 def mlp_apply(cfg: ModelConfig, p: dict, lora: Optional[dict], x: Array) -> Array:
     scale = cfg.lora.alpha / cfg.lora.rank
+    impl = cfg.lora.impl
     lget = (lora or {}).get
-    up = lora_apply(x, p["wu"], lget("wu"), scale)
+    up = lora_apply(x, p["wu"], lget("wu"), scale, impl=impl)
     if "wg" in p:
-        up = _act(cfg, lora_apply(x, p["wg"], lget("wg"), scale)) * up
+        up = _act(cfg, lora_apply(x, p["wg"], lget("wg"), scale, impl=impl)) * up
     else:
         up = _act(cfg, up)
-    return lora_apply(up, p["wd"], lget("wd"), scale)
+    return lora_apply(up, p["wd"], lget("wd"), scale, impl=impl)
 
 
 # ---------------------------------------------------------------------------
@@ -305,11 +363,12 @@ def attn_init(rng: Array, cfg: ModelConfig) -> dict:
 def qkv_project(cfg: ModelConfig, p: dict, lora: Optional[dict], x: Array,
                 positions: Optional[Array]) -> tuple[Array, Array, Array]:
     scale = cfg.lora.alpha / cfg.lora.rank
+    impl = cfg.lora.impl
     lget = (lora or {}).get
     b, s, _ = x.shape
-    q = lora_apply(x, p["wq"], lget("wq"), scale, p.get("bq"))
-    k = lora_apply(x, p["wk"], lget("wk"), scale, p.get("bk"))
-    v = lora_apply(x, p["wv"], lget("wv"), scale, p.get("bv"))
+    q = lora_apply(x, p["wq"], lget("wq"), scale, p.get("bq"), impl=impl)
+    k = lora_apply(x, p["wk"], lget("wk"), scale, p.get("bk"), impl=impl)
+    v = lora_apply(x, p["wv"], lget("wv"), scale, p.get("bv"), impl=impl)
     q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
     k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
     v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
@@ -321,7 +380,8 @@ def qkv_project(cfg: ModelConfig, p: dict, lora: Optional[dict], x: Array,
 
 def attn_out(cfg: ModelConfig, p: dict, lora: Optional[dict], ctx: Array) -> Array:
     scale = cfg.lora.alpha / cfg.lora.rank
-    return lora_apply(ctx, p["wo"], (lora or {}).get("wo"), scale)
+    return lora_apply(ctx, p["wo"], (lora or {}).get("wo"), scale,
+                      impl=cfg.lora.impl)
 
 
 # ---------------------------------------------------------------------------

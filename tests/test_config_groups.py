@@ -140,6 +140,8 @@ BAD = [
                       fleet=FleetConfig(edge_cells=2))),
     # sl has nothing to aggregate hierarchically
     (ValueError, dict(scheme="sl", fleet=FleetConfig(edge_cells=2))),
+    # cohort_impl is a closed enum
+    (KeyError, dict(engine=EngineConfig(cohort_impl="bogus"))),
 ]
 
 
@@ -148,6 +150,18 @@ BAD = [
 def test_validation_rejects(exc, kw):
     with pytest.raises(exc):
         validate_run_config(FedRunConfig(**kw), n_clients=6)
+
+
+def test_cohort_impl_and_fused_lora_knobs_valid():
+    """ragged cohort step + fused kernels are plain engine knobs — valid
+    under both engines, no flat-kwarg shim required."""
+    for mode in ("analytic", "event"):
+        validate_run_config(
+            FedRunConfig(engine=EngineConfig(mode=mode, cohort_impl="ragged",
+                                             fused_lora=True)),
+            n_clients=6)
+    assert EngineConfig().cohort_impl == "vmap"      # padded vmap stays default
+    assert EngineConfig().fused_lora is False
 
 
 def test_fleet_size_dependent_rules():

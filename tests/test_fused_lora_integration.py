@@ -1,5 +1,10 @@
-"""The fused LoRA Pallas kernel as a first-class model path: toggling
-``set_fused_lora(True)`` must not change model outputs (interpret mode)."""
+"""The fused LoRA Pallas kernel as a first-class model path: selecting
+``LoRAConfig.impl="fused"`` must not change model outputs (interpret mode),
+and the legacy ``set_fused_lora`` process-global toggle must survive as a
+deprecation shim."""
+import dataclasses
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,28 +18,62 @@ from repro.models.layers import set_fused_lora
 @pytest.fixture(autouse=True)
 def _reset():
     yield
-    set_fused_lora(False)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        set_fused_lora(False)
 
 
-def test_model_loss_matches_with_fused_kernel():
-    cfg = tiny("granite-3-2b", n_layers=2, d_model=256)
+def _fused(cfg):
+    return cfg.with_(lora=dataclasses.replace(cfg.lora, impl="fused"))
+
+
+def _lora_state(cfg):
     model = build_model(cfg)
-    rng = jax.random.PRNGKey(0)
-    params = model.init_params(rng)
+    params = model.init_params(jax.random.PRNGKey(0))
     lora = model.init_lora(jax.random.PRNGKey(1))
     # randomize B so the adapter path is active
     lora = jax.tree.map(
         lambda x: jax.random.normal(jax.random.PRNGKey(2), x.shape) * 0.02, lora)
+    return model, params, lora
+
+
+def test_model_loss_matches_with_fused_kernel():
+    cfg = tiny("granite-3-2b", n_layers=2, d_model=256)
+    model, params, lora = _lora_state(cfg)
     batch = lm_batch(cfg, batch=2, seq=16)
 
-    set_fused_lora(False)
     loss_ref, logits_ref = model.loss(params, lora, batch)
-    set_fused_lora(True)
-    loss_fused, logits_fused = model.loss(params, lora, batch)
+    model_f = build_model(_fused(cfg))
+    loss_fused, logits_fused = model_f.loss(params, lora, batch)
 
     np.testing.assert_allclose(float(loss_ref), float(loss_fused), rtol=1e-4)
     np.testing.assert_allclose(np.asarray(logits_ref), np.asarray(logits_fused),
                                atol=5e-3)
+
+
+def test_unknown_lora_impl_rejected():
+    cfg = tiny("granite-3-2b", n_layers=2, d_model=256)
+    cfg = cfg.with_(lora=dataclasses.replace(cfg.lora, impl="bogus"))
+    model, params, lora = _lora_state(cfg)
+    batch = lm_batch(cfg, batch=2, seq=8)
+    with pytest.raises(KeyError):
+        model.loss(params, lora, batch)
+
+
+def test_set_fused_lora_shim_warns_and_still_overrides():
+    """The deprecated process-global toggle: emits DeprecationWarning but
+    keeps forcing the fused path over an einsum config until reset."""
+    cfg = tiny("granite-3-2b", n_layers=2, d_model=256)
+    model, params, lora = _lora_state(cfg)
+    batch = lm_batch(cfg, batch=2, seq=16)
+    loss_ref, _ = model.loss(params, lora, batch)
+
+    with pytest.warns(DeprecationWarning, match="LoRAConfig.impl"):
+        set_fused_lora(True)
+    from repro.models import layers
+    assert layers._FUSED_LORA  # the override is live until reset
+    loss_shim, _ = model.loss(params, lora, batch)
+    np.testing.assert_allclose(float(loss_ref), float(loss_shim), rtol=1e-4)
 
 
 def test_onehot_embedding_matches_gather():

@@ -1,0 +1,177 @@
+"""Grouped ragged-cohort LoRA kernel vs the jnp oracle: ragged sizes x
+rank x mode sweeps in interpret mode, gradient parity, the single-group
+degenerate case against the per-client fused kernel, input validation,
+and the bucketed-padding jit-cache invariant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.grouped_lora import grouped_lora_matmul as grouped_raw
+from repro.kernels.lora_matmul import lora_matmul
+from repro.kernels.ref import grouped_lora_matmul_ref, lora_matmul_ref
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(shape, dtype=jnp.float32, scale=0.1):
+    return jnp.asarray(RNG.normal(size=shape) * scale).astype(dtype)
+
+
+def _cohort(sizes, k, n, r, dtype=jnp.float32):
+    g = len(sizes)
+    x = _rand((sum(sizes), k), dtype, 0.5)
+    w = _rand((k, n), dtype)
+    a = _rand((g, r, k), dtype)
+    b = _rand((g, n, r), dtype)
+    return x, w, a, b
+
+
+@pytest.mark.parametrize("sizes", [(40, 100, 17), (128, 128), (1, 1, 1),
+                                   (300, 5, 64, 129)])
+@pytest.mark.parametrize("k,n,r", [(200, 150, 6), (128, 128, 16),
+                                   (384, 96, 4)])
+@pytest.mark.parametrize("mode", ["chunk", "direct", "auto"])
+def test_grouped_parity_sweep(sizes, k, n, r, mode):
+    x, w, a, b = _cohort(sizes, k, n, r)
+    scales = tuple(0.5 + 0.5 * i for i in range(len(sizes)))
+    y = ops.grouped_lora_matmul(x, w, a, b, group_sizes=sizes, scales=scales,
+                                mode=mode)
+    yr = grouped_lora_matmul_ref(x, w, a, b, sizes, scales)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-4),
+                                       (jnp.bfloat16, 3e-2)])
+def test_grouped_dtypes(dtype, tol):
+    sizes = (33, 90)
+    x, w, a, b = _cohort(sizes, 256, 192, 8, dtype)
+    y = ops.grouped_lora_matmul(x, w, a, b, group_sizes=sizes, scale=2.0)
+    yr = grouped_lora_matmul_ref(x, w, a, b, sizes, (2.0, 2.0))
+    assert y.dtype == dtype
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=tol, rtol=tol)
+
+
+def test_single_group_degenerates_to_fused():
+    """G=1 grouped == the per-client fused kernel == the oracle."""
+    x, w, a, b = _cohort((75,), 200, 130, 8)
+    y = ops.grouped_lora_matmul(x, w, a[0][None], b[0][None],
+                                group_sizes=(75,), scale=1.7)
+    yf = ops.fused_lora_matmul(x, w, a[0], b[0], scale=1.7)
+    yr = lora_matmul_ref(x, w, a[0], b[0], 1.7)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yf), atol=2e-4)
+
+
+def test_chunk_equals_direct():
+    sizes = (50, 14)
+    x, w, a, b = _cohort(sizes, 96, 160, 4)   # K=96 <= bk: both modes legal
+    yc = ops.grouped_lora_matmul(x, w, a, b, group_sizes=sizes, scale=1.0,
+                                 mode="chunk")
+    yd = ops.grouped_lora_matmul(x, w, a, b, group_sizes=sizes, scale=1.0,
+                                 mode="direct")
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(yd), atol=1e-5)
+
+
+def test_zero_scale_disables_adapter():
+    """scales=0 for one group must reduce to the plain base matmul."""
+    sizes = (20, 30)
+    x, w, a, b = _cohort(sizes, 128, 64, 4)
+    y = ops.grouped_lora_matmul(x, w, a, b, group_sizes=sizes,
+                                scales=(0.0, 2.0))
+    base = jnp.dot(x[:20], w)
+    np.testing.assert_allclose(np.asarray(y[:20]), np.asarray(base),
+                               atol=2e-5)
+
+
+def test_grouped_grad_parity():
+    sizes = (40, 100, 17)
+    x, w, a, b = _cohort(sizes, 200, 150, 6)
+    scales = (2.0, 0.5, 1.0)
+
+    def f_ker(x_, a_, b_):
+        y = ops.grouped_lora_matmul(x_, w, a_, b_, group_sizes=sizes,
+                                    scales=scales)
+        return (y * y).sum()
+
+    def f_ref(x_, a_, b_):
+        y = grouped_lora_matmul_ref(x_, w, a_, b_, sizes, scales)
+        return (y * y).sum()
+
+    gk = jax.grad(f_ker, argnums=(0, 1, 2))(x, a, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, a, b)
+    for got, want in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-3, rtol=2e-3)
+
+
+def test_grouped_under_jit():
+    sizes = (31, 65)
+    x, w, a, b = _cohort(sizes, 140, 70, 4)
+
+    @jax.jit
+    def f(x_, w_, a_, b_):
+        return ops.grouped_lora_matmul(x_, w_, a_, b_, group_sizes=sizes,
+                                       scale=1.3)
+
+    yr = grouped_lora_matmul_ref(x, w, a, b, sizes, (1.3, 1.3))
+    np.testing.assert_allclose(np.asarray(f(x, w, a, b)), np.asarray(yr),
+                               atol=2e-4)
+
+
+def test_grouped_validation():
+    x, w, a, b = _cohort((10, 10), 64, 64, 4)
+    with pytest.raises(ValueError, match="group_sizes"):
+        ops.grouped_lora_matmul(x, w, a, b, group_sizes=(), scale=1.0)
+    with pytest.raises(ValueError, match="rows"):
+        ops.grouped_lora_matmul(x, w, a, b, group_sizes=(10, 11), scale=1.0)
+    with pytest.raises(ValueError, match="adapter pair"):
+        ops.grouped_lora_matmul(x, w, a[:1], b[:1], group_sizes=(10, 10),
+                                scale=1.0)
+    with pytest.raises(ValueError, match="exactly one"):
+        ops.grouped_lora_matmul(x, w, a, b, group_sizes=(10, 10))
+    with pytest.raises(ValueError, match="exactly one"):
+        ops.grouped_lora_matmul(x, w, a, b, group_sizes=(10, 10), scale=1.0,
+                                scales=(1.0, 1.0))
+    with pytest.raises(ValueError, match="one scale per group"):
+        ops.grouped_lora_matmul(x, w, a, b, group_sizes=(10, 10),
+                                scales=(1.0,))
+
+
+def test_fused_wrapper_buckets_jit_cache():
+    """The eager padding wrapper keys the inner jitted kernel on BUCKETED
+    shapes: raw m=100 and m=120 both pad to 128 rows and must share one
+    compiled executable (the recompilation-churn fix)."""
+    k, n, r = 256, 192, 8
+    w = _rand((k, n))
+    a = _rand((r, k))
+    b = _rand((n, r))
+    ops.fused_lora_matmul(_rand((100, k), scale=0.5), w, a, b, scale=1.0)
+    size0 = lora_matmul._cache_size()
+    ops.fused_lora_matmul(_rand((120, k), scale=0.5), w, a, b, scale=1.0)
+    ops.fused_lora_matmul(_rand((97, k), scale=0.5), w, a, b, scale=1.0)
+    assert lora_matmul._cache_size() == size0
+
+
+def test_grouped_composition_shares_trace():
+    """Same padded totals, different gid composition -> no retrace: the
+    group structure rides in runtime arrays, not the trace key."""
+    k, n, r = 128, 64, 4
+    w = _rand((k, n))
+    a = _rand((2, r, k))
+    b = _rand((2, n, r))
+    x = _rand((60, k), scale=0.5)
+    y1 = ops.grouped_lora_matmul(x, w, a, b, group_sizes=(20, 40),
+                                 scales=(1.0, 2.0))
+    size0 = grouped_raw._cache_size()
+    y2 = ops.grouped_lora_matmul(x, w, a, b, group_sizes=(40, 20),
+                                 scales=(2.0, 1.0))
+    assert grouped_raw._cache_size() == size0
+    np.testing.assert_allclose(
+        np.asarray(y1), np.asarray(grouped_lora_matmul_ref(
+            x, w, a, b, (20, 40), (1.0, 2.0))), atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(y2), np.asarray(grouped_lora_matmul_ref(
+            x, w, a, b, (40, 20), (2.0, 1.0))), atol=2e-4)

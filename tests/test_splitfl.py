@@ -207,6 +207,70 @@ def test_batched_cls_server_step_matches_sequential():
             np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
 
 
+def test_ragged_server_step_matches_vmap(setup):
+    """impl="ragged" (cut-grouped concat batches, static cuts, layers
+    [cut, L) only) == impl="vmap" (padded masked scan) for a mixed,
+    unsorted cohort with duplicate cuts."""
+    cfg, model, params, lora = setup
+    opt = AdamW(1e-3)
+    cuts = [3, 1, 3, 2]
+    loras, opts, vs, batches = _cohort_state(model, params, lora, cuts, cfg,
+                                             opt, with_head=False)
+    args = (params, lora_lib.stack_trees(loras), lora_lib.stack_trees(opts),
+            jnp.stack(vs), lora_lib.stack_trees(batches), jnp.asarray(cuts))
+    out_v = splitfl.make_server_step_batched(model, opt, donate=False)(*args)
+    out_r = splitfl.make_server_step_batched(model, opt, donate=False,
+                                             impl="ragged")(*args)
+    for x, y in zip(jax.tree.leaves(out_v), jax.tree.leaves(out_r)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=2e-5)
+
+
+def test_ragged_cls_server_step_matches_vmap():
+    cfg = tiny("bert-base", n_layers=4)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    lora = model.init_lora(jax.random.PRNGKey(1))
+    opt = AdamW(1e-2)
+    cuts = [2, 3, 1, 2]
+    loras, opts, vs, batches = _cohort_state(model, params, lora, cuts, cfg,
+                                             opt, with_head=True)
+    heads = [params["cls_head"]] * len(cuts)
+    args = (params, lora_lib.stack_trees(loras), jnp.stack(heads),
+            lora_lib.stack_trees(opts), jnp.stack(vs),
+            lora_lib.stack_trees(batches), jnp.asarray(cuts))
+    out_v = splitfl.make_server_step_cls_batched(model, opt)(*args)
+    out_r = splitfl.make_server_step_cls_batched(model, opt,
+                                                 impl="ragged")(*args)
+    for x, y in zip(jax.tree.leaves(out_v), jax.tree.leaves(out_r)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=2e-5)
+
+
+def test_ragged_chunking_is_exact(setup):
+    """cohort_chunk splits within a cut-group; numbers must not move."""
+    cfg, model, params, lora = setup
+    opt = AdamW(1e-3)
+    cuts = [2, 2, 2, 1]
+    loras, opts, vs, batches = _cohort_state(model, params, lora, cuts, cfg,
+                                             opt, with_head=False)
+    args = (params, lora_lib.stack_trees(loras), lora_lib.stack_trees(opts),
+            jnp.stack(vs), lora_lib.stack_trees(batches), jnp.asarray(cuts))
+    outs = [splitfl.make_server_step_batched(model, opt, donate=False,
+                                             impl="ragged",
+                                             cohort_chunk=k)(*args)
+            for k in (1, None)]
+    for x, y in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+def test_batched_step_rejects_unknown_impl(setup):
+    cfg, model, params, lora = setup
+    opt = AdamW(1e-3)
+    with pytest.raises(KeyError):
+        splitfl.make_server_step_batched(model, opt, impl="bogus")
+    with pytest.raises(KeyError):
+        splitfl.make_server_step_cls_batched(model, opt, impl="bogus")
+
+
 def test_stack_unstack_roundtrip(setup):
     _, _, _, lora = setup
     trees = [jax.tree.map(lambda a, k=k: a + k, lora) for k in range(3)]
