@@ -10,11 +10,26 @@ full ``PopulationClock`` (sampling + rounds + commits) flat vs two-tier
 hierarchical, so the edge/cloud commit composition shows up in the perf
 trajectory too.
 
+The ``online_disciplines`` section runs the same pair under every online
+queue discipline — the static-key "wf"/"priority" heaps and the
+live-plane batched "bw" re-keying — and the ``async_population`` section
+runs the buffered / staleness aggregation loops through the SoA async
+event kernel (``fed.population_async``) vs the per-object
+``FederationClock``, each asserting bit-identical timelines before
+recording the ratio.
+
 Rows (``us_per_call`` is wall-clock per round kernel invocation):
 
-  population_vectorized_round   SoA kernel, 10^4 clients
+  population_vectorized_round   SoA kernel, 10^4 clients (fifo)
   population_object_round       per-object DES, same jobs
   population_speedup            derived ratio (acceptance: >= 20x)
+  population_online_<d>         SoA kernel, discipline d in wf/priority/bw
+  population_online_<d>_object  per-object DES, same discipline
+  population_online_<d>_speedup derived ratio (bw acceptance: >= 20x)
+  population_async_<p>          SoA async kernel, policy p in
+                                buffered/staleness
+  population_async_<p>_object   per-object FederationClock, same policy
+  population_async_<p>_speedup  derived ratio (acceptance: >= 20x)
   population_clock_flat         4-round PopulationClock, cloud-only commits
   population_clock_hierarchical same, 100 edge cells + backhaul summaries
 """
@@ -40,7 +55,8 @@ def _round_arrays(cfg, fleet):
     return JobArrays(uids=np.arange(fleet.n), t_f=t["t_f"], t_fc=t["t_fc"],
                      t_s=t["t_s"], t_bc=t["t_bc"], t_b=t["t_b"],
                      arrival=np.zeros(fleet.n), fc_bytes=t["fc_bytes"],
-                     bc_bytes=t["bc_bytes"])
+                     bc_bytes=t["bc_bytes"],
+                     priority=fleet.cuts / fleet.tflops)
 
 
 def _server():
@@ -52,15 +68,15 @@ def run(csv: bool = False):
     cfg = REGISTRY["gemma-2b"]
     fleet = FleetSpec(n=N_CLIENTS, seed=0, link_model="constant").population()
     arrays = _round_arrays(cfg, fleet)
-    kw = dict(policy="fifo", slots=SLOTS, cohort_chunk=CHUNK,
-              chunk_efficiency=0.9)
+    kw = dict(slots=SLOTS, cohort_chunk=CHUNK, chunk_efficiency=0.9)
 
     t0 = time.perf_counter()
-    vec = vectorized_round(arrays, collect_events=False, **kw)
+    vec = vectorized_round(arrays, policy="fifo", collect_events=False, **kw)
     t_vec = time.perf_counter() - t0
 
+    jobs = arrays.to_jobs()
     t0 = time.perf_counter()
-    obj = simulate_round(arrays.to_jobs(), **kw)
+    obj = simulate_round(jobs, policy="fifo", **kw)
     t_obj = time.perf_counter() - t0
 
     if vec.round_time != obj.round_time:
@@ -81,6 +97,73 @@ def run(csv: bool = False):
          f"{speedup:.1f}x vectorized vs per-object (target >= 20x, "
          f"makespans bit-identical)"),
     ]
+
+    # every online discipline through the same pair: static-key heaps
+    # (wf/priority) and the live-plane batched "bw" re-keying
+    from repro.net import ConstantLink, NetworkPlane
+    plane = NetworkPlane([ConstantLink(float(r)) for r in fleet.rate_mbps])
+    for policy, net in (("wf", None), ("priority", None), ("bw", plane)):
+        t0 = time.perf_counter()
+        vec = vectorized_round(arrays, policy=policy, network=net,
+                               collect_events=False, **kw)
+        t_vec = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        obj = simulate_round(jobs, policy=policy, network=net, **kw)
+        t_obj = time.perf_counter() - t0
+        if vec.round_time != obj.round_time:
+            raise AssertionError(
+                f"{policy} kernel divergence: vectorized "
+                f"{vec.round_time!r} != per-object {obj.round_time!r}")
+        rows.extend([
+            (f"population_online_{policy}", t_vec * 1e6,
+             f"n={N_CLIENTS} makespan={vec.round_time:.3f}s "
+             f"events_per_s={events / t_vec:.0f}"),
+            (f"population_online_{policy}_object", t_obj * 1e6,
+             f"n={N_CLIENTS} makespan={obj.round_time:.3f}s "
+             f"events_per_s={events / t_obj:.0f}"),
+            (f"population_online_{policy}_speedup", 0.0,
+             f"{t_obj / t_vec:.1f}x vectorized vs per-object "
+             f"(bw target >= 20x, makespans bit-identical)"),
+        ])
+
+    # async aggregation loops: the SoA event kernel vs the per-object
+    # FederationClock on the full 10^4 fleet (buffered k-of-U commits and
+    # the staleness lineage share one timing path)
+    for agg_policy in ("buffered", "staleness"):
+        run = FedRunConfig(
+            rounds=1, batch_size=16, seq_len=128,
+            agg=AggConfig(policy=agg_policy, interval=1, buffer_k=256,
+                          max_inflight=2,
+                          staleness_alpha=0.5 if agg_policy == "staleness"
+                          else None),
+            engine=EngineConfig(mode="event", scheduler="wf", slots=SLOTS,
+                                cohort_chunk=CHUNK, chunk_efficiency=0.9),
+            fleet=FleetConfig(population_threshold=1))
+        t0 = time.perf_counter()
+        avec = PopulationClock(cfg, fleet, run, force="vectorized").run()
+        t_vec = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        aobj = PopulationClock(cfg, fleet, run, force="objects").run()
+        t_obj = time.perf_counter() - t0
+        if (avec.makespan != aobj.makespan
+                or avec.commit_times != aobj.commit_times):
+            raise AssertionError(
+                f"async {agg_policy} divergence: vectorized "
+                f"{avec.makespan!r} != per-object {aobj.makespan!r}")
+        n_ev = avec.events_processed
+        rows.extend([
+            (f"population_async_{agg_policy}", t_vec * 1e6,
+             f"n={N_CLIENTS} makespan={avec.makespan:.3f}s "
+             f"commits={len(avec.commit_times)} "
+             f"events_per_s={n_ev / t_vec:.0f}"),
+            (f"population_async_{agg_policy}_object", t_obj * 1e6,
+             f"n={N_CLIENTS} makespan={aobj.makespan:.3f}s "
+             f"commits={len(aobj.commit_times)} "
+             f"events_per_s={n_ev / t_obj:.0f}"),
+            (f"population_async_{agg_policy}_speedup", 0.0,
+             f"{t_obj / t_vec:.1f}x vectorized vs per-object "
+             f"(target >= 20x, timelines bit-identical)"),
+        ])
 
     # full driver: sampling + rounds + commits, flat vs two-tier
     base = dict(rounds=4, batch_size=16, seq_len=128,

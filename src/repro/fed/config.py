@@ -205,13 +205,18 @@ class FleetConfig:
     ``edge_cells > 1`` arranges the fleet into a two-tier topology: each
     edge cell partially merges its members' adapters (through its own
     shared cell under plane-routed transport) and the cloud merges the
-    edge summaries.
+    edge summaries.  ``cell_assignment`` picks how clients map to cells:
+    "blocks" partitions uids into contiguous ranges (the synthetic
+    stand-in), "kmeans" clusters per-client coordinates
+    (``EdgeTopology.kmeans``; needs a fleet that carries coords, e.g.
+    ``FleetSpec.population()``).
     """
     size: Optional[int] = None          # expected fleet size (None = infer)
     sampling: str = "full"              # full | uniform | pareto
     rate: float = 1.0                   # cohort fraction for uniform/pareto
     pareto_alpha: float = 1.16          # rank-bias exponent (pareto only)
     edge_cells: int = 1                 # >1 = two-tier edge/cloud topology
+    cell_assignment: str = "blocks"     # blocks | kmeans (client->cell map)
     edge_capacity_mbps: Optional[float] = None  # per-edge cell capacity
     backhaul_mbps: float = 1000.0       # edge<->cloud summary link rate
     population_threshold: int = 4096    # SoA vectorized path at/above this
@@ -233,6 +238,12 @@ class FleetConfig:
             raise ValueError("fleet size must be >= 1 when set")
         if self.edge_cells < 1:
             raise ValueError("edge_cells must be >= 1")
+        if self.cell_assignment not in ("blocks", "kmeans"):
+            raise KeyError(f"unknown cell assignment "
+                           f"{self.cell_assignment!r}")
+        if self.cell_assignment != "blocks" and self.edge_cells < 2:
+            raise ValueError("cell_assignment is only read with "
+                             "edge_cells > 1")
         if self.edge_capacity_mbps is not None:
             if self.edge_cells < 2:
                 raise ValueError("edge_capacity_mbps is only read with "

@@ -45,7 +45,8 @@ from repro.net.topology import EdgeTopology, edge_commit_legs
 
 __all__ = ["AGG_POLICIES", "ClockConfig", "ClockResult", "CommitEvent",
            "EngineResult", "FederationClock", "Job", "RoundPlan",
-           "ServeEvent", "ServiceRecord", "jobs_from_times", "simulate_round"]
+           "ServeEvent", "ServiceRecord", "async_downlink_instant",
+           "async_uplink_instant", "jobs_from_times", "simulate_round"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -215,6 +216,29 @@ def _downlink_done(served: Sequence[Tuple[int, float]],
         for (u, _end), f in zip(shared, fins):
             out[u] = f - t_origin
     return out
+
+
+def async_uplink_instant(network: Optional[NetworkPlane], job: Job) -> float:
+    """Global instant a job entering its round at ``job.arrival`` reaches the
+    server queue, over a dedicated (or absent) network.  Shared-medium
+    uplinks go through a ``SharedCell`` instead — they are cell events, not
+    a per-job offset.  The population-scale SoA kernel
+    (``fed/population_async.py``) mirrors this elementwise; keeping both
+    engines on the same expression is what keeps them bit-identical."""
+    if network is not None and job.fc_bytes > 0:
+        return network.uplink_finish(job.uid, job.arrival + job.t_f,
+                                     job.fc_bytes)
+    return job.ready
+
+
+def async_downlink_instant(network: Optional[NetworkPlane], job: Job,
+                           t: float) -> float:
+    """Global instant a job served at ``t`` finishes its downlink, over a
+    dedicated (or absent) network.  Counterpart of
+    ``async_uplink_instant``; mirrored by the SoA async kernel."""
+    if network is not None and job.bc_bytes > 0:
+        return network.downlink_finish(job.uid, t, job.bc_bytes)
+    return t + job.t_bc
 
 
 def simulate_round(jobs: Sequence[Job], *, policy: str = "fifo",
@@ -769,15 +793,12 @@ class FederationClock:
         if self._on_round_start is not None:
             self._on_round_start(u, rnd, t0)
         self.trace.append((t0 + job.t_f, "fwd_done", u))
-        if net is not None and job.fc_bytes > 0:
-            if self._shared:
-                # the uplink contends in the cell from fwd_done on;
-                # its completion is a cell event, not a fixed offset
-                self._push(t0 + job.t_f, "up_start", (u, rnd))
-                return
-            ready = net.uplink_finish(u, t0 + job.t_f, job.fc_bytes)
-        else:
-            ready = job.ready
+        if self._shared and net is not None and job.fc_bytes > 0:
+            # the uplink contends in the cell from fwd_done on;
+            # its completion is a cell event, not a fixed offset
+            self._push(t0 + job.t_f, "up_start", (u, rnd))
+            return
+        ready = async_uplink_instant(net, job)
         self.trace.append((ready, "uplink_done", u))
         self._push(ready, "uplink", (u, rnd))
 
@@ -955,13 +976,10 @@ class FederationClock:
                 self._on_serve(ev)
             for u, rnd in take:
                 j = S.jobs[(u, rnd)]
-                if net is not None and j.bc_bytes > 0:
-                    if self._shared:
-                        S.down_cell.add(t, (u, rnd), u, j.bc_bytes)
-                        continue
-                    dl = net.downlink_finish(u, t, j.bc_bytes)
-                else:
-                    dl = t + j.t_bc
+                if self._shared and net is not None and j.bc_bytes > 0:
+                    S.down_cell.add(t, (u, rnd), u, j.bc_bytes)
+                    continue
+                dl = async_downlink_instant(net, j, t)
                 self.trace.append((dl, "downlink_done", u))
                 self.trace.append((dl + j.t_b, "client_done", u))
                 self._push(dl + j.t_b, "client_done", (u, rnd))

@@ -148,7 +148,17 @@ class FleetSpec:
             mem_gb=np.array([d.mem_gb for d in PAPER_CLIENTS])[idx],
             cuts=np.array(PAPER_CUTS)[idx],
             rate_mbps=rates,
+            coords=self.coords(),
         )
+
+    def coords(self) -> np.ndarray:
+        """Per-client planar positions in the unit square (the k-means
+        cell-assignment input).  Drawn from a seed-derived rng stream
+        INDEPENDENT of the device/link draws, so adding location never
+        perturbs the ``devices()``/``links()``/``population()`` streams
+        (those are pinned draw-for-draw by the parity tests)."""
+        rng = np.random.default_rng([self.seed, 0xC311])
+        return rng.random((self.n, 2))
 
     def _nominal_rates(self) -> np.ndarray:
         """Each client's nominal (good-state / peak) link rate, consuming

@@ -23,12 +23,13 @@ ROADMAP's 10^5-client fleets.  This module is the scale path:
                        loop, because bit-exactness is the regression
                        anchor and ``max``/``+`` chains are order-
                        sensitive — and resolves all downlinks/completions
-                       in one more array pass.  Supports the "fifo"
-                       online discipline and any FIXED order (which
-                       covers the "ours"/"wf"/"bw"/"optimal" schedulers:
-                       their orders are known before the round starts);
-                       the other online disciplines re-sort on live
-                       state and go through the per-object DES.
+                       in one more array pass.  Serves any FIXED order
+                       and every online discipline: "fifo"/"wf"/
+                       "priority" (and "bw" off-plane) have STATIC
+                       per-job keys and ride a lazily-fed key heap;
+                       "bw" under a live plane re-keys the still-queued
+                       set as arrays at each dispatch boundary (one
+                       batched rate query + masked lexsort per fill).
 ``sample_cohort``      per-round cohort sampling: "full" enumeration,
                        legacy "uniform", or Pareto-biased selection over
                        capability ranks (Jung et al. 2024) so a
@@ -41,10 +42,12 @@ ROADMAP's 10^5-client fleets.  This module is the scale path:
                        closed-form flat or two-tier hierarchical commit
                        charges shared by both modes.
 
-Async aggregation policies (buffered / staleness) are inherently
-per-object — every client paces individually and the queue interleaves
-local rounds — so ``PopulationClock`` delegates them to the
-``FederationClock`` below the threshold and refuses above it.
+Async aggregation policies (buffered / staleness) pace every client
+individually, so their event loop lives in continuous time rather than
+per-round waves: below ``population_threshold`` the per-object
+``FederationClock`` runs it; at/above, the struct-of-arrays async kernel
+in ``fed.population_async`` replays the identical event sequence over
+``JobArrays`` (the per-object clock stays on as the parity oracle).
 """
 from __future__ import annotations
 
@@ -61,9 +64,11 @@ from repro.core.cost_model import (BWD_FACTOR, DeviceProfile, StepTimes,
                                    layer_fwd_flops_per_token,
                                    lora_flops_per_token_per_layer,
                                    lora_upload_bytes)
+from repro.core.scheduling import alg2_priorities, resolve_online
 from repro.fed.config import FedRunConfig
-from repro.fed.engine import (ClockConfig, EngineResult, FederationClock,
-                              Job, ServiceRecord, simulate_round)
+from repro.fed.engine import (DISCIPLINES, ClockConfig, EngineResult,
+                              FederationClock, Job, ServiceRecord,
+                              simulate_round)
 from repro.net import ConstantLink, NetworkPlane, shared_finish_times
 from repro.net.topology import EdgeTopology, edge_commit_legs
 
@@ -86,6 +91,7 @@ class PopulationFleet:
     mem_gb: np.ndarray          # memory budgets (GB)
     cuts: np.ndarray            # client-side layer counts (int)
     rate_mbps: np.ndarray       # nominal link rates
+    coords: Optional[np.ndarray] = None   # (n, d) positions (cell k-means)
 
     def __post_init__(self):
         self.tflops = np.asarray(self.tflops, dtype=np.float64)
@@ -99,6 +105,10 @@ class PopulationFleet:
                 raise ValueError("all fleet arrays must share one length")
         if n < 1:
             raise ValueError("fleet size must be >= 1")
+        if self.coords is not None:
+            self.coords = np.asarray(self.coords, dtype=np.float64)
+            if self.coords.ndim != 2 or self.coords.shape[0] != n:
+                raise ValueError("coords must be an (n, d) array")
         self._ranks: Optional[np.ndarray] = None
 
     @property
@@ -115,16 +125,23 @@ class PopulationFleet:
             self._ranks = ranks
         return self._ranks
 
-    def links(self) -> List[ConstantLink]:
-        """Materialize per-object constant links (small-fleet fallback)."""
-        return [ConstantLink(float(r)) for r in self.rate_mbps]
+    def links(self, uids: Optional[Sequence[int]] = None
+              ) -> List[ConstantLink]:
+        """Materialize per-object constant links — the whole fleet, or
+        lazily just the ``uids`` cohort (O(cohort), not O(n))."""
+        sel = range(self.n) if uids is None else uids
+        return [ConstantLink(float(self.rate_mbps[int(u)])) for u in sel]
 
-    def devices(self) -> List[DeviceProfile]:
-        """Materialize per-object device profiles (small-fleet fallback)."""
-        return [DeviceProfile(f"pop#{i}", tflops=float(self.tflops[i]),
-                              mem_gb=float(self.mem_gb[i]),
-                              utilization=float(self.utilization[i]))
-                for i in range(self.n)]
+    def devices(self, uids: Optional[Sequence[int]] = None
+                ) -> List[DeviceProfile]:
+        """Materialize per-object device profiles — the whole fleet, or
+        lazily just the ``uids`` cohort (O(cohort), not O(n))."""
+        sel = range(self.n) if uids is None else uids
+        return [DeviceProfile(f"pop#{int(u)}",
+                              tflops=float(self.tflops[int(u)]),
+                              mem_gb=float(self.mem_gb[int(u)]),
+                              utilization=float(self.utilization[int(u)]))
+                for u in sel]
 
 
 def step_time_arrays(cfg: ModelConfig, fleet: PopulationFleet,
@@ -212,12 +229,15 @@ class JobArrays:
     arrival: np.ndarray
     fc_bytes: np.ndarray
     bc_bytes: np.ndarray
+    priority: Optional[np.ndarray] = None   # Job.priority (zeros when unset)
 
     def __post_init__(self):
         self.uids = np.asarray(self.uids, dtype=np.int64)
         n = self.uids.shape[0]
+        if self.priority is None:
+            self.priority = np.zeros(n)
         for f in ("t_f", "t_fc", "t_s", "t_bc", "t_b", "arrival",
-                  "fc_bytes", "bc_bytes"):
+                  "fc_bytes", "bc_bytes", "priority"):
             a = np.asarray(getattr(self, f), dtype=np.float64)
             if a.shape != (n,):
                 raise ValueError("all job arrays must share one length")
@@ -234,17 +254,35 @@ class JobArrays:
                    t_bc=[j.t_bc for j in jobs], t_b=[j.t_b for j in jobs],
                    arrival=[j.arrival for j in jobs],
                    fc_bytes=[j.fc_bytes for j in jobs],
-                   bc_bytes=[j.bc_bytes for j in jobs])
+                   bc_bytes=[j.bc_bytes for j in jobs],
+                   priority=[j.priority for j in jobs])
 
-    def to_jobs(self) -> List[Job]:
-        """Materialize per-object jobs (the DES fallback's input)."""
+    def to_jobs(self, indices: Optional[Sequence[int]] = None) -> List[Job]:
+        """Materialize per-object jobs (the DES fallback's input) — all of
+        them, or lazily just the ``indices`` rows (per-cohort
+        materialization: callers dispatching a cohort slice build only
+        that slice's objects)."""
+        rows = range(self.n) if indices is None \
+            else [int(i) for i in indices]
         return [Job(uid=int(self.uids[i]), t_f=float(self.t_f[i]),
                     t_fc=float(self.t_fc[i]), t_s=float(self.t_s[i]),
                     t_bc=float(self.t_bc[i]), t_b=float(self.t_b[i]),
                     arrival=float(self.arrival[i]),
+                    priority=float(self.priority[i]),
                     fc_bytes=float(self.fc_bytes[i]),
                     bc_bytes=float(self.bc_bytes[i]))
-                for i in range(self.n)]
+                for i in rows]
+
+    def take(self, indices: Sequence[int]) -> "JobArrays":
+        """Row-subset view builder (cohort slice as arrays, no objects)."""
+        sel = np.asarray(indices, dtype=np.int64)
+        return JobArrays(uids=self.uids[sel], t_f=self.t_f[sel],
+                         t_fc=self.t_fc[sel], t_s=self.t_s[sel],
+                         t_bc=self.t_bc[sel], t_b=self.t_b[sel],
+                         arrival=self.arrival[sel],
+                         fc_bytes=self.fc_bytes[sel],
+                         bc_bytes=self.bc_bytes[sel],
+                         priority=self.priority[sel])
 
 
 def _vec_uplink_ready(arrays: JobArrays, network: Optional[NetworkPlane],
@@ -310,6 +348,47 @@ def _vec_downlink_done(served: List[Tuple[int, float]], arrays: JobArrays,
     return out
 
 
+def _chunk_smallest(keys: np.ndarray, uids: np.ndarray, k: int) -> np.ndarray:
+    """Positions of the ``k`` smallest ``(key, uid)`` pairs, in that order
+    — exactly ``np.lexsort((uids, keys))[:k]`` without sorting the whole
+    queue.  An O(q) partition bounds the candidate set by the k-th
+    smallest key (keeping every tie at the boundary, so the uid tiebreak
+    still sees all contenders) and only the candidates are lexsorted:
+    a cohort-chunk dispatch from a 10^4-deep queue sorts ~k rows instead
+    of 10^4."""
+    if keys.size <= k:
+        return np.lexsort((uids, keys))
+    kth = np.partition(keys, k - 1)[k - 1]
+    cand = np.flatnonzero(keys <= kth)
+    return cand[np.lexsort((uids[cand], keys[cand]))[:k]]
+
+
+def _bw_keys(arrays: JobArrays, q: np.ndarray, network: NetworkPlane,
+             t: float) -> np.ndarray:
+    """Batched ``engine._net_bw_key`` primary keys for the still-queued
+    rows ``q`` at global dispatch instant ``t``: one vectorized rate query
+    replaces a Python key callback per job per sort.  Elementwise-identical
+    to the scalar predictor — ``(t + bits/rate) - t`` keeps the operand
+    grouping, the shared-cell capacity share uses the same ``concurrent=0``
+    price, and zero-rate links fall back to the scalar recursion."""
+    b = arrays.bc_bytes[q]
+    uids = arrays.uids[q]
+    r = network.rates_bps_at(t, uids, "down")
+    if network.shared:
+        r = np.minimum(r, network.capacity_mbps * 1e6 / (0 + 1))
+    with np.errstate(divide="ignore", invalid="ignore"):
+        dl = (t + b * 8.0 / r) - t
+    stalled = r <= 0.0
+    if stalled.any():
+        for j in np.flatnonzero(stalled):
+            dl[j] = network.predict_downlink(int(uids[j]), t,
+                                             float(b[j])) - t
+    nominal = b <= 0.0
+    if nominal.any():
+        dl = np.where(nominal, arrays.t_bc[q], dl)
+    return -(dl + arrays.t_b[q])
+
+
 def vectorized_round(arrays: JobArrays, *, policy: str = "fifo",
                      order: Optional[Sequence[int]] = None, slots: int = 1,
                      cohort_chunk: int = 1, chunk_efficiency: float = 1.0,
@@ -325,13 +404,20 @@ def vectorized_round(arrays: JobArrays, *, policy: str = "fifo",
     deadline cuts) is replayed as a scalar loop — it MUST stay scalar,
     because bit-exactness is the regression anchor and ``max``/``+``
     chains are order-sensitive.  What gets eliminated is the per-object
-    DES's per-dispatch queue re-sort (O(n^2 log n) per wave): FIFO's sort
-    key is STATIC per job (the nominal ``Job.ready``, even when a network
-    plane resolves the actual queue-entry instant), so one arrival
-    lexsort plus a lazily-fed key heap — each job pushed exactly once —
-    replays the identical serve order in O(n log n).  A fixed ``order``
-    is given outright.  Online disciplines whose keys move with live
-    state ("wf"/"priority"/"bw") stay with the per-object DES.
+    DES's per-dispatch queue re-sort (O(n^2 log n) per wave):
+
+    * A fixed ``order`` is given outright.
+    * "fifo"/"wf"/"priority" — and "bw" without a plane — have STATIC
+      per-job keys (the repeated DES sort never changes their relative
+      order: nominal ``Job.ready``, ``-t_s``, ``-priority``,
+      ``-(t_bc + t_b)``), so one arrival lexsort plus a lazily-fed key
+      heap — each job pushed exactly once — replays the identical serve
+      order in O(n log n).
+    * "bw" WITH a plane re-predicts every queued client's downlink from
+      live link state at each dispatch boundary: the re-keying is
+      BATCHED — one vectorized rate query + masked lexsort over the
+      still-queued rows per fill (``_bw_keys``) instead of a Python key
+      callback per job per sort.
 
     ``collect_events=False`` skips building the O(6n) event-tuple trace
     (the bench path); everything else is unaffected.
@@ -341,10 +427,8 @@ def vectorized_round(arrays: JobArrays, *, policy: str = "fifo",
     if order is not None \
             and sorted(order) != sorted(int(u) for u in arrays.uids):
         raise ValueError("order must be a permutation of the job uids")
-    if order is None and policy != "fifo":
-        raise ValueError(f"the vectorized round serves policy='fifo' or a "
-                         f"fixed order; {policy!r} re-sorts on live state "
-                         f"— use the per-object simulate_round")
+    if order is None and policy not in DISCIPLINES:
+        raise KeyError(f"unknown queue discipline {policy!r}")
 
     n = arrays.n
     idx = {int(u): i for i, u in enumerate(arrays.uids)}
@@ -396,24 +480,44 @@ def vectorized_round(arrays: JobArrays, *, policy: str = "fifo",
             dispatch(take, slot, start)
             n_left -= len(take)
     else:
-        # FIFO: jobs ARRIVE at their (network-resolved) uplink finish but
-        # queue-sort by the static nominal Job.ready — so drain arrivals
-        # through a pointer over one (arrival, seq) lexsort and serve from
-        # a key heap fed lazily (each job pushed once).  This replays the
-        # DES's drain/sort/take loop order-for-order.
+        # Online disciplines: jobs ARRIVE at their (network-resolved)
+        # uplink finish; arrivals drain through a pointer over one
+        # (arrival, seq) lexsort.  Static-key policies serve from a key
+        # heap fed lazily (each job pushed once) — popping the chunk-
+        # smallest from it replays the DES's sort/take loop order-for-
+        # order because at most one job per client is in the queue and
+        # (key, uid) is a total order.  "bw" under a plane re-keys the
+        # queued set as arrays at every dispatch boundary instead.
         arr_order = np.lexsort((np.arange(n), ready_arr))   # (ready, seq)
-        nominal = arrays.arrival + arrays.t_f + arrays.t_fc  # Job.ready
-        key_heap: List[Tuple[float, int, int]] = []          # (key, uid, pos)
+        dynamic_bw = policy == "bw" and network is not None
+        if dynamic_bw:
+            queued = np.zeros(n, dtype=bool)
+            n_queued = 0
+        else:
+            if policy == "fifo":
+                static_key = arrays.arrival + arrays.t_f \
+                    + arrays.t_fc                           # Job.ready
+            elif policy == "wf":
+                static_key = -arrays.t_s
+            elif policy == "priority":
+                static_key = -arrays.priority
+            else:                                # bw, no plane: nominal
+                static_key = -(arrays.t_bc + arrays.t_b)
+            key_heap: List[Tuple[float, int, int]] = []     # (key, uid, pos)
         i = 0
         while n_left > 0:
             slot = min(range(slots), key=lambda s: slot_free[s])
             now = slot_free[slot]
             while i < n and float(ready_arr[arr_order[i]]) <= now:
                 p = int(arr_order[i])
-                heapq.heappush(key_heap,
-                               (float(nominal[p]), int(arrays.uids[p]), p))
+                if dynamic_bw:
+                    queued[p] = True
+                    n_queued += 1
+                else:
+                    heapq.heappush(key_heap, (float(static_key[p]),
+                                              int(arrays.uids[p]), p))
                 i += 1
-            if not key_heap:
+            if not (n_queued if dynamic_bw else key_heap):
                 # queue empty: idle-advance ALL slots to the next arrival
                 nxt = float(ready_arr[arr_order[i]])
                 if deadline is not None and nxt > deadline:
@@ -426,8 +530,16 @@ def vectorized_round(arrays: JobArrays, *, policy: str = "fifo",
                 for s in range(slots):
                     slot_free[s] = max(slot_free[s], nxt)
                 continue
-            take = [heapq.heappop(key_heap)[2]
-                    for _ in range(min(cohort_chunk, len(key_heap)))]
+            if dynamic_bw:
+                q = np.flatnonzero(queued)
+                keys = _bw_keys(arrays, q, network, t_origin + now)
+                sel = q[_chunk_smallest(keys, arrays.uids[q], cohort_chunk)]
+                take = [int(p) for p in sel]
+                queued[sel] = False
+                n_queued -= len(take)
+            else:
+                take = [heapq.heappop(key_heap)[2]
+                        for _ in range(min(cohort_chunk, len(key_heap)))]
             start = now
             if deadline is not None and start > deadline:
                 dropped.extend(int(arrays.uids[p]) for p in take)
@@ -482,10 +594,17 @@ class PopulationClock:
     shared cells); under ``"nominal"`` the charge is the slowest
     contributor's round trip at its nominal rate.
 
-    The async policies (buffered / staleness) pace clients individually
-    through the per-object ``FederationClock`` and are refused above the
-    threshold — per-object is the contract there, not an optimization
-    shortfall.
+    The async policies (buffered / staleness) pace clients individually:
+    below the threshold they run the per-object ``FederationClock``; at
+    or above it the struct-of-arrays kernel in ``fed.population_async``
+    replays the identical event sequence over arrays (dedicated
+    constant-rate transport — shared cells and time-varying links stay
+    per-object).
+
+    Schedulers map exactly as in ``Simulator``: "ours"/"fifo"/"wf"/"bw"
+    serve ONLINE (keys re-evaluate as jobs arrive; "ours" is the Alg. 2
+    priority discipline), while "optimal" — which has no online form —
+    is served as a fixed Alg. 2 sequence.
     """
 
     def __init__(self, cfg: ModelConfig, fleet: PopulationFleet,
@@ -500,21 +619,18 @@ class PopulationClock:
         if run.fleet.size is not None and run.fleet.size != fleet.n:
             raise ValueError(f"run.fleet.size={run.fleet.size} does not "
                              f"match the {fleet.n}-client fleet")
-        if run.agg.policy != "sync":
-            if force == "vectorized":
-                raise ValueError("async aggregation paces clients "
-                                 "individually; there is no vectorized "
-                                 "async path")
-            if fleet.n > run.fleet.population_threshold:
-                raise ValueError(
-                    f"async aggregation is per-object by contract; "
-                    f"{fleet.n} clients exceeds population_threshold="
-                    f"{run.fleet.population_threshold}")
-        if run.engine.scheduler == "fifo":
-            self._policy, self._fixed = "fifo", False
+        if run.engine.scheduler == "optimal":
+            # brute-force has no online form; at population scale Alg. 2
+            # IS the tractable order, served as a fixed sequence
+            self._policy, self._fixed, needs_pri = "fifo", True, False
         else:
-            # ours/wf/bw/optimal: fixed orders known before the round
-            self._policy, self._fixed = "fifo", True
+            # ours/fifo/wf/bw serve ONLINE (same mapping as
+            # Simulator._plan_wave): keys re-evaluate as jobs arrive
+            self._policy, needs_pri = resolve_online(run.engine.scheduler)
+            self._fixed = False
+        # Alg. 2 priorities (N_c / C): same int/float division as
+        # scheduling.alg2_priorities, elementwise
+        self._pri = (fleet.cuts / fleet.tflops) if needs_pri else None
         self.cfg, self.fleet, self.run_cfg, self.server = cfg, fleet, run, server
         self.now = 0.0
         self._arrays = step_time_arrays(cfg, fleet, server,
@@ -542,10 +658,21 @@ class PopulationClock:
                                        capacity_mbps=run.net.capacity_mbps)
         self._edges: Optional[EdgeTopology] = None
         if run.fleet.edge_cells > 1:
-            self._edges = EdgeTopology.grouped(
-                fleet.n, run.fleet.edge_cells,
-                backhaul_mbps=run.fleet.backhaul_mbps,
-                cell_capacity_mbps=run.fleet.edge_capacity_mbps)
+            if run.fleet.cell_assignment == "kmeans":
+                if fleet.coords is None:
+                    raise ValueError(
+                        "cell_assignment='kmeans' clusters per-client "
+                        "coordinates; this fleet carries none — build it "
+                        "via FleetSpec.population() or set coords")
+                self._edges = EdgeTopology.kmeans(
+                    fleet.coords, run.fleet.edge_cells, seed=run.seed,
+                    backhaul_mbps=run.fleet.backhaul_mbps,
+                    cell_capacity_mbps=run.fleet.edge_capacity_mbps)
+            else:
+                self._edges = EdgeTopology.grouped(
+                    fleet.n, run.fleet.edge_cells,
+                    backhaul_mbps=run.fleet.backhaul_mbps,
+                    cell_capacity_mbps=run.fleet.edge_capacity_mbps)
         self._round_rng = np.random.default_rng(run.seed + 7777)
         self._straggler_rng = np.random.default_rng(run.seed + 4242)
 
@@ -622,7 +749,9 @@ class PopulationClock:
                          t_s=a["t_s"][sel], t_bc=a["t_bc"][sel], t_b=t_b,
                          arrival=np.zeros(sel.size),
                          fc_bytes=a["fc_bytes"][sel],
-                         bc_bytes=a["bc_bytes"][sel])
+                         bc_bytes=a["bc_bytes"][sel],
+                         priority=(self._pri[sel] if self._pri is not None
+                                   else np.zeros(sel.size)))
 
     def _resolve_order(self, cohort: Sequence[int]) -> List[int]:
         """Fixed serve order for the cohort under the run's scheduler,
@@ -698,9 +827,30 @@ class PopulationClock:
         return max(t, float(np.max(down0 + dur)))
 
     # ---------------------------------------------------------------- async
+    def _async_clock_config(self) -> ClockConfig:
+        """The one async clock configuration BOTH kernels run — parity by
+        construction."""
+        run = self.run_cfg
+        return ClockConfig(policy=self._policy, slots=run.engine.slots,
+                           cohort_chunk=run.engine.cohort_chunk,
+                           chunk_efficiency=run.engine.chunk_efficiency,
+                           deadline=None, agg_policy=run.agg.policy,
+                           agg_interval=1,
+                           buffer_k=run.agg.buffer_k or self.fleet.n,
+                           max_inflight_rounds=run.agg.max_inflight)
+
     def _run_async(self) -> PopulationResult:
-        """Buffered / staleness policies through the per-object
-        FederationClock (the documented small-fleet contract)."""
+        """Buffered / staleness policies: the struct-of-arrays event kernel
+        at/above ``population_threshold``, the per-object FederationClock
+        (the parity oracle) below it."""
+        run, fleet = self.run_cfg, self.fleet
+        use_vec = (fleet.n >= run.fleet.population_threshold
+                   if self._force is None else self._force == "vectorized")
+        if use_vec:
+            return self._run_async_vectorized()
+        return self._run_async_objects()
+
+    def _run_async_objects(self) -> PopulationResult:
         run, fleet = self.run_cfg, self.fleet
         a = self._arrays
         times = [StepTimes(t_f=float(a["t_f"][u]), t_fc=float(a["t_fc"][u]),
@@ -709,21 +859,13 @@ class PopulationClock:
                            fc_bytes=float(a["fc_bytes"][u]),
                            bc_bytes=float(a["bc_bytes"][u]))
                  for u in range(fleet.n)]
-        from repro.core.scheduling import alg2_priorities, resolve_online
-        policy, needs_pri = resolve_online(run.engine.scheduler)
         pri = alg2_priorities([int(c) for c in fleet.cuts],
                               [float(x) for x in fleet.tflops]) \
-            if needs_pri else None
-        cc = ClockConfig(policy=policy, slots=run.engine.slots,
-                         cohort_chunk=run.engine.cohort_chunk,
-                         chunk_efficiency=run.engine.chunk_efficiency,
-                         deadline=None, agg_policy=run.agg.policy,
-                         agg_interval=1,
-                         buffer_k=run.agg.buffer_k or fleet.n,
-                         max_inflight_rounds=run.agg.max_inflight)
+            if self._pri is not None else None
         plane = self._plane if self._plane is not None \
             else NetworkPlane(fleet.links())
-        clock = FederationClock(fleet.n, run.rounds, cc,
+        clock = FederationClock(fleet.n, run.rounds,
+                                self._async_clock_config(),
                                 times_fn=lambda u, r: times[u],
                                 priorities=pri, network=plane)
         res = clock.run()
@@ -732,4 +874,30 @@ class PopulationClock:
             commit_times=[c.time for c in res.commits],
             cohort_sizes=[fleet.n] * run.rounds,
             events_processed=len(res.events), modes=["objects"],
+            round_results=res.round_results)
+
+    def _run_async_vectorized(self) -> PopulationResult:
+        from repro.fed.population_async import run_async_vectorized
+        run, fleet = self.run_cfg, self.fleet
+        if self._plane is not None and not self._plane.constant_rate:
+            raise ValueError(
+                "the SoA async kernel models dedicated constant-rate "
+                "links; shared cells and time-varying links stay "
+                "per-object — force='objects' or raise "
+                "population_threshold")
+        if self._plane is not None:
+            up = np.array([l.rate_mbps for l in self._plane.uplinks])
+            down = np.array([l.rate_mbps for l in self._plane.downlinks])
+        else:
+            # same rates NetworkPlane(fleet.links()) would carry
+            up = down = fleet.rate_mbps
+        res, n_events = run_async_vectorized(
+            self._arrays, run.rounds, self._async_clock_config(),
+            up_rate_mbps=up, down_rate_mbps=down, priorities=self._pri,
+            collect_trace=self._collect_events)
+        return PopulationResult(
+            makespan=res.makespan, round_makespans=[],
+            commit_times=[c.time for c in res.commits],
+            cohort_sizes=[fleet.n] * run.rounds,
+            events_processed=n_events, modes=["vectorized"],
             round_results=res.round_results)

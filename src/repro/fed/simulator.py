@@ -113,10 +113,21 @@ class Simulator:
         # two-tier edge/cloud topology for hierarchical aggregation
         self._edges: Optional[EdgeTopology] = None
         if run.fleet.edge_cells > 1:
-            self._edges = EdgeTopology.grouped(
-                self.u, run.fleet.edge_cells,
-                backhaul_mbps=run.fleet.backhaul_mbps,
-                cell_capacity_mbps=run.fleet.edge_capacity_mbps)
+            if run.fleet.cell_assignment == "kmeans":
+                if fleet is None:
+                    raise ValueError(
+                        "cell_assignment='kmeans' clusters per-client "
+                        "coordinates, which only a FleetSpec carries — "
+                        "pass fleet=FleetSpec(...) (or keep 'blocks')")
+                self._edges = EdgeTopology.kmeans(
+                    fleet.coords(), run.fleet.edge_cells, seed=run.seed,
+                    backhaul_mbps=run.fleet.backhaul_mbps,
+                    cell_capacity_mbps=run.fleet.edge_capacity_mbps)
+            else:
+                self._edges = EdgeTopology.grouped(
+                    self.u, run.fleet.edge_cells,
+                    backhaul_mbps=run.fleet.backhaul_mbps,
+                    cell_capacity_mbps=run.fleet.edge_capacity_mbps)
         self._cap_ranks: Optional[np.ndarray] = None
         self.model = build_model(cfg)
         rng = jax.random.PRNGKey(run.seed)

@@ -25,6 +25,8 @@ from __future__ import annotations
 import math
 from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.net.links import ConstantLink, LinkModel
 
 __all__ = ["NetworkPlane", "SharedCell", "shared_finish_times"]
@@ -215,6 +217,8 @@ class NetworkPlane:
             raise ValueError("need one uplink and one downlink per client")
         self.shared = bool(shared)
         self.capacity_mbps = capacity_mbps
+        self._const_bps: Dict[str, Optional[list]] = {}
+        self._constant_rate: Optional[bool] = None
         if self.shared:
             if capacity_mbps is None or capacity_mbps <= 0:
                 raise ValueError("shared medium needs capacity_mbps > 0")
@@ -231,10 +235,16 @@ class NetworkPlane:
     def constant_rate(self) -> bool:
         """True when every link is constant and nothing contends — the
         engines may then use round-relative arithmetic (bit-exact PR-2
-        parity) instead of global-time conversions."""
-        return (not self.shared
+        parity) instead of global-time conversions.  Computed once per
+        plane (the link lists never change after construction): the
+        engines consult this per transfer, and an O(n) scan per query is
+        an O(n^2) tax on a 10^4-client fleet."""
+        if self._constant_rate is None:
+            self._constant_rate = (
+                not self.shared
                 and all(l.constant_rate for l in self.uplinks)
                 and all(l.constant_rate for l in self.downlinks))
+        return self._constant_rate
 
     def nominal_mbps(self, uid: int) -> float:
         """Scalar rate summary the analytic Eq. 10 model plans with."""
@@ -252,6 +262,30 @@ class NetworkPlane:
         if self.shared:
             raise RuntimeError("shared-medium downlinks go through a SharedCell")
         return self.downlinks[uid].finish_time(t_start, nbytes)
+
+    # ------------------------------------------------------- batch rate query
+    def rates_bps_at(self, t: float, uids=None, direction: str = "down"):
+        """Batch rate query for the vectorized population engines: the
+        listed clients' OWN-link rates (bps) at global instant ``t`` as one
+        float64 array (whole fleet when ``uids`` is None).  Values are
+        elementwise-identical to per-link ``rate_bps_at`` calls; constant
+        links resolve through a per-direction cache built once per plane.
+        The shared-medium capacity share is NOT folded in — it depends on
+        the concurrency the caller is pricing (``predict_downlink``'s
+        ``concurrent`` argument), so callers apply it themselves."""
+        links = {"up": self.uplinks, "down": self.downlinks}[direction]
+        if direction not in self._const_bps:
+            self._const_bps[direction] = (
+                np.array([l.rate_bps_at(0.0) for l in links])
+                if all(l.constant_rate for l in links) else None)
+        cached = self._const_bps[direction]
+        if cached is not None:
+            if uids is None:
+                return cached.copy()
+            return cached[np.asarray(uids, dtype=np.int64)]
+        if uids is None:
+            uids = range(len(links))
+        return np.array([links[int(u)].rate_bps_at(t) for u in uids])
 
     # ------------------------------------------------------------ shared cells
     def make_cell(self, direction: str) -> SharedCell:

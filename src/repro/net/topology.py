@@ -20,6 +20,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.net.plane import NetworkPlane, shared_finish_times
 
 __all__ = ["EdgeTopology", "edge_commit_legs"]
@@ -63,6 +65,53 @@ class EdgeTopology:
             raise ValueError("need 1 <= n_cells <= n_clients")
         bounds = [n_clients * c // n_cells for c in range(n_cells + 1)]
         cells = tuple(tuple(range(bounds[c], bounds[c + 1]))
+                      for c in range(n_cells))
+        return cls(cells=cells, backhaul_mbps=backhaul_mbps,
+                   cell_capacity_mbps=cell_capacity_mbps)
+
+    @classmethod
+    def kmeans(cls, coords, n_cells: int, *, seed: int = 0,
+               n_iter: int = 50, backhaul_mbps: float = 1000.0,
+               cell_capacity_mbps: Optional[float] = None) -> "EdgeTopology":
+        """Location-based cell assignment: seeded Lloyd k-means over
+        per-client planar coordinates (clients attach to the nearest edge
+        server), replacing the contiguous-block stand-in.
+
+        Fully deterministic for a given ``(coords, n_cells, seed)``:
+        centroids initialize from a seeded no-replacement draw, the
+        nearest-centroid assignment breaks distance ties toward the
+        lowest cell index, and a cell emptied by an update is re-seeded
+        with the point farthest from its assigned centroid (taken only
+        from cells that keep another member, so no cell ever empties).
+        Iteration stops when the assignment is stable or after
+        ``n_iter`` rounds.  Memory is O(n * n_cells) for the distance
+        matrix — fine for the 10^4-cell-count products this serves.
+        """
+        pts = np.asarray(coords, dtype=np.float64)
+        if pts.ndim != 2 or pts.shape[0] < 1:
+            raise ValueError("coords must be an (n, d) array")
+        n = pts.shape[0]
+        if not 1 <= n_cells <= n:
+            raise ValueError("need 1 <= n_cells <= n_clients")
+        rng = np.random.default_rng(seed)
+        cent = pts[np.sort(rng.choice(n, size=n_cells, replace=False))]
+        assign = np.full(n, -1)
+        for _ in range(n_iter):
+            d2 = ((pts[:, None, :] - cent[None, :, :]) ** 2).sum(axis=2)
+            new = d2.argmin(axis=1)         # ties -> lowest cell index
+            for c in range(n_cells):
+                if not (new == c).any():
+                    sizes = np.bincount(new, minlength=n_cells)
+                    movable = sizes[new] > 1
+                    far = int(np.where(movable, d2[np.arange(n), new],
+                                       -1.0).argmax())
+                    new[far] = c
+            if (new == assign).all():
+                break
+            assign = new
+            for c in range(n_cells):
+                cent[c] = pts[assign == c].mean(axis=0)
+        cells = tuple(tuple(int(u) for u in np.flatnonzero(assign == c))
                       for c in range(n_cells))
         return cls(cells=cells, backhaul_mbps=backhaul_mbps,
                    cell_capacity_mbps=cell_capacity_mbps)

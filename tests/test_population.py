@@ -33,6 +33,7 @@ def _jobs(seed):
                 t_bc=float(rng.uniform(0.1, 1.0)),
                 t_b=float(rng.uniform(0.2, 1.0)),
                 arrival=float(rng.uniform(0.0, 0.5)),
+                priority=float(rng.uniform(0.0, 3.0)),
                 fc_bytes=float(rng.uniform(1e5, 5e6)),
                 bc_bytes=float(rng.uniform(1e5, 5e6)))
             for u in range(N_JOBS)]
@@ -67,16 +68,20 @@ def _assert_same(a, b, ctx):
 def test_vectorized_round_bit_exact_grid(plane_name, plane):
     """The regression anchor: every (slots, chunk, deadline, discipline,
     t_origin) cell of the grid reproduces the per-object DES exactly —
-    same completions, waits, drops, event trace and service records."""
+    same completions, waits, drops, event trace and service records.
+    Covers every online discipline (static-key fifo/wf/priority, the
+    live-plane batched "bw" re-keying) plus a fixed order."""
     jobs = _jobs(7)
     arrays = JobArrays.from_jobs(jobs)
     fixed_order = sorted(range(N_JOBS), key=lambda u: -jobs[u].t_s)
+    cases = [("fifo", None), ("wf", None), ("priority", None),
+             ("bw", None), ("fifo", fixed_order)]
     for slots in (1, 3):
         for chunk in (1, 2):
             for deadline in (None, 6.0):
                 for t_origin in (0.0, 37.5):
-                    for order in (None, fixed_order):
-                        kw = dict(policy="fifo", order=order, slots=slots,
+                    for policy, order in cases:
+                        kw = dict(policy=policy, order=order, slots=slots,
                                   cohort_chunk=chunk, chunk_efficiency=0.8,
                                   deadline=deadline, network=plane,
                                   t_origin=t_origin)
@@ -85,13 +90,30 @@ def test_vectorized_round_bit_exact_grid(plane_name, plane):
                         vec = vectorized_round(arrays, **kw)
                         _assert_same(ref, vec,
                                      (plane_name, slots, chunk, deadline,
-                                      t_origin, order is not None))
+                                      t_origin, policy, order is not None))
 
 
-def test_vectorized_round_rejects_online_priority_policies():
+def test_vectorized_round_rejects_unknown_policy():
     arrays = JobArrays.from_jobs(_jobs(3))
-    with pytest.raises(ValueError):
-        vectorized_round(arrays, policy="priority")
+    with pytest.raises(KeyError):
+        vectorized_round(arrays, policy="bogus")
+
+
+def test_job_arrays_lazy_cohort_materialization():
+    """to_jobs(indices) / fleet.links(uids) / fleet.devices(uids) build
+    only the requested cohort slice, identical to slicing the full
+    materialization."""
+    jobs = _jobs(5)
+    arrays = JobArrays.from_jobs(jobs)
+    sel = [7, 2, 9]
+    assert arrays.to_jobs(sel) == [jobs[i] for i in sel]
+    sub = arrays.take(sel)
+    assert sub.to_jobs() == [jobs[i] for i in sel]
+    fleet = FleetSpec(n=10, seed=5, link_model="constant").population()
+    assert [l.rate_mbps for l in fleet.links(sel)] \
+        == [fleet.links()[i].rate_mbps for i in sel]
+    assert [d.name for d in fleet.devices(sel)] \
+        == [fleet.devices()[i].name for i in sel]
 
 
 # ---------------------------------------------------------------------------
@@ -308,16 +330,16 @@ def test_population_clock_hierarchical_commit_adds_backhaul(pop_cfg):
                                                  rel=0, abs=1e-12)
 
 
-def test_population_clock_async_contract(pop_cfg):
+def test_population_clock_async_modes(pop_cfg):
+    """Async policies now run at population scale: the SoA kernel at/above
+    the threshold, the per-object clock below, identical timelines."""
     fleet = FleetSpec(n=6, seed=0).population()
     run = FedRunConfig(rounds=2, batch_size=4, seq_len=16,
                        agg=AggConfig(policy="buffered", interval=1,
                                      buffer_k=3),
                        engine=EngineConfig(mode="event", scheduler="fifo"))
-    with pytest.raises(ValueError):
-        PopulationClock(pop_cfg, fleet, run, force="vectorized")
     res = PopulationClock(pop_cfg, fleet, run).run()
-    assert set(res.modes) == {"objects"}
+    assert set(res.modes) == {"objects"}     # 6 < default threshold
     assert res.commit_times
     big = FleetSpec(n=8, seed=0).population()
     tight = FedRunConfig(rounds=2, batch_size=4, seq_len=16,
@@ -325,5 +347,110 @@ def test_population_clock_async_contract(pop_cfg):
                                        buffer_k=3),
                          engine=EngineConfig(mode="event", scheduler="fifo"),
                          fleet=FleetConfig(population_threshold=4))
+    res2 = PopulationClock(pop_cfg, big, tight).run()
+    assert set(res2.modes) == {"vectorized"}   # 8 >= threshold 4
+    obj = PopulationClock(pop_cfg, big, tight, force="objects").run()
+    assert res2.makespan == obj.makespan
+    assert res2.commit_times == obj.commit_times
+
+
+def test_population_clock_async_vectorized_needs_constant_links(pop_cfg):
+    """Shared cells / time-varying links stay per-object: the SoA async
+    kernel refuses them with a pointer at force='objects'."""
+    spec = FleetSpec(n=6, seed=0, link_model="constant")
+    fleet = spec.population()
+    run = FedRunConfig(rounds=1, batch_size=4, seq_len=16,
+                       agg=AggConfig(policy="buffered", interval=1,
+                                     buffer_k=3),
+                       engine=EngineConfig(mode="event", scheduler="fifo"),
+                       net=NetConfig(shared=True, capacity_mbps=100.0))
+    with pytest.raises(ValueError, match="per-object"):
+        PopulationClock(pop_cfg, fleet, run, force="vectorized",
+                        links=spec.links()).run()
+
+
+# ---------------------------------------------------------------------------
+# location-based cell assignment (k-means) + batched rate queries
+# ---------------------------------------------------------------------------
+
+def test_fleet_spec_coords_deterministic_and_stream_independent():
+    spec = FleetSpec(n=20, seed=7)
+    c1, c2 = spec.coords(), spec.coords()
+    np.testing.assert_array_equal(c1, c2)
+    assert c1.shape == (20, 2)
+    assert (c1 >= 0.0).all() and (c1 < 1.0).all()
+    # coords draw from their own seed-derived stream; the pinned
+    # device/link streams must not move
+    np.testing.assert_array_equal(spec.population().tflops,
+                                  [d.tflops for d in spec.devices()])
+
+
+def test_edge_topology_kmeans_partitions_deterministically():
+    from repro.net.topology import EdgeTopology
+    coords = FleetSpec(n=40, seed=3).coords()
+    a = EdgeTopology.kmeans(coords, 5, seed=9)
+    assert a.cells == EdgeTopology.kmeans(coords, 5, seed=9).cells
+    assert a.n_cells == 5
+    assert sorted(u for cell in a.cells for u in cell) == list(range(40))
+    assert all(cell for cell in a.cells)
+    # Lloyd converged: most members sit nearest their own cell's centroid
+    # (re-seeded cells may hold a farthest-point exception)
+    cent = np.array([coords[list(cell)].mean(axis=0) for cell in a.cells])
+    own = np.empty(40, dtype=np.int64)
+    for ci, cell in enumerate(a.cells):
+        own[list(cell)] = ci
+    d2 = ((coords[:, None, :] - cent[None, :, :]) ** 2).sum(axis=2)
+    assert (d2.argmin(axis=1) == own).mean() > 0.8
     with pytest.raises(ValueError):
-        PopulationClock(pop_cfg, big, tight)
+        EdgeTopology.kmeans(coords, 0)
+    with pytest.raises(ValueError):
+        EdgeTopology.kmeans(coords, 41)
+    with pytest.raises(ValueError):
+        EdgeTopology.kmeans(np.zeros(5), 2)      # 1-D coords
+
+
+def test_fleet_config_cell_assignment_validation():
+    FleetConfig(edge_cells=3, cell_assignment="kmeans").validate()
+    with pytest.raises(KeyError):
+        FleetConfig(edge_cells=3, cell_assignment="voronoi").validate()
+    with pytest.raises(ValueError, match="edge_cells"):
+        FleetConfig(cell_assignment="kmeans").validate()
+
+
+def test_population_clock_kmeans_cells(pop_cfg):
+    import dataclasses
+    from repro.net.topology import EdgeTopology
+    fleet = FleetSpec(n=12, seed=8, link_model="constant").population()
+    run = FedRunConfig(rounds=2, batch_size=4, seq_len=16,
+                       agg=AggConfig(interval=2),
+                       engine=EngineConfig(mode="event"),
+                       fleet=FleetConfig(edge_cells=3,
+                                         cell_assignment="kmeans",
+                                         backhaul_mbps=500.0))
+    clock = PopulationClock(pop_cfg, fleet, run)
+    want = EdgeTopology.kmeans(fleet.coords, 3, seed=run.seed,
+                               backhaul_mbps=500.0)
+    assert clock._edges.cells == want.cells
+    obj = _clock_run(pop_cfg, fleet, run, "objects")
+    vec = _clock_run(pop_cfg, fleet, run, "vectorized")
+    _assert_runs_equal(obj, vec)
+    bare = dataclasses.replace(fleet, coords=None)
+    with pytest.raises(ValueError, match="coords"):
+        PopulationClock(pop_cfg, bare, run)
+
+
+def test_network_plane_batched_rate_query():
+    rng = np.random.default_rng(0)
+    rates = rng.uniform(10.0, 100.0, 8)
+    plane = NetworkPlane([ConstantLink(float(r)) for r in rates])
+    np.testing.assert_array_equal(plane.rates_bps_at(0.0), rates * 1e6)
+    np.testing.assert_array_equal(plane.rates_bps_at(123.0, [3, 1], "up"),
+                                  rates[[3, 1]] * 1e6)
+    tr = NetworkPlane([TraceLink([0.0, 3.0], [float(r), float(r) * 0.5])
+                       for r in rates])
+    np.testing.assert_array_equal(
+        tr.rates_bps_at(4.0),
+        [l.rate_bps_at(4.0) for l in tr.downlinks])
+    np.testing.assert_array_equal(
+        tr.rates_bps_at(1.0, [5, 0]),
+        [tr.downlinks[5].rate_bps_at(1.0), tr.downlinks[0].rate_bps_at(1.0)])

@@ -1,0 +1,155 @@
+"""SoA async event kernel vs the per-object FederationClock, bit for bit.
+
+``run_async_vectorized`` is the population-scale path for the
+buffered / k-of-U and staleness aggregation loops; the per-object
+``FederationClock`` is its parity oracle (the PR-6 discipline).  The grid
+here pins makespans, serve/commit streams and full event traces
+float-for-float across queue disciplines, aggregation policies, credit
+limits, slot counts, chunking and zero-byte payload rows.
+"""
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.core.cost_model import StepTimes
+from repro.fed.config import (AggConfig, EngineConfig, FedRunConfig,
+                              FleetConfig)
+from repro.fed.engine import ClockConfig, FederationClock
+from repro.fed.fleet import FleetSpec
+from repro.fed.population import PopulationClock
+from repro.fed.population_async import run_async_vectorized
+from repro.net import ConstantLink, NetworkPlane
+
+N = 10
+
+
+def _times(seed, zero_bytes=False):
+    rng = np.random.default_rng(seed)
+    cols = {
+        "t_f": rng.uniform(0.2, 2.0, N),
+        "t_fc": rng.uniform(0.1, 1.0, N),
+        "t_s": rng.uniform(0.3, 1.5, N),
+        "t_bc": rng.uniform(0.1, 1.0, N),
+        "t_b": rng.uniform(0.2, 1.0, N),
+        "fc_bytes": rng.uniform(1e5, 5e6, N),
+        "bc_bytes": rng.uniform(1e5, 5e6, N),
+    }
+    if zero_bytes:
+        # raw-job rows: no payload size, the engines bill nominal seconds
+        cols["fc_bytes"][::3] = 0.0
+        cols["bc_bytes"][1::3] = 0.0
+    return cols
+
+
+def _oracle(times, rounds, cfg, rates, priorities=None):
+    st = [StepTimes(t_f=float(times["t_f"][u]), t_fc=float(times["t_fc"][u]),
+                    t_s=float(times["t_s"][u]), t_bc=float(times["t_bc"][u]),
+                    t_b=float(times["t_b"][u]),
+                    fc_bytes=float(times["fc_bytes"][u]),
+                    bc_bytes=float(times["bc_bytes"][u]))
+          for u in range(N)]
+    plane = NetworkPlane([ConstantLink(float(r)) for r in rates])
+    clock = FederationClock(N, rounds, cfg, times_fn=lambda u, r: st[u],
+                            priorities=priorities, network=plane)
+    return clock.run()
+
+
+GRID = [
+    # policy, agg, buffer_k, inflight, slots, chunk, rounds
+    ("fifo", "buffered", 3, 1, 1, 1, 2),
+    ("fifo", "staleness", 10, 3, 2, 3, 2),
+    ("wf", "buffered", 4, 2, 2, 2, 3),
+    ("priority", "staleness", 2, 2, 1, 2, 2),
+    ("bw", "buffered", 5, 1, 2, 1, 2),
+    ("bw", "staleness", 3, 2, 3, 2, 3),
+]
+
+
+@pytest.mark.parametrize("zero_bytes", [False, True],
+                         ids=["payloads", "zero-byte-rows"])
+@pytest.mark.parametrize("policy,agg,k,inflight,slots,chunk,rounds", GRID)
+def test_async_kernel_bit_exact_grid(policy, agg, k, inflight, slots,
+                                     chunk, rounds, zero_bytes):
+    for seed in (0, 1):
+        rng = np.random.default_rng(100 + seed)
+        times = _times(seed, zero_bytes)
+        rates = rng.uniform(20.0, 120.0, N)
+        pri = rng.uniform(0.0, 3.0, N) if policy == "priority" else None
+        cfg = ClockConfig(policy=policy, slots=slots, cohort_chunk=chunk,
+                          chunk_efficiency=0.9 if chunk > 1 else 1.0,
+                          agg_policy=agg, agg_interval=1, buffer_k=k,
+                          max_inflight_rounds=inflight)
+        obj = _oracle(times, rounds, cfg, rates,
+                      priorities=pri.tolist() if pri is not None else None)
+        vec, n_events = run_async_vectorized(
+            times, rounds, cfg, up_rate_mbps=rates, down_rate_mbps=rates,
+            priorities=pri)
+        assert vec.makespan == obj.makespan
+        assert vec.serves == obj.serves
+        assert vec.commits == obj.commits
+        assert vec.events == obj.events
+        assert vec.rounds_completed == obj.rounds_completed
+        assert n_events == len(obj.events)
+
+
+def test_async_kernel_trace_optional():
+    times = _times(4)
+    rates = np.full(N, 80.0)
+    cfg = ClockConfig(policy="fifo", agg_policy="buffered", buffer_k=4,
+                      max_inflight_rounds=2)
+    full, n_full = run_async_vectorized(times, 2, cfg, up_rate_mbps=rates,
+                                        down_rate_mbps=rates)
+    lean, n_lean = run_async_vectorized(times, 2, cfg, up_rate_mbps=rates,
+                                        down_rate_mbps=rates,
+                                        collect_trace=False)
+    assert lean.events == [] and full.events
+    assert n_lean == n_full == len(full.events)
+    assert lean.makespan == full.makespan
+    assert lean.commits == full.commits
+
+
+def test_async_kernel_rejects_bad_inputs():
+    times = _times(5)
+    rates = np.full(N, 80.0)
+    with pytest.raises(ValueError, match="sync"):
+        run_async_vectorized(times, 1, ClockConfig(policy="fifo"),
+                             up_rate_mbps=rates, down_rate_mbps=rates)
+    with pytest.raises(ValueError, match="buffer_k"):
+        run_async_vectorized(
+            times, 1, ClockConfig(policy="fifo", agg_policy="buffered",
+                                  buffer_k=N + 1),
+            up_rate_mbps=rates, down_rate_mbps=rates)
+    with pytest.raises(ValueError, match="priorit"):
+        run_async_vectorized(
+            times, 1, ClockConfig(policy="priority", agg_policy="buffered",
+                                  buffer_k=2),
+            up_rate_mbps=rates, down_rate_mbps=rates)
+    with pytest.raises(ValueError, match="one value per client"):
+        run_async_vectorized(
+            times, 1, ClockConfig(policy="fifo", agg_policy="buffered",
+                                  buffer_k=2),
+            up_rate_mbps=rates[:-1], down_rate_mbps=rates)
+
+
+@pytest.mark.parametrize("scheduler", ["ours", "bw", "wf"])
+@pytest.mark.parametrize("policy", ["buffered", "staleness"])
+def test_population_clock_async_parity(scheduler, policy):
+    """End-to-end: PopulationClock's two async modes agree on the timeline
+    AND on the event count for real cohort arrays."""
+    cfg = tiny("bert-base", n_layers=4, d_model=64)
+    fleet = FleetSpec(n=12, seed=2, link_model="constant").population()
+    run = FedRunConfig(
+        rounds=2, batch_size=4, seq_len=16,
+        agg=AggConfig(policy=policy, interval=1, buffer_k=4, max_inflight=2,
+                      staleness_alpha=0.5 if policy == "staleness" else None),
+        engine=EngineConfig(mode="event", scheduler=scheduler, slots=2,
+                            cohort_chunk=2, chunk_efficiency=0.9),
+        fleet=FleetConfig(population_threshold=4))
+    obj = PopulationClock(cfg, fleet, run, force="objects").run()
+    vec = PopulationClock(cfg, fleet, run, force="vectorized").run()
+    assert set(obj.modes) == {"objects"}
+    assert set(vec.modes) == {"vectorized"}
+    assert vec.makespan == obj.makespan
+    assert vec.commit_times == obj.commit_times
+    assert vec.events_processed == obj.events_processed
+    assert vec.cohort_sizes == obj.cohort_sizes
