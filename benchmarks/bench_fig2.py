@@ -68,9 +68,9 @@ def run(csv=False, rounds=ROUNDS, seed=0):
         hit = M.time_to_target(t, a, target, mode="ge")
         if not csv:
             print(f"  {k:12s} t_to_acc>={target:.3f}: "
-                  f"{'n/a' if hit is None else f'{hit:8.1f}s'}")
+                  f"{'n/a' if not np.isfinite(hit) else f'{hit:8.1f}s'}")
         out.append((f"fig2_tta_{k.replace('/', '_')}",
-                    0.0 if hit is None else hit * 1e6,
+                    0.0 if not np.isfinite(hit) else hit * 1e6,
                     f"target={target:.4f};final={finals[k]:.4f}"))
     return out
 

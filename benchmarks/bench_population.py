@@ -32,6 +32,9 @@ Rows (``us_per_call`` is wall-clock per round kernel invocation):
   population_async_<p>_speedup  derived ratio (acceptance: >= 20x)
   population_clock_flat         4-round PopulationClock, cloud-only commits
   population_clock_hierarchical same, 100 edge cells + backhaul summaries
+  population_obs_metrics        SoA kernel with the metrics registry on
+  population_obs_overhead       derived ratio vs obs-off (target <= 1.5x,
+                                makespans bit-identical)
 """
 from __future__ import annotations
 
@@ -164,6 +167,33 @@ def run(csv: bool = False):
              f"{t_obj / t_vec:.1f}x vectorized vs per-object "
              f"(target >= 20x, timelines bit-identical)"),
         ])
+
+    # observability overhead: the same fifo round with the metrics
+    # registry attached (bulk histogram folds only) vs obs-off — the
+    # ISSUE's population-scale criterion is the metrics-only plane
+    from repro.obs import MetricsRegistry, Observability
+    t0 = time.perf_counter()
+    ovec = vectorized_round(arrays, policy="fifo", collect_events=False, **kw)
+    t_off = time.perf_counter() - t0
+    obs = Observability(metrics=MetricsRegistry())
+    t0 = time.perf_counter()
+    mvec = vectorized_round(arrays, policy="fifo", collect_events=False,
+                            obs=obs, **kw)
+    t_on = time.perf_counter() - t0
+    if mvec.round_time != ovec.round_time:
+        raise AssertionError(
+            f"obs perturbed the kernel: {mvec.round_time!r} "
+            f"!= {ovec.round_time!r}")
+    qw = obs.metrics.hist_stats("queue_wait")
+    rows.extend([
+        ("population_obs_metrics", t_on * 1e6,
+         f"n={N_CLIENTS} makespan={mvec.round_time:.3f}s "
+         f"queue_wait_mean={qw['mean']:.4f}s "
+         f"served={qw['count']}"),
+        ("population_obs_overhead", 0.0,
+         f"{t_on / t_off:.2f}x metrics-on vs obs-off "
+         f"(target <= 1.5x, makespans bit-identical)"),
+    ])
 
     # full driver: sampling + rounds + commits, flat vs two-tier
     base = dict(rounds=4, batch_size=16, seq_len=128,

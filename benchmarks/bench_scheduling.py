@@ -166,7 +166,7 @@ def async_vs_sync(n_clients=16, rounds=3, csv=False):
     to finish every client's local rounds, and time until the smoothed
     per-serve loss first reaches a shared target."""
     from repro.data import make_emotion_dataset
-    from repro.fed import FedRunConfig, Simulator, make_fleet
+    from repro.fed import FedRunConfig, ObsConfig, Simulator, make_fleet
     from repro.fed import metrics as M
 
     cfg = reduced(REGISTRY["bert-base"], n_layers=3, d_model=128)
@@ -186,9 +186,13 @@ def async_vs_sync(n_clients=16, rounds=3, csv=False):
     }
     sims = {}
     for name, extra in configs.items():
+        # metrics plane on: pure reads, so the timelines this bench
+        # compares are the same floats as an obs-off run (pinned in
+        # tests/test_obs_parity.py); summary() rides the derived column
         rc = FedRunConfig(scheme="ours", scheduler="ours", rounds=rounds,
                           agg_interval=1, batch_size=4, seq_len=16, lr=3e-3,
-                          eval_every=10 ** 6, engine="event", **extra)
+                          eval_every=10 ** 6, engine="event",
+                          obs=ObsConfig(metrics=True), **extra)
         sims[name] = Simulator(cfg, devices, cuts, train, test, rc)
         sims[name].run_training()
 
@@ -208,11 +212,16 @@ def async_vs_sync(n_clients=16, rounds=3, csv=False):
                   f"commits {len(sim._clock.commits):3d}  "
                   f"final_loss {finals[name]:.4f}  "
                   f"t_to_loss<={target:.3f}: "
-                  f"{'n/a' if hit is None else f'{hit:8.3f}s'}")
+                  f"{'n/a' if not np.isfinite(hit) else f'{hit:8.3f}s'}")
+        qw = sim.obs.metrics.hist_stats("queue_wait")
+        st = sim.obs.metrics.hist_stats("staleness")
         out.append((f"async_{name}", sim.sim_clock * 1e6,
                     f"commits={len(sim._clock.commits)};"
                     f"final_loss={finals[name]:.4f};"
-                    f"t_to_target={'nan' if hit is None else f'{hit:.4f}'}"))
+                    f"t_to_target="
+                    f"{'nan' if not np.isfinite(hit) else f'{hit:.4f}'};"
+                    f"queue_wait_mean={qw.get('mean', 0.0):.4f};"
+                    f"staleness_mean={st.get('mean', 0.0):.4f}"))
     return out
 
 

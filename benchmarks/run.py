@@ -78,8 +78,18 @@ def _environment_info() -> dict:
     return info
 
 
+def _peak_rss_bytes() -> int:
+    """Lifetime peak RSS of this process (``ru_maxrss`` is KiB on Linux,
+    bytes on macOS).  Monotone across sections — per-bench deltas of 0
+    mean the section stayed under an earlier section's high-water mark."""
+    import resource
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return peak if sys.platform == "darwin" else peak * 1024
+
+
 def _write_artifact(dirpath: str, name: str, rows, elapsed: float,
-                    env: dict, error: str | None) -> None:
+                    env: dict, error: str | None,
+                    peak_rss: int | None = None) -> None:
     os.makedirs(dirpath, exist_ok=True)
     doc = {
         "bench": name,
@@ -89,6 +99,8 @@ def _write_artifact(dirpath: str, name: str, rows, elapsed: float,
         "rows": [{"name": n, "us_per_call": us, "derived": derived}
                  for n, us, derived in rows],
     }
+    if peak_rss is not None:
+        doc["peak_rss_bytes"] = peak_rss
     if error:
         doc["error"] = error
     path = os.path.join(dirpath, f"BENCH_{name}.json")
@@ -139,11 +151,13 @@ def main() -> None:
             import traceback
             traceback.print_exc()
         elapsed = time.time() - t0
+        peak_rss = _peak_rss_bytes()
         rows.extend(bench_rows)
         if args.artifacts_dir:
             _write_artifact(args.artifacts_dir, name, bench_rows, elapsed,
-                            env, error)
-        print(f"== {name} done in {elapsed:.1f}s ==", file=sys.stderr)
+                            env, error, peak_rss=peak_rss)
+        print(f"== {name} done in {elapsed:.1f}s "
+              f"(peak RSS {peak_rss / 2**20:.0f} MiB) ==", file=sys.stderr)
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -24,8 +24,8 @@ from repro.configs import REGISTRY, reduced
 from repro.core.partition import assign_cuts
 from repro.data import make_emotion_dataset
 from repro.fed import (AGG_POLICIES, AggConfig, ControlConfig, EngineConfig,
-                       FedRunConfig, NetConfig, PAPER_CLIENTS, PAPER_CUTS,
-                       Simulator, validate_run_config)
+                       FedRunConfig, NetConfig, ObsConfig, PAPER_CLIENTS,
+                       PAPER_CUTS, Simulator, validate_run_config)
 
 
 def main():
@@ -102,6 +102,11 @@ def main():
     ap.add_argument("--kill-at", type=float, default=None,
                     help="fault injection: preempt the server at this "
                     "simulated instant (resume later with --resume-from)")
+    # -- observability --------------------------------------------------------
+    ap.add_argument("--trace-out", default=None, metavar="DIR",
+                    help="record spans + metrics + memory ledger and write "
+                    "a Perfetto-loadable trace.json under DIR (one subdir "
+                    "per --schemes entry; needs --engine event)")
     args = ap.parse_args()
     if args.agg_interval is None:
         args.agg_interval = 5 if args.agg_policy == "sync" else 1
@@ -187,7 +192,11 @@ def main():
                            control=ControlConfig(
                                policy=args.controller,
                                resolve_every=args.resolve_every,
-                               hysteresis=args.hysteresis))
+                               hysteresis=args.hysteresis),
+                           obs=(ObsConfig(trace=True, metrics=True,
+                                          memory_ledger=True,
+                                          trace_dir=f"{args.trace_out}/{entry}")
+                                if args.trace_out else ObsConfig()))
         try:   # surface the FedRunConfig validation matrix as argparse errors
             validate_run_config(run, len(PAPER_CLIENTS))
         except (KeyError, ValueError) as e:
@@ -207,7 +216,16 @@ def main():
         mem = sim.server_memory_report()
         print(f"== {entry} [{args.engine}/{args.agg_policy}]: "
               f"acc={acc:.4f} f1={f1:.4f} "
-              f"sim_time={sim.sim_clock:.1f}s server_mem={mem.total_mb:.1f}MB\n")
+              f"sim_time={sim.sim_clock:.1f}s server_mem={mem.total_mb:.1f}MB")
+        if args.trace_out:
+            report = sim.obs.ledger.report()
+            print(f"   trace: {run.obs.trace_dir}/trace.json "
+                  f"(inspect with tools/trace_summary.py)  "
+                  f"worst client peak "
+                  f"{report['worst_client_peak_bytes'] / 2**20:.1f} MiB, "
+                  f"{report.get('client_reduction_vs_local', 0.0):.0%} below "
+                  f"local fine-tuning")
+        print()
 
 
 if __name__ == "__main__":

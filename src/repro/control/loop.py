@@ -121,6 +121,9 @@ class ControlLoop:
         self.pri: List[float] = alg2_priorities(self.cuts, self._tfl)
         self.decisions: List[ReassignEvent] = []
         self._times_cache: Dict[Tuple[int, int, int, int], StepTimes] = {}
+        # optional Observability bundle (repro.obs) attached by the driver;
+        # decide() emits a reassign span / accept-reject counters through it
+        self.obs = None
 
     # --------------------------------------------------------- clock-side API
     def times_fn(self, u: int, rnd: int = 0) -> StepTimes:
@@ -297,6 +300,16 @@ class ControlLoop:
             cut_changes=cut_ch,
             rank_changes=rank_ch, batch_changes=batch_ch,
             predicted_gain_s=gain, migration_s=dict(mig), applied=applied))
+        if self.obs is not None:
+            if self.obs.tracer is not None:
+                self.obs.tracer.span(
+                    "reassign", "control", t, t + bill if applied else t,
+                    "control", 0,
+                    attrs={"trigger": trigger.reason, "applied": applied,
+                           "gain_s": gain, "n_cut_changes": len(cut_ch)})
+            if self.obs.metrics is not None:
+                self.obs.metrics.inc("migration_accepted" if applied
+                                     else "migration_rejected")
         if not applied:
             return {}, {}
         for u, (_, new) in cut_ch.items():

@@ -1,5 +1,6 @@
 from repro.fed.config import (AggConfig, ControlConfig, EngineConfig,
-                              FleetConfig, NetConfig, SAMPLING_POLICIES)
+                              FleetConfig, NetConfig, ObsConfig,
+                              SAMPLING_POLICIES)
 from repro.fed.devices import (LINK, PAPER_CLIENTS, PAPER_CUTS, SERVER,
                                TPU_V5E, make_fleet, make_link_fleet)
 from repro.fed.engine import (AGG_POLICIES, ClockConfig, ClockResult,
@@ -16,7 +17,8 @@ from repro.fed.simulator import (LINK_MODELS, FedRunConfig, RoundRecord,
 __all__ = ["AGG_POLICIES", "AggConfig", "ClockConfig", "ClockResult",
            "CommitEvent", "ControlConfig", "EngineConfig", "EngineResult",
            "FedRunConfig", "FederationClock", "FleetConfig", "FleetSpec",
-           "Job", "LINK", "LINK_MODELS", "NetConfig", "PAPER_CLIENTS",
+           "Job", "LINK", "LINK_MODELS", "NetConfig", "ObsConfig",
+           "PAPER_CLIENTS",
            "PAPER_CUTS", "PopulationClock", "PopulationFleet",
            "PopulationResult", "RoundPlan", "RoundRecord",
            "SAMPLING_POLICIES", "SERVER", "ServeEvent", "ServiceRecord",

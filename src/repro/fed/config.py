@@ -10,6 +10,7 @@ module regroups the knobs by OWNING SUBSYSTEM:
     ControlConfig   adaptive control plane            (repro/control)
     FleetConfig     fleet size, cohort sampling,      (fed/population.py,
                     edge topology, stragglers          fed/fleet.py)
+    ObsConfig       tracing + metrics + memory ledger (repro/obs)
 
 Each group owns its intra-group knob rules in ``validate()``;
 :func:`validate_run_config` keeps only the genuinely CROSS-group matrix
@@ -34,8 +35,8 @@ from typing import Optional, Sequence, Tuple
 from repro.core.scheduling import ONLINE_DISCIPLINES, SCHEDULERS
 
 __all__ = ["AggConfig", "ControlConfig", "EngineConfig", "FedRunConfig",
-           "FleetConfig", "LINK_MODELS", "NetConfig", "SAMPLING_POLICIES",
-           "validate_run_config"]
+           "FleetConfig", "LINK_MODELS", "NetConfig", "ObsConfig",
+           "SAMPLING_POLICIES", "validate_run_config"]
 
 # mirrored from fed.engine.AGG_POLICIES / control.CONTROLLERS to keep this
 # module import-light (no engine/control import at config time)
@@ -260,6 +261,34 @@ class FleetConfig:
             raise ValueError("straggler_slowdown must be >= 1")
 
 
+@dataclasses.dataclass(frozen=True, eq=True)
+class ObsConfig:
+    """Observability-plane knobs (repro/obs): span tracing, metrics,
+    and the time-resolved memory ledger.  All sinks default OFF — a run
+    with the default ``ObsConfig`` carries no observability state and
+    pays zero overhead on the hot paths."""
+    trace: bool = False                 # record spans (Perfetto export)
+    metrics: bool = False               # counters/gauges/histograms
+    memory_ledger: bool = False         # time-resolved byte accounting
+    trace_dir: Optional[str] = None     # write trace JSON here at run end
+    max_events: Optional[int] = None    # span ring-buffer bound
+
+    @property
+    def enabled(self) -> bool:
+        return self.trace or self.metrics or self.memory_ledger
+
+    def validate(self) -> None:
+        if self.trace_dir is not None and not self.trace:
+            raise ValueError("trace_dir is where the span tracer writes "
+                             "its export; set obs trace=True to record one")
+        if self.max_events is not None:
+            if not self.trace:
+                raise ValueError("max_events bounds the span ring buffer; "
+                                 "set obs trace=True to record spans")
+            if self.max_events < 1:
+                raise ValueError("max_events must be >= 1 when set")
+
+
 # ===========================================================================
 # FedRunConfig: the composed run config + flat-kwarg compatibility shims
 # ===========================================================================
@@ -316,6 +345,7 @@ class FedRunConfig:
     net: NetConfig = dataclasses.field(default_factory=NetConfig)
     control: ControlConfig = dataclasses.field(default_factory=ControlConfig)
     fleet: FleetConfig = dataclasses.field(default_factory=FleetConfig)
+    obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
 
     def __init__(self, **kwargs):
         cls = type(self)
@@ -416,6 +446,7 @@ def validate_run_config(run: FedRunConfig,
     run.net.validate()
     run.control.validate()
     run.fleet.validate()
+    run.obs.validate()
     # ---- mid-flight checkpoint / resume knob ownership ----
     if run.snapshot_every is not None and run.snapshot_every <= 0:
         raise ValueError("snapshot_every must be > 0 when set")
@@ -446,6 +477,11 @@ def validate_run_config(run: FedRunConfig,
             raise ValueError("mid-flight snapshots, resume and preemption "
                              "are event-clock notions (the closed form has "
                              "no in-flight state); set engine mode='event'")
+        if run.obs.enabled:
+            raise ValueError("observability (obs trace/metrics/"
+                             "memory_ledger) instruments the event clock's "
+                             "spans; the closed form has no events — set "
+                             "engine mode='event'")
     else:   # event
         if run.scheme != "ours":
             # the DES models the paper's single shared-server queue; sfl

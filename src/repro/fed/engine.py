@@ -42,6 +42,7 @@ from repro.core.cost_model import StepTimes, chunked_service_time
 from repro.net import NetworkPlane, shared_finish_times
 from repro.net.plane import decode_tuples, encode_tuples
 from repro.net.topology import EdgeTopology, edge_commit_legs
+from repro.obs import Observability, record_commit, record_sync_wave
 
 __all__ = ["AGG_POLICIES", "ClockConfig", "ClockResult", "CommitEvent",
            "EngineResult", "FederationClock", "Job", "RoundPlan",
@@ -534,7 +535,8 @@ class FederationClock:
                  network: Optional[NetworkPlane] = None,
                  agg_bytes_fn: Optional[Callable[[int], float]] = None,
                  edges: Optional[EdgeTopology] = None,
-                 summary_bytes: float = 0.0):
+                 summary_bytes: float = 0.0,
+                 obs: Optional[Observability] = None):
         if n_clients < 1 or rounds < 1:
             raise ValueError("need at least one client and one round")
         if cfg.agg_policy != "sync" and times_fn is None:
@@ -562,6 +564,9 @@ class FederationClock:
         self.agg_bytes_fn = agg_bytes_fn
         self.edges = edges
         self.summary_bytes = float(summary_bytes)
+        # observability bundle; None when no sink is enabled so every hot-path
+        # hook is one attribute-is-None check (the zero-overhead contract)
+        self.obs = obs if obs is not None and obs.enabled else None
         self.now = 0.0
         self.version = 0              # global model version (commit count)
         self.serves: List[ServeEvent] = []
@@ -648,6 +653,8 @@ class FederationClock:
             self.dropped.extend((u, rnd) for u in res.dropped)
             self.trace.extend((base + t, kind, uid)
                               for t, kind, uid in res.events)
+            if self.obs is not None:
+                record_sync_wave(self.obs, res, plan.jobs, base, rnd)
             self.now = base + res.round_time
             self.round_results.append(res)
             if (rnd + 1) % cfg.agg_interval == 0:
@@ -757,6 +764,9 @@ class FederationClock:
         S.agg_extra = {}                # shared-cell tid -> extra secs
         S.up_cell = self.network.make_cell("up") if self._shared else None
         S.down_cell = self.network.make_cell("down") if self._shared else None
+        if self._shared and self.obs is not None:
+            S.up_cell.obs = (self.obs, 0)
+            S.down_cell.obs = (self.obs, 1)
         return S
 
     def _push(self, t, kind, payload):
@@ -780,6 +790,8 @@ class FederationClock:
             return      # adapter sync in flight; resumes when it lands
         if S.started[u] - S.acked[u] >= cfg.max_inflight_rounds:
             S.blocked.add(u)
+            if self.obs is not None and self.obs.metrics is not None:
+                self.obs.metrics.inc("credit_gate_stalls")
             return
         rnd = S.started[u]
         S.started[u] += 1
@@ -793,13 +805,25 @@ class FederationClock:
         if self._on_round_start is not None:
             self._on_round_start(u, rnd, t0)
         self.trace.append((t0 + job.t_f, "fwd_done", u))
+        o = self.obs
+        if o is not None and o.tracer is not None:
+            o.tracer.span("fwd", "compute", t0, t0 + job.t_f, "client", u)
         if self._shared and net is not None and job.fc_bytes > 0:
             # the uplink contends in the cell from fwd_done on;
             # its completion is a cell event, not a fixed offset
+            if o is not None:
+                o.mark(f"ul:{u}:{rnd}", t0 + job.t_f)
             self._push(t0 + job.t_f, "up_start", (u, rnd))
             return
         ready = async_uplink_instant(net, job)
         self.trace.append((ready, "uplink_done", u))
+        if o is not None:
+            if o.tracer is not None:
+                o.tracer.span("uplink", "net", t0 + job.t_f, ready,
+                              "client", u)
+            if o.metrics is not None:
+                o.metrics.observe("uplink_s", ready - (t0 + job.t_f))
+            o.mark(f"qw:{u}:{rnd}", ready)
         self._push(ready, "uplink", (u, rnd))
 
     def _sort_queue_async(self, t):
@@ -826,6 +850,10 @@ class FederationClock:
                                         cfg.chunk_efficiency)
             S.slot_free[s] = t + span
             self.trace.append((t, "server_start", take[0][0]))
+            if self.obs is not None:
+                for uu, rr in take:
+                    self.obs.close("queue_wait", "queue", "queue_wait",
+                                   f"qw:{uu}:{rr}", t, "client", uu)
             self._push(t + span, "served", (tuple(take), s, t))
 
     def _commit_buffer(self, t, forced):
@@ -863,19 +891,28 @@ class FederationClock:
         S.buffer.clear()
         S.pending_aggs[aid] = {"contribs": contribs,
                                "left": set(contribs), "forced": forced}
+        o = self.obs
         for u in contribs:
             S.awaiting[u] = S.awaiting.get(u, 0) + 1
             b = float(self.agg_bytes_fn(u))
             if self._shared:
+                if o is not None:
+                    o.mark(f"au:{aid}:{u}", t)
                 S.up_cell.add(t, ("aggup", aid, u), u, b)
             else:
-                self._push(net.uplink_finish(u, t, b), "aggup_done", (aid, u))
+                fin = net.uplink_finish(u, t, b)
+                if o is not None and o.tracer is not None:
+                    o.tracer.span("agg_uplink", "agg", t, fin, "client", u)
+                self._push(fin, "aggup_done", (aid, u))
         if self._shared:
             self._sched_cell(S.up_cell, "up_net")
 
     def _agg_upload_landed(self, aid, u, t):
         S = self._astate
         self.trace.append((t, "agg_uplink_done", u))
+        if self.obs is not None:
+            self.obs.close("agg_uplink", "agg", None, f"au:{aid}:{u}", t,
+                           "client", u)
         info = S.pending_aggs[aid]
         info["left"].discard(u)
         if not info["left"]:
@@ -891,17 +928,22 @@ class FederationClock:
         stal = tuple(self.version - S.model_version[u] for u in contribs)
         overhead, per = self._commit(contribs, stal, self._on_commit, time=t,
                                      forced=info["forced"])
+        o = self.obs
         for u in contribs:
             S.model_version[u] = self.version
             S.acked[u] = S.finished[u]
             extra = per.get(u, 0.0) if per is not None else overhead
             b = float(self.agg_bytes_fn(u))
             if self._shared:
+                if o is not None:
+                    o.mark(f"ad:{aid}:{u}", t)
                 S.agg_extra[("aggdown", aid, u)] = extra
                 S.down_cell.add(t, ("aggdown", aid, u), u, b)
             else:
-                self._push(net.downlink_finish(u, t, b) + extra,
-                           "aggdown_done", u)
+                fin = net.downlink_finish(u, t, b)
+                if o is not None and o.tracer is not None:
+                    o.tracer.span("agg_downlink", "agg", t, fin, "client", u)
+                self._push(fin + extra, "aggdown_done", u)
         if self._shared:
             self._sched_cell(S.down_cell, "down_net")
         # the merge refreshed acked credit; un-gate blocked clients
@@ -960,6 +1002,11 @@ class FederationClock:
                     self._agg_upload_landed(tid[1], uid, tc)
                 else:
                     self.trace.append((tc, "uplink_done", uid))
+                    if self.obs is not None:
+                        self.obs.close("uplink", "net", "uplink_s",
+                                       f"ul:{uid}:{tid[1]}", tc,
+                                       "client", uid)
+                        self.obs.mark(f"qw:{uid}:{tid[1]}", tc)
                     S.queue.append(tid)
                     arrived = True
             if arrived:
@@ -974,14 +1021,32 @@ class FederationClock:
             self.trace.append((t, "server_done", take[0][0]))
             if self._on_serve is not None:
                 self._on_serve(ev)
+            o = self.obs
+            if o is not None:
+                if o.tracer is not None:
+                    o.tracer.span("serve", "server", t_start, t, "slot", s,
+                                  attrs={"n": len(take)})
+                if o.metrics is not None:
+                    o.metrics.observe("serve_s", t - t_start)
+                if o.ledger is not None:
+                    o.ledger.server_span(ev.uids, t_start, t)
             for u, rnd in take:
                 j = S.jobs[(u, rnd)]
                 if self._shared and net is not None and j.bc_bytes > 0:
+                    if o is not None:
+                        o.mark(f"dl:{u}:{rnd}", t)
                     S.down_cell.add(t, (u, rnd), u, j.bc_bytes)
                     continue
                 dl = async_downlink_instant(net, j, t)
                 self.trace.append((dl, "downlink_done", u))
                 self.trace.append((dl + j.t_b, "client_done", u))
+                if o is not None:
+                    if o.tracer is not None:
+                        o.tracer.span("downlink", "net", t, dl, "client", u)
+                        o.tracer.span("bwd", "compute", dl, dl + j.t_b,
+                                      "client", u)
+                    if o.metrics is not None:
+                        o.metrics.observe("downlink_s", dl - t)
                 self._push(dl + j.t_b, "client_done", (u, rnd))
             if self._shared and S.down_cell.active:
                 self._sched_cell(S.down_cell, "down_net")
@@ -991,12 +1056,22 @@ class FederationClock:
                 return True     # contention re-timed this prediction
             for tc, tid, uid in S.down_cell.advance(t):
                 if tid[0] == "aggdown":   # adapter sync, not a job
+                    if self.obs is not None:
+                        self.obs.close("agg_downlink", "agg", None,
+                                       f"ad:{tid[1]}:{uid}", tc,
+                                       "client", uid)
                     extra = S.agg_extra.pop(tid, 0.0)
                     self._push(tc + extra, "aggdown_done", uid)
                     continue
                 j = S.jobs[tid]
                 self.trace.append((tc, "downlink_done", uid))
                 self.trace.append((tc + j.t_b, "client_done", uid))
+                if self.obs is not None:
+                    self.obs.close("downlink", "net", "downlink_s",
+                                   f"dl:{uid}:{tid[1]}", tc, "client", uid)
+                    if self.obs.tracer is not None:
+                        self.obs.tracer.span("bwd", "compute", tc,
+                                             tc + j.t_b, "client", uid)
                 self._push(tc + j.t_b, "client_done", tid)
             self._sched_cell(S.down_cell, "down_net")
         elif kind == "aggup_done":
@@ -1009,6 +1084,8 @@ class FederationClock:
             S.finished[u] += 1
             S.free_at[u] = t
             S.buffer[u] = rnd
+            if self.obs is not None and self.obs.ledger is not None:
+                self.obs.ledger.client_span(u, S.jobs[payload].arrival, t)
             if len(S.buffer) >= cfg.buffer_k:
                 self._commit_buffer(t, forced=False)
             if u not in S.blocked and S.started[u] == rnd + 1:
@@ -1173,5 +1250,7 @@ class FederationClock:
                 overhead = float(ret)
         ev = dataclasses.replace(ev, overhead=overhead)
         self.commits.append(ev)
+        if self.obs is not None:
+            record_commit(self.obs, ev)
         self.now = max(self.now, t + overhead)
         return overhead, per_uid

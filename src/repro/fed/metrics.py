@@ -10,7 +10,7 @@ read off time-to-target, so the three policies are directly comparable.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import numpy as np
 
@@ -94,10 +94,18 @@ def align_curves(curves: Dict[str, Tuple[np.ndarray, np.ndarray]],
 
 
 def time_to_target(t: np.ndarray, v: np.ndarray, target: float, *,
-                   smooth: int = 1, mode: str = "le") -> Optional[float]:
+                   smooth: int = 1, mode: str = "le") -> float:
     """First wall-clock instant at which the (optionally smoothed) curve
     reaches ``target`` — ``mode="le"`` for losses, ``"ge"`` for accuracy.
-    Returns None if the target is never reached."""
+    Returns ``float("inf")`` when the target is never reached (including
+    an empty curve), so callers can ``min()``/sort/compare without a None
+    guard.
+
+    >>> time_to_target(np.array([1.0, 2.0]), np.array([0.9, 0.4]), 0.5)
+    2.0
+    >>> time_to_target(np.array([1.0, 2.0]), np.array([0.9, 0.8]), 0.5)
+    inf
+    """
     t = np.asarray(t, np.float64)
     vv = running_mean(np.asarray(v, np.float64), smooth)
     if mode == "le":
@@ -106,7 +114,7 @@ def time_to_target(t: np.ndarray, v: np.ndarray, target: float, *,
         hit = np.nonzero(vv >= target)[0]
     else:
         raise KeyError(f"unknown mode {mode!r}")
-    return float(t[hit[0]]) if hit.size else None
+    return float(t[hit[0]]) if hit.size else float("inf")
 
 
 def time_weighted_mean(t: np.ndarray, v: np.ndarray, t_end: float) -> float:

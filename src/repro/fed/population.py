@@ -71,6 +71,7 @@ from repro.fed.engine import (DISCIPLINES, ClockConfig, EngineResult,
                               simulate_round)
 from repro.net import ConstantLink, NetworkPlane, shared_finish_times
 from repro.net.topology import EdgeTopology, edge_commit_legs
+from repro.obs import Observability, record_round_arrays, record_sync_wave
 
 __all__ = ["JobArrays", "PopulationClock", "PopulationFleet",
            "PopulationResult", "pareto_weights", "sample_cohort",
@@ -395,7 +396,9 @@ def vectorized_round(arrays: JobArrays, *, policy: str = "fifo",
                      deadline: Optional[float] = None,
                      network: Optional[NetworkPlane] = None,
                      t_origin: float = 0.0,
-                     collect_events: bool = True) -> EngineResult:
+                     collect_events: bool = True,
+                     obs: Optional[Observability] = None,
+                     rnd: int = 0) -> EngineResult:
     """Vectorized counterpart of ``engine.simulate_round`` — identical
     semantics, identical floats, returned in the same ``EngineResult``.
 
@@ -556,6 +559,13 @@ def vectorized_round(arrays: JobArrays, *, policy: str = "fifo",
             events.append((completion[u], "client_done", u))
 
     events.sort(key=lambda e: (e[0], e[1], e[2]))
+    if obs is not None and obs.enabled:
+        # post-hoc bulk emission from the kernel's own columns — a pure
+        # read of finished results, so the timeline floats are untouched
+        record_round_arrays(obs, arrays=arrays, ready_arr=ready_arr,
+                            service=service, served=served, dl=dl,
+                            completion=completion, waits=waits, idx=idx,
+                            dropped=dropped, t_origin=t_origin, rnd=rnd)
     round_time = max(completion.values()) if completion else 0.0
     if deadline is not None and dropped:
         round_time = max(round_time, deadline)
@@ -610,7 +620,8 @@ class PopulationClock:
     def __init__(self, cfg: ModelConfig, fleet: PopulationFleet,
                  run: FedRunConfig, *, server: Optional[DeviceProfile] = None,
                  links: Optional[Sequence] = None,
-                 force: Optional[str] = None, collect_events: bool = False):
+                 force: Optional[str] = None, collect_events: bool = False,
+                 obs: Optional[Observability] = None):
         if server is None:
             from repro.fed.devices import SERVER
             server = SERVER
@@ -675,6 +686,9 @@ class PopulationClock:
                     cell_capacity_mbps=run.fleet.edge_capacity_mbps)
         self._round_rng = np.random.default_rng(run.seed + 7777)
         self._straggler_rng = np.random.default_rng(run.seed + 4242)
+        # observability bundle: None unless a sink is enabled (the
+        # zero-overhead-when-disabled contract)
+        self.obs = obs if obs is not None and obs.enabled else None
 
     # ------------------------------------------------------------------ run
     def run(self) -> PopulationResult:
@@ -711,9 +725,12 @@ class PopulationClock:
             if vector:
                 res = vectorized_round(arrays,
                                        collect_events=self._collect_events,
-                                       **kw)
+                                       obs=self.obs, rnd=rnd, **kw)
             else:
                 res = simulate_round(arrays.to_jobs(), **kw)
+                if self.obs is not None:
+                    record_sync_wave(self.obs, res, arrays.to_jobs(),
+                                     base, rnd)
             self.now = base + res.round_time
             makespans.append(res.round_time)
             cohort_sizes.append(len(cohort))
@@ -773,6 +790,21 @@ class PopulationClock:
 
     # -------------------------------------------------------------- commits
     def _commit(self, contributors: Sequence[int], t: float) -> float:
+        """Closed-form commit charge plus (when enabled) one commit span
+        and counters — the emission reads the already-computed instants,
+        so obs-on timing is bit-identical to obs-off."""
+        t_end = self._commit_time(contributors, t)
+        if self.obs is not None:
+            if self.obs.tracer is not None:
+                self.obs.tracer.span("commit", "agg", t, t_end, "fleet", 0,
+                                     attrs={"contributors":
+                                            len(contributors)})
+            if self.obs.metrics is not None:
+                self.obs.metrics.inc("commits")
+                self.obs.metrics.observe("commit_overhead_s", t_end - t)
+        return t_end
+
+    def _commit_time(self, contributors: Sequence[int], t: float) -> float:
         """Closed-form commit charge: advance the clock past every
         contributor's adapter sync (flat or two-tier).  Shared verbatim by
         both round modes — commit timing never depends on which kernel ran
@@ -822,7 +854,11 @@ class PopulationClock:
         up_fin = t + dur
         t_merge = t
         for c in np.unique(cid):
-            t_merge = max(t_merge, float(np.max(up_fin[cid == c])) + bh)
+            cell_fin = float(np.max(up_fin[cid == c])) + bh
+            if self.obs is not None and self.obs.tracer is not None:
+                self.obs.tracer.span("edge_sync", "agg", t, cell_fin,
+                                     "edge", int(c))
+            t_merge = max(t_merge, cell_fin)
         down0 = t_merge + bh
         return max(t, float(np.max(down0 + dur)))
 
@@ -867,7 +903,8 @@ class PopulationClock:
         clock = FederationClock(fleet.n, run.rounds,
                                 self._async_clock_config(),
                                 times_fn=lambda u, r: times[u],
-                                priorities=pri, network=plane)
+                                priorities=pri, network=plane,
+                                obs=self.obs)
         res = clock.run()
         return PopulationResult(
             makespan=res.makespan, round_makespans=[],
@@ -894,7 +931,7 @@ class PopulationClock:
         res, n_events = run_async_vectorized(
             self._arrays, run.rounds, self._async_clock_config(),
             up_rate_mbps=up, down_rate_mbps=down, priorities=self._pri,
-            collect_trace=self._collect_events)
+            collect_trace=self._collect_events, obs=self.obs)
         return PopulationResult(
             makespan=res.makespan, round_makespans=[],
             commit_times=[c.time for c in res.commits],

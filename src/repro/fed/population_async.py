@@ -44,6 +44,7 @@ from repro.core.cost_model import chunked_service_time
 from repro.fed.engine import (ClockConfig, ClockResult, CommitEvent,
                               ServeEvent)
 from repro.fed.population import _chunk_smallest
+from repro.obs import Observability, record_async_bulk
 
 __all__ = ["run_async_vectorized"]
 
@@ -53,7 +54,8 @@ def run_async_vectorized(times: Dict[str, np.ndarray], rounds: int,
                          up_rate_mbps: np.ndarray,
                          down_rate_mbps: np.ndarray,
                          priorities: Optional[np.ndarray] = None,
-                         collect_trace: bool = True
+                         collect_trace: bool = True,
+                         obs: Optional[Observability] = None
                          ) -> Tuple[ClockResult, int]:
     """Run ``rounds`` async local rounds per client over SoA state.
 
@@ -138,6 +140,10 @@ def run_async_vectorized(times: Dict[str, np.ndarray], rounds: int,
     serves: List[ServeEvent] = []
     commits: List[CommitEvent] = []
     trace: List[Tuple[float, str, int]] = []
+    # round-entry instants for the post-run bulk obs emission; recorded
+    # only when a sink is live so the hot loop stays allocation-free
+    obs = obs if obs is not None and obs.enabled else None
+    t0_of: Dict[Tuple[int, int], float] = {}
 
     def push(t, kind, payload):
         nonlocal seq
@@ -153,10 +159,14 @@ def run_async_vectorized(times: Dict[str, np.ndarray], rounds: int,
             return
         if started[u] - acked[u] >= cfg.max_inflight_rounds:
             blocked.add(u)
+            if obs is not None and obs.metrics is not None:
+                obs.metrics.inc("credit_gate_stalls")
             return
         rnd = started[u]
         started[u] += 1
         t0 = max(t, release[u], free_at[u])
+        if obs is not None:
+            t0_of[(u, rnd)] = t0
         fwd = t0 + t_f[u]
         if collect_trace:
             trace.append((fwd, "fwd_done", u))
@@ -273,6 +283,11 @@ def run_async_vectorized(times: Dict[str, np.ndarray], rounds: int,
                 start_round(u, t)
 
     trace.sort(key=lambda e: (e[0], e[1], e[2]))
+    if obs is not None:
+        # one bulk pass after the loop: spans/metrics/ledger reconstructed
+        # from the same precomputed durations the loop dispatched with
+        record_async_bulk(obs, serves, commits, t0_of, times, up_dur,
+                          down_dur, has_fc, has_bc)
     done_count = {u: 0 for u in range(n)}
     for ev in serves:
         for u in ev.uids:

@@ -43,7 +43,7 @@ from repro.fed import metrics as M
 # ``from repro.fed.simulator import FedRunConfig`` keeps working
 from repro.fed.config import (AggConfig, ControlConfig, EngineConfig,  # noqa: F401
                               FedRunConfig, FleetConfig, LINK_MODELS,
-                              NetConfig, validate_run_config)
+                              NetConfig, ObsConfig, validate_run_config)
 from repro.fed.devices import LINK, SERVER
 from repro.fed.engine import (AGG_POLICIES, ClockConfig, FederationClock,
                               RoundPlan, jobs_from_times)
@@ -201,6 +201,23 @@ class Simulator:
                 controller=run.control.policy, resolve_every=run.control.resolve_every,
                 hysteresis=run.control.hysteresis, scheduler=run.engine.scheduler,
                 max_cut=cfg.n_layers - 1)
+        # observability plane (docs/observability.md): tracing, metrics and
+        # the time-resolved memory ledger are pure READS of the engines'
+        # results — a run with obs enabled follows the identical timeline
+        # (pinned by tests/test_obs_parity.py)
+        self.obs = None
+        if run.obs.enabled:
+            from repro.obs import (MemoryLedger, MetricsRegistry,
+                                   Observability, Tracer)
+            self.obs = Observability(
+                tracer=(Tracer(max_events=run.obs.max_events)
+                        if run.obs.trace else None),
+                metrics=MetricsRegistry() if run.obs.metrics else None,
+                ledger=(MemoryLedger.from_model(cfg, self.cuts,
+                                                run.batch_size, run.seq_len)
+                        if run.obs.memory_ledger else None))
+            if self._control is not None:
+                self._control.obs = self.obs
         self.history: List[RoundRecord] = []
         self.sim_clock = 0.0
         # beyond-paper transport/participation state
@@ -593,7 +610,8 @@ class Simulator:
                                        else None),
                                 summary_bytes=(self._summary_bytes()
                                                if self._edges is not None
-                                               else 0.0))
+                                               else 0.0),
+                                obs=self.obs)
         self._clock = clock
         if self._pending_clock_state is not None:
             # resuming a mid-flight snapshot: the clock continues the
@@ -632,6 +650,9 @@ class Simulator:
                           f"acc={rec.accuracy:.4f} f1={rec.f1:.4f}")
         self.clock_result = res
         self.sim_clock = clock.now
+        if run.obs.trace_dir is not None and self.obs is not None \
+                and self.obs.tracer is not None:
+            self.write_trace()
         return self.history
 
     def _on_tick(self, now: float) -> bool:
@@ -670,6 +691,8 @@ class Simulator:
                 # from the post-commit state)
                 self.client_lora[u], self.client_opt[u] = cur_lora, cur_opt
                 self.discarded_updates.append((u, r))
+                if self.obs is not None and self.obs.metrics is not None:
+                    self.obs.metrics.inc("stale_discard")
         self._wave_losses.extend(losses)
         for u, r, ls in zip(ev.uids, ev.rounds, losses):
             self.loss_events.append((ev.end, u, r, ls))
@@ -914,6 +937,8 @@ class Simulator:
                 self.cfg, new, self.devices[u], self.server_dev,
                 LinkProfile(self.network.nominal_mbps(u)),
                 run.batch_size, run.seq_len)
+            if self.obs is not None and self.obs.ledger is not None:
+                self.obs.ledger.set_cut(u, new)
 
     def _maybe_eval(self, rnd: int, rec: RoundRecord, verbose: bool) -> bool:
         """Shared per-round eval/early-stop; True means stop training."""
@@ -991,7 +1016,9 @@ class Simulator:
         import json
         run = dataclasses.asdict(self.run)
         for k in ("snapshot_every", "snapshot_dir", "resume_from",
-                  "preempt_at"):
+                  "preempt_at", "obs"):
+            # obs is popped too: observability is pure reads, so a resuming
+            # run may legitimately turn tracing on or off
             run.pop(k, None)
         doc = {"model": self.cfg.name, "n_layers": self.cfg.n_layers,
                "d_model": self.cfg.d_model, "cuts": self._init_cuts,
@@ -1016,6 +1043,7 @@ class Simulator:
                          r.f1] for r in self.history],
             "wave_losses": list(self._wave_losses),
             "discarded": [list(d) for d in self.discarded_updates],
+            "obs": (self.obs.state_dict() if self.obs is not None else None),
         }
 
     def state_dict(self) -> dict:
@@ -1108,6 +1136,10 @@ class Simulator:
                 for r, t, l, a, f1 in des["history"]]
             self._wave_losses = [float(x) for x in des["wave_losses"]]
             self.discarded_updates = [tuple(d) for d in des["discarded"]]
+            if des.get("obs") is not None and self.obs is not None:
+                # snapshots written without obs (or loaded into a run that
+                # turned it off) skip this: obs never gates a resume
+                self.obs.load_state_dict(des["obs"])
             # the clock is rebuilt by _run_event; its restored event loop
             # waits here until then
             self._pending_clock_state = des["clock"]
@@ -1149,3 +1181,33 @@ class Simulator:
         return memory_model.server_memory(
             self.cfg, self.run.scheme, self.cuts,
             self.run.batch_size, self.run.seq_len)
+
+    # ------------------------------------------------------------------ obs
+    def obs_other_data(self) -> dict:
+        """Sidecar payload for the Chrome trace's ``otherData`` field:
+        the metrics summary and the memory-ledger report (JSON-able)."""
+        if self.obs is None:
+            return {}
+        out: dict = {}
+        if self.obs.metrics is not None:
+            out["metrics"] = self.obs.metrics.summary()
+        if self.obs.ledger is not None:
+            out["memory"] = self.obs.ledger.report()
+        return out
+
+    def write_trace(self, path: Optional[str] = None) -> str:
+        """Write the Chrome/Perfetto trace JSON (plus the metrics/ledger
+        sidecar under ``otherData``).  Default target is
+        ``run.obs.trace_dir/trace.json``."""
+        if self.obs is None or self.obs.tracer is None:
+            raise ValueError("write_trace needs ObsConfig(trace=True)")
+        if path is None:
+            if self.run.obs.trace_dir is None:
+                raise ValueError("pass path= or set ObsConfig(trace_dir=...)")
+            d = Path(self.run.obs.trace_dir)
+            d.mkdir(parents=True, exist_ok=True)
+            path = str(d / "trace.json")
+        else:
+            Path(path).parent.mkdir(parents=True, exist_ok=True)
+        self.obs.tracer.write_chrome(path, other_data=self.obs_other_data())
+        return path

@@ -67,6 +67,9 @@ class SharedCell:
         self.version = 0
         # tid -> [uid, remaining_bits]; dict preserves admission order
         self.active: Dict[Hashable, List] = {}
+        # optional (Observability, direction) pair attached by the engines;
+        # pure emission after each state change, never read by the math
+        self.obs = None
 
     # ------------------------------------------------------------------ state
     def _rates_and_horizon(self, t: float, active) -> Tuple[dict, float]:
@@ -90,6 +93,9 @@ class SharedCell:
         self._integrate_to(max(t, self.now))
         self.active[tid] = [uid, float(nbytes) * 8.0]
         self.version += 1
+        if self.obs is not None:
+            o, d = self.obs
+            o.cell_note(self.now, len(self.active), d, "add")
 
     def next_completion(self) -> Optional[float]:
         """Predicted instant of the FIRST transfer completion under current
@@ -131,6 +137,9 @@ class SharedCell:
                         if bits <= _EPS_BITS]:
                 uid, _ = self.active.pop(tid)
                 self.version += 1
+                if self.obs is not None:
+                    o, d = self.obs
+                    o.cell_note(nc, len(self.active), d, "pop")
                 done.append((nc, tid, uid))
         self._integrate_to(t)
         return done

@@ -271,8 +271,13 @@ def test_time_to_target_and_align():
     t = np.array([1.0, 2.0, 3.0, 4.0])
     v = np.array([5.0, 4.0, 2.0, 1.0])
     assert M.time_to_target(t, v, 2.0) == 3.0
-    assert M.time_to_target(t, v, 6.0, mode="ge") is None
+    assert M.time_to_target(t, v, 6.0, mode="ge") == float("inf")
     assert M.time_to_target(t, -v, -2.0, mode="ge") == 3.0
+    # edge cases: empty curve and never-crossing both return inf (not None)
+    assert M.time_to_target(np.empty(0), np.empty(0), 1.0) == float("inf")
+    assert M.time_to_target(t, v, 0.5) == float("inf")
+    with pytest.raises(KeyError):
+        M.time_to_target(t, v, 2.0, mode="nope")
     grid, aligned = M.align_curves({"a": (t, v), "b": (t + 1, v)}, n_points=5)
     assert grid[0] == 1.0 and grid[-1] == 5.0
     assert set(aligned) == {"a", "b"}

@@ -7,7 +7,7 @@ import pytest
 
 from repro.fed.config import (AggConfig, ControlConfig, EngineConfig,
                               FedRunConfig, FleetConfig, NetConfig,
-                              _FLAT_SHIMS, validate_run_config)
+                              ObsConfig, _FLAT_SHIMS, validate_run_config)
 
 
 # ---------------------------------------------------------------------------
@@ -142,6 +142,15 @@ BAD = [
     (ValueError, dict(scheme="sl", fleet=FleetConfig(edge_cells=2))),
     # cohort_impl is a closed enum
     (KeyError, dict(engine=EngineConfig(cohort_impl="bogus"))),
+    # observability knob pairings (ObsConfig.validate)
+    (ValueError, dict(engine=EngineConfig(mode="event"),
+                      obs=ObsConfig(trace_dir="/tmp/t"))),
+    (ValueError, dict(engine=EngineConfig(mode="event"),
+                      obs=ObsConfig(max_events=100))),
+    (ValueError, dict(engine=EngineConfig(mode="event"),
+                      obs=ObsConfig(trace=True, max_events=0))),
+    # the closed-form engine has no event stream to observe
+    (ValueError, dict(obs=ObsConfig(metrics=True))),
 ]
 
 

@@ -1,0 +1,194 @@
+#!/usr/bin/env python3
+"""Summarize / validate a Chrome-trace JSON written by the obs plane.
+
+Reads a trace produced by ``Tracer.write_chrome`` (see
+docs/observability.md) and prints, in simulated seconds:
+
+  * a phase breakdown — total/mean duration and count per span name,
+  * the top-N slowest clients — span of first activity to last, with a
+    per-phase busy split,
+  * the memory-ledger peaks and the metrics summary when the exporter
+    attached them under ``otherData``.
+
+``--validate`` instead runs structural checks (event kinds, metadata
+coverage, non-negative durations, the simulated-clock stamp) and exits
+non-zero listing each violation — the CI obs-smoke job gates on it.
+
+Usage:
+  python tools/trace_summary.py TRACE.json [--top N]
+  python tools/trace_summary.py TRACE.json --validate
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+VALID_PH = {"M", "X", "C"}
+
+
+def load(path: str) -> dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+# --------------------------------------------------------------------- checks
+def validate(doc: dict) -> list[str]:
+    """Structural violations (empty list == valid)."""
+    errors: list[str] = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents missing or not a list"]
+    if not events:
+        errors.append("traceEvents is empty")
+    named_pids: set[int] = set()
+    named_threads: set[tuple[int, int]] = set()
+    used_threads: set[tuple[int, int]] = set()
+    for n, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph not in VALID_PH:
+            errors.append(f"event {n}: unknown ph {ph!r}")
+            continue
+        if "pid" not in ev or "tid" not in ev:
+            errors.append(f"event {n}: missing pid/tid")
+            continue
+        if ph == "M":
+            if ev.get("name") == "process_name":
+                named_pids.add(ev["pid"])
+            elif ev.get("name") == "thread_name":
+                named_threads.add((ev["pid"], ev["tid"]))
+            continue
+        used_threads.add((ev["pid"], ev["tid"]))
+        if not isinstance(ev.get("ts"), (int, float)):
+            errors.append(f"event {n} ({ev.get('name')}): non-numeric ts")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)):
+                errors.append(f"event {n} ({ev.get('name')}): missing dur")
+            elif dur < -1e-6:
+                errors.append(f"event {n} ({ev.get('name')}): "
+                              f"negative dur {dur}")
+        if ph == "C" and "value" not in ev.get("args", {}):
+            errors.append(f"event {n} ({ev.get('name')}): counter "
+                          "without args.value")
+    for pid in sorted({p for p, _ in used_threads} - named_pids):
+        errors.append(f"pid {pid} has events but no process_name metadata")
+    for pid, tid in sorted(used_threads - named_threads):
+        errors.append(f"thread ({pid}, {tid}) has events but no "
+                      "thread_name metadata")
+    other = doc.get("otherData", {})
+    if other.get("clock") != "simulated-seconds":
+        errors.append("otherData.clock is not 'simulated-seconds'")
+    return errors
+
+
+# -------------------------------------------------------------------- summary
+def _process_names(events: list[dict]) -> dict[int, str]:
+    return {ev["pid"]: ev["args"]["name"] for ev in events
+            if ev.get("ph") == "M" and ev.get("name") == "process_name"}
+
+
+def phase_breakdown(events: list[dict]) -> list[tuple[str, int, float, float]]:
+    """(name, count, total_s, mean_s) per span name, slowest total first."""
+    tot: dict[str, float] = defaultdict(float)
+    cnt: dict[str, int] = defaultdict(int)
+    for ev in events:
+        if ev.get("ph") == "X":
+            tot[ev["name"]] += ev["dur"] / 1e6
+            cnt[ev["name"]] += 1
+    return sorted(((n, cnt[n], tot[n], tot[n] / cnt[n]) for n in tot),
+                  key=lambda r: -r[2])
+
+
+def client_rows(events: list[dict]) -> list[tuple[int, float, dict]]:
+    """Per client tid: (tid, first-activity..last span, busy split by name)."""
+    names = _process_names(events)
+    lo: dict[int, float] = {}
+    hi: dict[int, float] = {}
+    busy: dict[int, dict] = defaultdict(lambda: defaultdict(float))
+    for ev in events:
+        if ev.get("ph") != "X" or names.get(ev["pid"]) != "client":
+            continue
+        u = ev["tid"]
+        t0, t1 = ev["ts"] / 1e6, (ev["ts"] + ev["dur"]) / 1e6
+        lo[u] = min(lo.get(u, t0), t0)
+        hi[u] = max(hi.get(u, t1), t1)
+        busy[u][ev["name"]] += ev["dur"] / 1e6
+    return sorted(((u, hi[u] - lo[u], dict(busy[u])) for u in lo),
+                  key=lambda r: -r[1])
+
+
+def summarize(doc: dict, top: int = 10) -> None:
+    events = doc.get("traceEvents", [])
+    print("== phase breakdown (simulated seconds) ==")
+    for name, n, tot, mean in phase_breakdown(events):
+        print(f"  {name:14s} n={n:6d}  total={tot:12.3f}s  mean={mean:9.4f}s")
+    rows = client_rows(events)
+    if rows:
+        print(f"\n== top {min(top, len(rows))} slowest clients "
+              f"(of {len(rows)}) ==")
+        for u, span, busy in rows[:top]:
+            split = "  ".join(f"{k}={v:.3f}s"
+                              for k, v in sorted(busy.items(),
+                                                 key=lambda kv: -kv[1]))
+            print(f"  client {u:5d}  span={span:10.3f}s  {split}")
+    other = doc.get("otherData", {})
+    mem = other.get("memory")
+    if mem:
+        print("\n== memory ledger ==")
+        print(f"  server peak : "
+              f"{float(mem['server_peak_bytes']) / 2**20:10.1f} MiB")
+        print(f"  worst client: "
+              f"{float(mem['worst_client_peak_bytes']) / 2**20:10.1f} MiB")
+        print(f"  fleet peak  : "
+              f"{float(mem['fleet_peak_bytes']) / 2**20:10.1f} MiB")
+        if mem.get("client_reduction_vs_local") is not None:
+            print(f"  reduction vs local fine-tuning: "
+                  f"{100.0 * float(mem['client_reduction_vs_local']):.1f}%")
+    mx = other.get("metrics")
+    if mx:
+        print("\n== metrics ==")
+        for k, v in sorted((mx.get("counters") or {}).items()):
+            print(f"  {k:24s} {v:g}")
+        for k, st in sorted((mx.get("histograms") or {}).items()):
+            print(f"  {k:24s} n={st['count']:g} mean={st['mean']:.4f} "
+                  f"min={st['min']:.4f} max={st['max']:.4f}")
+    if other.get("dropped_spans") or other.get("dropped_counters"):
+        print(f"\n(ring buffer dropped {other.get('dropped_spans', 0)} spans, "
+              f"{other.get('dropped_counters', 0)} counters)")
+
+
+def main(argv: list[str]) -> int:
+    args = [a for a in argv if not a.startswith("--")]
+    flags = {a for a in argv if a.startswith("--")}
+    top = 10
+    for a in list(flags):
+        if a.startswith("--top="):
+            top = int(a.split("=", 1)[1])
+            flags.discard(a)
+    unknown = flags - {"--validate"}
+    if unknown or len(args) != 1:
+        print(__doc__)
+        return 2
+    path = Path(args[0])
+    if not path.exists():
+        print(f"{path}: file not found", file=sys.stderr)
+        return 2
+    doc = load(str(path))
+    if "--validate" in flags:
+        errors = validate(doc)
+        if errors:
+            print(f"{path}: INVALID trace:", file=sys.stderr)
+            for e in errors:
+                print(f"  {e}", file=sys.stderr)
+            return 1
+        n = sum(1 for ev in doc["traceEvents"] if ev.get("ph") == "X")
+        print(f"{path}: valid ({n} spans)")
+        return 0
+    summarize(doc, top=top)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
