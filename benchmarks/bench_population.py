@@ -217,6 +217,92 @@ def run(csv: bool = False):
                      f"cohort={res.cohort_sizes[0]} "
                      f"makespan={res.makespan:.3f}s modes={set(res.modes)}"))
 
+    # real-math rows (ROADMAP item 1): sampled cohorts through the jitted
+    # client-forward / server-step / client-backward math.  A tiny model
+    # keeps the rows CPU-feasible — the signal is harness overhead
+    # (real-math vs timing-only on one fleet) and the threshold boundary
+    # (per-object Simulator vs clock trainer, loss events bit-identical).
+    from repro.configs import reduced
+    from repro.data import make_emotion_dataset
+    from repro.fed.config import NetConfig
+    from repro.fed.population_training import train_population
+    from repro.fed.simulator import Simulator
+
+    tcfg = reduced(REGISTRY["bert-base"], n_layers=4, d_model=64).with_(
+        vocab_size=4096, max_position=64)
+    n_small = 2_000
+    tr_fleet = FleetSpec(n=n_small, seed=0,
+                         link_model="constant").population()
+    data = make_emotion_dataset(8 * n_small, seq_len=16, vocab_size=4096,
+                                seed=0)
+    run_rm = FedRunConfig(
+        rounds=2, batch_size=8, seq_len=16, lr=3e-3, eval_every=100,
+        engine=EngineConfig(mode="event", scheduler="ours", slots=SLOTS,
+                            cohort_chunk=CHUNK, chunk_efficiency=0.9),
+        agg=AggConfig(policy="sync", interval=1),
+        fleet=FleetConfig(sampling="pareto", rate=0.01,
+                          population_threshold=1000))
+    t0 = time.perf_counter()
+    timing = PopulationClock(tcfg, tr_fleet, run_rm).run()
+    t_timing = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    tr = train_population(tcfg, tr_fleet, run_rm, data)
+    t_real = time.perf_counter() - t0
+    served = len(tr.loss_events)
+    rows.extend([
+        ("population_train_timing_only", t_timing * 1e6,
+         f"n={n_small} cohort={timing.cohort_sizes[0]} "
+         f"serves={sum(timing.cohort_sizes)} "
+         f"events_per_s={sum(timing.cohort_sizes) / t_timing:.0f}"),
+        ("population_train_real_math", t_real * 1e6,
+         f"n={n_small} cohort={tr.clock_result.cohort_sizes[0]} "
+         f"serves={served} events_per_s={served / t_real:.1f} "
+         f"mean_loss={tr.history[-1].mean_loss:.3f}"),
+        ("population_train_overhead", 0.0,
+         f"{t_real / t_timing:.0f}x real-math vs timing-only "
+         f"(same cohorts, jitted training math + commits on top)"),
+    ])
+
+    # threshold boundary: the same sub-threshold run through both real-math
+    # engines — eager per-object Simulator vs cohort-resident clock trainer
+    spec = FleetSpec(n=6, seed=3, link_model="constant")
+    small = make_emotion_dataset(600, seq_len=16, vocab_size=4096, seed=0)
+    small_test = make_emotion_dataset(120, seq_len=16, vocab_size=4096,
+                                      seed=1)
+
+    def _boundary_run():
+        return FedRunConfig(
+            rounds=2, batch_size=8, seq_len=16, lr=3e-3, eval_every=100,
+            engine=EngineConfig(mode="event", scheduler="ours", slots=2,
+                                cohort_chunk=2),
+            agg=AggConfig(policy="sync", interval=1),
+            fleet=FleetConfig(sampling="pareto", rate=0.6),
+            net=NetConfig(link_model="custom"))
+
+    t0 = time.perf_counter()
+    sim = Simulator(tcfg, fleet=spec, train=small, test=small_test,
+                    run=_boundary_run())
+    sim.run_training()
+    t_obj = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    trb = train_population(tcfg, spec.population(), _boundary_run(), small,
+                           small_test)
+    t_clk = time.perf_counter() - t0
+    if trb.loss_events != sim.loss_events:
+        raise AssertionError("threshold-boundary divergence: trainer loss "
+                             "events != Simulator loss events")
+    rows.extend([
+        ("population_train_object", t_obj * 1e6,
+         f"n=6 serves={len(sim.loss_events)} per-object Simulator "
+         f"(eager per-client state)"),
+        ("population_train_clock", t_clk * 1e6,
+         f"n=6 serves={len(trb.loss_events)} PopulationClock trainer "
+         f"(cohort-resident state, loss events bit-identical)"),
+        ("population_train_boundary_ratio", 0.0,
+         f"{t_obj / t_clk:.2f}x object vs clock at the threshold boundary "
+         f"(loss events bit-identical)"),
+    ])
+
     if csv:
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")

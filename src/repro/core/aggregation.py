@@ -169,3 +169,52 @@ def aggregation_round(client_loras: Sequence[PyTree],
         new_clients.append(c)
         new_servers.append(s)
     return new_clients, new_servers, agg
+
+
+def anchored_hierarchical_aggregate(global_full: PyTree,
+                                    contrib_fulls: Sequence[PyTree],
+                                    contrib_weights: Sequence[float],
+                                    cells: Sequence[Sequence[int]],
+                                    cell_absent_mass: Sequence[float]):
+    """Two-tier anchored merge for sampled cohorts at population scale.
+
+    Each edge cell merges its CONTRIBUTING members (indices into
+    ``contrib_fulls``) with the standing global anchoring that cell's
+    absent data mass, then the cloud merges the cell summaries by total
+    cell mass — the O(cohort) counterpart of folding every absent client's
+    (untouched == global) adapters through :func:`hierarchical_aggregate`.
+    Because each absent member's tree IS the global, both tiers telescope
+    to the same weighted mean; the aggregation property tests pin the
+    float-tolerance equivalence and the exact degenerate cases (no absent
+    mass, or no contributors at all).
+
+    Returns ``(aggregated_full, summaries, cell_masses)`` like
+    :func:`hierarchical_aggregate`; cells with neither contributors nor
+    absent mass are skipped.
+    """
+    if len(cells) != len(cell_absent_mass):
+        raise ValueError("one absent-mass entry per cell required")
+    idx_seen = [i for cell in cells for i in cell]
+    if len(set(idx_seen)) != len(idx_seen):
+        raise ValueError("edge cells must not share contributors")
+    if set(idx_seen) != set(range(len(contrib_fulls))):
+        raise ValueError("edge cells must cover every contributor exactly "
+                         "once")
+    summaries, cell_masses = [], []
+    for cell, absent in zip(cells, cell_absent_mass):
+        absent = float(absent)
+        if absent < 0:
+            raise ValueError("cell_absent_mass must be >= 0")
+        ws = [float(contrib_weights[i]) for i in cell]
+        if absent > 0:
+            summaries.append(aggregate_full_weighted(
+                [global_full] + [contrib_fulls[i] for i in cell],
+                [absent] + ws))
+        elif cell:
+            summaries.append(aggregate_full_weighted(
+                [contrib_fulls[i] for i in cell], ws))
+        else:
+            continue
+        cell_masses.append(absent + sum(ws))
+    agg = aggregate_full_weighted(summaries, cell_masses)
+    return agg, summaries, cell_masses

@@ -526,3 +526,45 @@ def validate_run_config(run: FedRunConfig,
                              f"the {n_clients}-client fleet")
         if run.fleet.edge_cells > n_clients:
             raise ValueError("edge_cells cannot exceed the fleet size")
+
+
+def validate_population_training(run: FedRunConfig,
+                                 n_clients: Optional[int] = None) -> None:
+    """The population-trainer rows on top of :func:`validate_run_config`:
+    real-math cohort training at population scale mirrors the per-object
+    ``Simulator`` stream-for-stream, so the knobs that keep PER-OBJECT rng
+    or residual state the trainer does not replicate are rejected rather
+    than silently diverging from the parity oracle."""
+    validate_run_config(run, n_clients)
+    if run.scheme != "ours":
+        raise ValueError("population-scale training models the paper's "
+                         "scheme='ours' only (sfl/sl keep per-object "
+                         "closed-form runs)")
+    if run.engine.mode != "event":
+        raise ValueError("population-scale training is driven by the "
+                         "PopulationClock's event kernels; set engine "
+                         "mode='event'")
+    if run.fleet.straggler_prob > 0:
+        raise ValueError("straggler re-rolls draw a per-object rng stream "
+                         "in a different order than the population kernels "
+                         "(Simulator rolls the WHOLE fleet before sampling "
+                         "the cohort); set straggler_prob=0 for real-math "
+                         "population runs")
+    if run.net.quantize:
+        raise ValueError("int8+EF transport keeps a per-client error-"
+                         "feedback residual for every client; cohort-"
+                         "resident training materializes sampled clients "
+                         "only — set net quantize=False")
+    if run.control.policy != "static":
+        raise ValueError("the control plane re-assigns cuts per-object at "
+                         "commit boundaries; population-scale training "
+                         "runs the static controller")
+    if run.agg.transport != "nominal":
+        raise ValueError("population-scale training charges commits at "
+                         "nominal rates (transport='plane' routing stays "
+                         "per-object)")
+    if (run.snapshot_every is not None or run.resume_from is not None
+            or run.preempt_at is not None):
+        raise ValueError("mid-flight snapshots / resume / preemption are "
+                         "per-object Simulator features; not supported by "
+                         "the population trainer")

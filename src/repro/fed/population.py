@@ -621,7 +621,7 @@ class PopulationClock:
                  run: FedRunConfig, *, server: Optional[DeviceProfile] = None,
                  links: Optional[Sequence] = None,
                  force: Optional[str] = None, collect_events: bool = False,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None, trainer=None):
         if server is None:
             from repro.fed.devices import SERVER
             server = SERVER
@@ -689,14 +689,21 @@ class PopulationClock:
         # observability bundle: None unless a sink is enabled (the
         # zero-overhead-when-disabled contract)
         self.obs = obs if obs is not None and obs.enabled else None
+        # optional real-math trainer (fed/population_training.py): when
+        # attached, the serve records the timing kernels produce drive the
+        # actual jitted training math through its callbacks, and commits
+        # fold real adapter deltas with the Simulator's nominal charges
+        self._trainer = trainer
+        if trainer is not None:
+            trainer._bind(self)
 
     # ------------------------------------------------------------------ run
-    def run(self) -> PopulationResult:
+    def run(self, verbose: bool = False) -> PopulationResult:
         if self.run_cfg.agg.policy != "sync":
-            return self._run_async()
-        return self._run_sync()
+            return self._run_async(verbose)
+        return self._run_sync(verbose)
 
-    def _run_sync(self) -> PopulationResult:
+    def _run_sync(self, verbose: bool = False) -> PopulationResult:
         run, fleet = self.run_cfg, self.fleet
         makespans: List[float] = []
         commit_times: List[float] = []
@@ -731,13 +738,45 @@ class PopulationClock:
                 if self.obs is not None:
                     record_sync_wave(self.obs, res, arrays.to_jobs(),
                                      base, rnd)
+            tr = self._trainer
+            if tr is not None:
+                # real math rides the kernel's service records in event
+                # order — exactly where the per-object clock fires
+                # _on_serve (ServeEvent.end = base + record-relative end)
+                for rec in res.service:
+                    tr.on_sync_serve(rec.uids, rnd, base + rec.end)
             self.now = base + res.round_time
             makespans.append(res.round_time)
             cohort_sizes.append(len(cohort))
             modes.append("vectorized" if vector else "objects")
             round_results.append(res)
             n_events += 6 * len(res.completion) + 2 * len(res.dropped)
-            if (rnd + 1) % run.agg.interval == 0 and res.completion:
+            if tr is not None:
+                # cohort-resident adapter/optimizer bytes live server-side
+                # from the wave start until the commit redistributes them
+                resident = tr.resident_nbytes()
+                if (rnd + 1) % run.agg.interval == 0:
+                    # the per-object engine commits at every interval
+                    # boundary, empty served set included; the charge is
+                    # the trainer's Simulator-mirrored nominal round trip
+                    t0c = self.now
+                    charge = tr.commit_sync()
+                    self.now = max(self.now, self.now + charge)
+                    commit_times.append(self.now)
+                    if self.obs is not None:
+                        if self.obs.tracer is not None:
+                            self.obs.tracer.span(
+                                "commit", "agg", t0c, self.now, "fleet", 0,
+                                attrs={"contributors": len(res.completion)})
+                        if self.obs.metrics is not None:
+                            self.obs.metrics.inc("commits")
+                            self.obs.metrics.observe("commit_overhead_s",
+                                                     self.now - t0c)
+                if self.obs is not None and self.obs.ledger is not None:
+                    self.obs.ledger.cohort_span(base, self.now, resident)
+                if tr.on_sync_round_end(rnd, self.now, verbose):
+                    break
+            elif (rnd + 1) % run.agg.interval == 0 and res.completion:
                 self.now = self._commit(sorted(res.completion), self.now)
                 commit_times.append(self.now)
         return PopulationResult(makespan=self.now,
@@ -867,15 +906,24 @@ class PopulationClock:
         """The one async clock configuration BOTH kernels run — parity by
         construction."""
         run = self.run_cfg
+        if run.agg.buffer_k is not None:
+            buffer_k = run.agg.buffer_k
+        elif self._trainer is not None:
+            # real-math runs resolve the Simulator's default (semi-sync
+            # half-cohort for buffered, fully async under staleness) so
+            # the parity oracle and the trainer commit at the same events
+            buffer_k = (1 if run.agg.policy == "staleness"
+                        else max(1, self.fleet.n // 2))
+        else:
+            buffer_k = self.fleet.n
         return ClockConfig(policy=self._policy, slots=run.engine.slots,
                            cohort_chunk=run.engine.cohort_chunk,
                            chunk_efficiency=run.engine.chunk_efficiency,
                            deadline=None, agg_policy=run.agg.policy,
-                           agg_interval=1,
-                           buffer_k=run.agg.buffer_k or self.fleet.n,
+                           agg_interval=1, buffer_k=buffer_k,
                            max_inflight_rounds=run.agg.max_inflight)
 
-    def _run_async(self) -> PopulationResult:
+    def _run_async(self, verbose: bool = False) -> PopulationResult:
         """Buffered / staleness policies: the struct-of-arrays event kernel
         at/above ``population_threshold``, the per-object FederationClock
         (the parity oracle) below it."""
@@ -883,8 +931,12 @@ class PopulationClock:
         use_vec = (fleet.n >= run.fleet.population_threshold
                    if self._force is None else self._force == "vectorized")
         if use_vec:
-            return self._run_async_vectorized()
-        return self._run_async_objects()
+            res = self._run_async_vectorized()
+        else:
+            res = self._run_async_objects()
+        if self._trainer is not None:
+            self._trainer.finalize_async()
+        return res
 
     def _run_async_objects(self) -> PopulationResult:
         run, fleet = self.run_cfg, self.fleet
@@ -905,7 +957,12 @@ class PopulationClock:
                                 times_fn=lambda u, r: times[u],
                                 priorities=pri, network=plane,
                                 obs=self.obs)
-        res = clock.run()
+        tr = self._trainer
+        if tr is not None:
+            res = clock.run(on_serve=tr.on_serve, on_commit=tr.commit_async,
+                            on_round_start=tr.on_round_start)
+        else:
+            res = clock.run()
         return PopulationResult(
             makespan=res.makespan, round_makespans=[],
             commit_times=[c.time for c in res.commits],
@@ -928,10 +985,14 @@ class PopulationClock:
         else:
             # same rates NetworkPlane(fleet.links()) would carry
             up = down = fleet.rate_mbps
+        tr = self._trainer
         res, n_events = run_async_vectorized(
             self._arrays, run.rounds, self._async_clock_config(),
             up_rate_mbps=up, down_rate_mbps=down, priorities=self._pri,
-            collect_trace=self._collect_events, obs=self.obs)
+            collect_trace=self._collect_events, obs=self.obs,
+            on_serve=tr.on_serve if tr is not None else None,
+            on_commit=tr.commit_async if tr is not None else None,
+            on_round_start=tr.on_round_start if tr is not None else None)
         return PopulationResult(
             makespan=res.makespan, round_makespans=[],
             commit_times=[c.time for c in res.commits],

@@ -26,8 +26,11 @@ pushed exactly once, O(log n) per event); "bw" re-keys the still-queued
 set as arrays at each dispatch boundary through the batched rate query.
 
 Scope (exactly the regime ``PopulationClock`` dispatches here): dedicated
-constant-rate links, no aggregation-transport routing (commit overhead
-0), no driver callbacks.  Shared-medium cells integrate one contention
+constant-rate links, no aggregation-transport routing (commit overhead 0
+unless a real-math ``on_commit`` returns a redistribute charge — the
+``on_round_start``/``on_serve``/``on_commit`` hooks mirror the engine's
+callback contract and are byte-free no-ops when None, so the timing-only
+kernel is untouched).  Shared-medium cells integrate one contention
 process across all transfers and stay per-object by contract; the
 per-object ``FederationClock`` below ``population_threshold`` is the
 parity oracle (tests/test_population_async.py pins timelines
@@ -35,7 +38,9 @@ float-for-float).
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
+from collections.abc import Mapping
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -55,7 +60,8 @@ def run_async_vectorized(times: Dict[str, np.ndarray], rounds: int,
                          down_rate_mbps: np.ndarray,
                          priorities: Optional[np.ndarray] = None,
                          collect_trace: bool = True,
-                         obs: Optional[Observability] = None
+                         obs: Optional[Observability] = None,
+                         on_serve=None, on_commit=None, on_round_start=None
                          ) -> Tuple[ClockResult, int]:
     """Run ``rounds`` async local rounds per client over SoA state.
 
@@ -167,6 +173,8 @@ def run_async_vectorized(times: Dict[str, np.ndarray], rounds: int,
         t0 = max(t, release[u], free_at[u])
         if obs is not None:
             t0_of[(u, rnd)] = t0
+        if on_round_start is not None:
+            on_round_start(u, rnd, t0)
         fwd = t0 + t_f[u]
         if collect_trace:
             trace.append((fwd, "fwd_done", u))
@@ -217,14 +225,27 @@ def run_async_vectorized(times: Dict[str, np.ndarray], rounds: int,
         contribs = tuple(sorted(buffer))
         stal = tuple(version - model_version[u] for u in contribs)
         version += 1
-        commits.append(CommitEvent(time=t, version=version,
-                                   contributors=contribs, staleness=stal,
-                                   forced=forced, overhead=0.0))
-        now = max(now, t + 0.0)
+        ev = CommitEvent(time=t, version=version, contributors=contribs,
+                         staleness=stal, forced=forced)
+        # engine._commit's overhead contract: a real-math on_commit may
+        # return a scalar redistribute charge or a {uid: seconds} mapping;
+        # with no callback the overhead stays 0.0 — byte-identical to the
+        # timing-only kernel
+        overhead, per_uid = 0.0, None
+        if on_commit is not None:
+            ret = on_commit(ev)
+            if isinstance(ret, Mapping):
+                per_uid = {int(u): float(s) for u, s in ret.items()}
+                overhead = max(per_uid.values(), default=0.0)
+            elif ret is not None:
+                overhead = float(ret)
+        commits.append(dataclasses.replace(ev, overhead=overhead))
+        now = max(now, t + overhead)
         for u in contribs:
             model_version[u] = version
             acked[u] = finished[u]
-            release[u] = t + 0.0
+            release[u] = t + (per_uid.get(u, 0.0) if per_uid is not None
+                              else overhead)
         buffer.clear()
         for u in sorted(blocked):
             if started[u] - acked[u] < cfg.max_inflight_rounds:
@@ -256,9 +277,12 @@ def run_async_vectorized(times: Dict[str, np.ndarray], rounds: int,
             try_dispatch(t)
         elif kind == "served":
             take, s, t_start = payload
-            serves.append(ServeEvent(uids=tuple(u for u, _ in take),
-                                     rounds=tuple(r for _, r in take),
-                                     slot=s, start=t_start, end=t))
+            ev = ServeEvent(uids=tuple(u for u, _ in take),
+                            rounds=tuple(r for _, r in take),
+                            slot=s, start=t_start, end=t)
+            serves.append(ev)
+            if on_serve is not None:
+                on_serve(ev)
             if collect_trace:
                 trace.append((t, "server_done", take[0][0]))
             n_events += 1

@@ -1211,3 +1211,30 @@ class Simulator:
             Path(path).parent.mkdir(parents=True, exist_ok=True)
         self.obs.tracer.write_chrome(path, other_data=self.obs_other_data())
         return path
+
+
+def run_federated_training(cfg: ModelConfig, fleet_spec, run: FedRunConfig,
+                           train, test=None, *, verbose: bool = False):
+    """Fleet-size router for real-math federated training.
+
+    Below ``run.fleet.population_threshold`` the per-object
+    :class:`Simulator` runs (the parity oracle: eager per-client state,
+    every engine feature).  At or above it, building U client objects is
+    exactly the wall this repo's population path removes, so the run is
+    routed through the ``PopulationClock`` + ``PopulationTrainer`` pair
+    instead of refusing at scale — same seeds, same sampling stream, and
+    (sub-threshold, under the trainer's knob matrix) bit-identical
+    history/loss events, pinned by tests/test_population_training.py.
+
+    ``fleet_spec`` is a ``FleetSpec``; returns the driver object after
+    training — ``Simulator`` or ``PopulationTrainer``, both carrying
+    ``history`` / ``loss_events`` / ``evaluate()``.
+    """
+    if fleet_spec.n < run.fleet.population_threshold:
+        sim = Simulator(cfg, fleet=fleet_spec, train=train, test=test,
+                        run=run)
+        sim.run_training(verbose=verbose)
+        return sim
+    from repro.fed.population_training import train_population
+    return train_population(cfg, fleet_spec.population(), run, train, test,
+                            verbose=verbose)

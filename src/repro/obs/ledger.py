@@ -154,6 +154,16 @@ class MemoryLedger:
         total = float(self.server_act[np.asarray(uids, dtype=np.int64)].sum())
         self._push(SERVER_TRACK, t0, t1, total)
 
+    def cohort_span(self, t0: float, t1: float, nbytes: float) -> None:
+        """Cohort-resident adapter + optimizer bytes (population-scale
+        training): the server materializes per-client slots only for the
+        SAMPLED clients, from the wave start until the commit that folds
+        them back into the standing global.  Priced as a transient
+        server-track delta — the static ``server_base`` keeps the eager
+        all-clients figure, so the gap between base and base+cohort curve
+        IS the memory the cohort store saves."""
+        self._push(SERVER_TRACK, t0, t1, float(nbytes))
+
     def set_cut(self, u: int, new_cut: int) -> None:
         """Control-plane migration moved client ``u`` to ``new_cut``:
         re-size the static base and the transient spans going FORWARD

@@ -247,6 +247,133 @@ def test_hierarchical_rejects_bad_partitions(setup):
         agg.hierarchical_aggregate(loras, [1, 1], [[0, 1, 2]])
 
 
+def test_anchored_hierarchical_matches_materialized_absent(setup):
+    """The O(cohort) anchored merge == hierarchical_aggregate with every
+    absent client's (untouched == global) tree materialized explicitly —
+    absent clients contribute exactly their anchor mass of the global."""
+    cfg, model = setup
+    g = _rand_lora(model, 99)
+    fulls = [_rand_lora(model, s) for s in range(4)]
+    ws = [3.0, 1.0, 4.0, 1.5]
+    cells = [[0, 1], [2, 3]]
+    absent = [2.5, 0.5]
+    anch, summ, masses = agg.anchored_hierarchical_aggregate(
+        g, fulls, ws, cells, absent)
+    # materialize: each cell gains one synthetic member holding the global
+    # at the cell's absent mass
+    mat, _, mat_masses = agg.hierarchical_aggregate(
+        fulls + [g, g], ws + absent, [[0, 1, 4], [2, 3, 5]])
+    for a, b in zip(jax.tree.leaves(anch), jax.tree.leaves(mat)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    assert masses == pytest.approx(mat_masses)
+    assert sum(masses) == pytest.approx(sum(ws) + sum(absent))
+
+
+def test_anchored_hierarchical_telescopes_to_flat_anchor(setup):
+    """Property (random cohorts): two-tier anchoring telescopes to the
+    single-tier merge_into_global with the summed absent mass — cell
+    structure cannot change the committed global."""
+    cfg, model = setup
+    rng = np.random.default_rng(3)
+    g = _rand_lora(model, 7)
+    for trial in range(3):
+        n = int(rng.integers(2, 6))
+        fulls = [_rand_lora(model, 50 + 10 * trial + i) for i in range(n)]
+        ws = rng.uniform(0.5, 5.0, size=n).tolist()
+        split = int(rng.integers(0, n + 1))
+        cells = [list(range(split)), list(range(split, n))]
+        absent = rng.uniform(0.0, 4.0, size=2).tolist()
+        anch, _, _ = agg.anchored_hierarchical_aggregate(
+            g, fulls, ws, cells, absent)
+        flat = agg.merge_into_global(g, fulls, ws,
+                                     anchor_weight=sum(absent))
+        for a, b in zip(jax.tree.leaves(anch), jax.tree.leaves(flat)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+
+
+def test_anchored_hierarchical_degenerate_cases(setup):
+    """No absent mass == plain hierarchical; no contributors at all
+    passes the global through unchanged (bit-exact: it is the same
+    aggregate_full_weighted([g],[m]) path a fully-idle commit takes)."""
+    cfg, model = setup
+    g = _rand_lora(model, 11)
+    fulls = [_rand_lora(model, s) for s in range(3)]
+    ws = [1.0, 2.0, 3.0]
+    cells = [[0, 1], [2]]
+    a0, _, m0 = agg.anchored_hierarchical_aggregate(
+        g, fulls, ws, cells, [0.0, 0.0])
+    h0, _, hm = agg.hierarchical_aggregate(fulls, ws, cells)
+    for a, b in zip(jax.tree.leaves(a0), jax.tree.leaves(h0)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    assert m0 == pytest.approx(hm)
+    # empty cohort: every cell idle, anchor mass only
+    idle, _, masses = agg.anchored_hierarchical_aggregate(
+        g, [], [], [[], []], [4.0, 2.0])
+    for a, b in zip(jax.tree.leaves(idle), jax.tree.leaves(g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    assert masses == [4.0, 2.0]
+
+
+def test_anchored_hierarchical_idempotent_recommit(setup):
+    """Re-committing a commit's own output (contributors now AT the
+    global) is a fixed point — the cohort-sampled analog of the
+    aggregation_round idempotence law."""
+    cfg, model = setup
+    g = _rand_lora(model, 13)
+    fulls = [_rand_lora(model, 60 + s) for s in range(3)]
+    ws = [2.0, 1.0, 5.0]
+    cells = [[0, 2], [1]]
+    absent = [1.0, 3.0]
+    out, _, _ = agg.anchored_hierarchical_aggregate(g, fulls, ws, cells,
+                                                    absent)
+    again, _, _ = agg.anchored_hierarchical_aggregate(
+        out, [out] * 3, ws, cells, absent)
+    for a, b in zip(jax.tree.leaves(again), jax.tree.leaves(out)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_anchored_hierarchical_rejects_bad_partitions(setup):
+    cfg, model = setup
+    g = _rand_lora(model, 1)
+    fulls = [_rand_lora(model, s) for s in range(2)]
+    with pytest.raises(ValueError):       # arity
+        agg.anchored_hierarchical_aggregate(g, fulls, [1.0, 1.0],
+                                            [[0, 1]], [1.0, 1.0])
+    with pytest.raises(ValueError):       # shared contributor
+        agg.anchored_hierarchical_aggregate(g, fulls, [1.0, 1.0],
+                                            [[0, 1], [1]], [0.0, 0.0])
+    with pytest.raises(ValueError):       # incomplete cover
+        agg.anchored_hierarchical_aggregate(g, fulls, [1.0, 1.0],
+                                            [[0]], [1.0])
+    with pytest.raises(ValueError):       # negative anchor mass
+        agg.anchored_hierarchical_aggregate(g, fulls, [1.0, 1.0],
+                                            [[0, 1]], [-1.0])
+
+
+def test_staleness_discounted_cohort_weights_conserve(setup):
+    """Cohort sampling + staleness: discounted contributor weights fold
+    into the anchored merge with total mass conserved, and a zero-weight
+    (infinitely stale) contributor drops out exactly."""
+    cfg, model = setup
+    g = _rand_lora(model, 21)
+    fulls = [_rand_lora(model, 30 + s) for s in range(3)]
+    sizes = [10.0, 20.0, 30.0]
+    stale = [0, 2, 5]
+    ws = [s * agg.composed_staleness_discount(st, 1, 0.5)
+          for s, st in zip(sizes, stale)]
+    anch, _, masses = agg.anchored_hierarchical_aggregate(
+        g, fulls, ws, [[0, 1], [2]], [5.0, 7.0])
+    assert sum(masses) == pytest.approx(sum(ws) + 12.0)
+    # a zero-discount contributor is the same as not sampling it
+    zero, _, _ = agg.anchored_hierarchical_aggregate(
+        g, fulls, [ws[0], 0.0, ws[2]], [[0, 1], [2]], [5.0, 7.0])
+    drop, _, _ = agg.anchored_hierarchical_aggregate(
+        g, [fulls[0], fulls[2]], [ws[0], ws[2]], [[0], [1]], [5.0, 7.0])
+    for a, b in zip(jax.tree.leaves(zero), jax.tree.leaves(drop)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
 def test_composed_staleness_discount_properties():
     """(1+s_c)^-a * (1+s_e)^-a: zero-staleness tiers are the identity and
     the composition reduces to the flat discount when one tier is fresh."""

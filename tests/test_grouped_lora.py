@@ -28,6 +28,14 @@ def _cohort(sizes, k, n, r, dtype=jnp.float32):
     return x, w, a, b
 
 
+@pytest.mark.parametrize("mode", ["chunk", "direct", "auto"])
+def test_grouped_parity_representative(mode):
+    """Tier-1 anchor: one ragged cohort through each dispatch mode; the
+    full sizes x (k,n,r) x mode sweep carries ``slow`` below."""
+    test_grouped_parity_sweep((40, 100, 17), 200, 150, 6, mode)
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("sizes", [(40, 100, 17), (128, 128), (1, 1, 1),
                                    (300, 5, 64, 129)])
 @pytest.mark.parametrize("k,n,r", [(200, 150, 6), (128, 128, 16),

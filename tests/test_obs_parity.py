@@ -80,6 +80,14 @@ def _span_keys(tr):
 # vectorized round kernel — the PR-8 discipline grid
 # ---------------------------------------------------------------------------
 
+def test_vectorized_round_obs_is_pure_representative():
+    """Tier-1 anchor: the live-plane "bw" discipline on a shared medium —
+    the obs hooks' busiest path.  The policy x plane grid carries
+    ``slow`` below."""
+    test_vectorized_round_obs_is_pure("bw", "shared")
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("plane_kind", ["none", "constant", "shared"])
 @pytest.mark.parametrize("policy", ["fifo", "wf", "priority", "bw"])
 def test_vectorized_round_obs_is_pure(policy, plane_kind):
@@ -113,6 +121,13 @@ def _times(seed):
         ("fc_bytes", (1e5, 5e6)), ("bc_bytes", (1e5, 5e6)))}
 
 
+def test_async_kernel_obs_is_pure_representative():
+    """Tier-1 anchor: staleness aggregation under the wf heap; the
+    two-cell grid carries ``slow`` below."""
+    test_async_kernel_obs_is_pure_and_matches_engine("wf", "staleness")
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("policy,agg", [("fifo", "buffered"),
                                         ("wf", "staleness")])
 def test_async_kernel_obs_is_pure_and_matches_engine(policy, agg):

@@ -63,6 +63,26 @@ def _assert_same(a, b, ctx):
         == [(r.uids, r.start, r.end) for r in b.service], ctx
 
 
+def test_vectorized_round_bit_exact_representative():
+    """Tier-1 anchor: one cell per axis — every online discipline plus a
+    fixed order, on the constant plane, chunked slots, with a deadline.
+    The exhaustive (plane x slots x chunk x deadline x t_origin) grid
+    carries ``slow`` below."""
+    jobs = _jobs(7)
+    arrays = JobArrays.from_jobs(jobs)
+    plane = next(p for n, p in _planes() if n == "constant")
+    fixed_order = sorted(range(N_JOBS), key=lambda u: -jobs[u].t_s)
+    for policy, order in (("fifo", None), ("wf", None), ("priority", None),
+                          ("bw", None), ("fifo", fixed_order)):
+        kw = dict(policy=policy, order=order, slots=3, cohort_chunk=2,
+                  chunk_efficiency=0.8, deadline=6.0, network=plane,
+                  t_origin=37.5)
+        ref = simulate_round([Job(**vars(j)) for j in jobs], **kw)
+        vec = vectorized_round(arrays, **kw)
+        _assert_same(ref, vec, (policy, order is not None))
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("plane_name,plane", list(_planes()),
                          ids=[n for n, _ in _planes()])
 def test_vectorized_round_bit_exact_grid(plane_name, plane):
@@ -114,6 +134,67 @@ def test_job_arrays_lazy_cohort_materialization():
         == [fleet.links()[i].rate_mbps for i in sel]
     assert [d.name for d in fleet.devices(sel)] \
         == [fleet.devices()[i].name for i in sel]
+
+
+def test_lazy_cohort_views_property_roundtrip():
+    """Property (random index vectors, permutations, duplicates): every
+    lazy view — to_jobs(idx), take(idx), links(idx), devices(idx) — equals
+    slicing the full materialization, including repeated uids (a client
+    sampled into two chunks materializes twice, identically)."""
+    jobs = _jobs(17)
+    arrays = JobArrays.from_jobs(jobs)
+    spec = FleetSpec(n=N_JOBS, seed=21, link_model="constant")
+    fleet = spec.population()
+    full_links = spec.links()
+    full_devs = spec.devices()
+    rng = np.random.default_rng(31)
+    perms = [rng.permutation(N_JOBS).tolist(),            # full shuffle
+             rng.integers(0, N_JOBS, size=7).tolist(),    # duplicates
+             [3, 3, 3],                                   # pure repeats
+             [],                                          # empty cohort
+             [N_JOBS - 1]]
+    for sel in perms:
+        assert arrays.to_jobs(sel) == [jobs[i] for i in sel]
+        sub = arrays.take(sel)
+        assert sub.to_jobs() == [jobs[i] for i in sel]
+        assert sub.uids.tolist() == [jobs[i].uid for i in sel]
+        assert [l.rate_mbps for l in fleet.links(sel)] \
+            == [full_links[i].rate_mbps for i in sel]
+        # names come from the view's own namespace; the capability draws
+        # must match the scalar-stream devices() materialization
+        assert [d.tflops for d in fleet.devices(sel)] \
+            == [full_devs[i].tflops for i in sel]
+        full_view = fleet.devices()
+        assert [(d.name, d.mem_gb) for d in fleet.devices(sel)] \
+            == [(full_view[i].name, full_view[i].mem_gb) for i in sel]
+
+
+def test_lazy_take_composes_like_fancy_indexing():
+    """take(a).take(b) == take(a[b]) — the view algebra the cohort
+    pipeline relies on when a chunk of a sampled cohort is re-sliced."""
+    arrays = JobArrays.from_jobs(_jobs(23))
+    outer = [9, 1, 4, 4, 0]
+    inner = [2, 2, 4]
+    once = arrays.take([outer[i] for i in inner])
+    twice = arrays.take(outer).take(inner)
+    assert once.to_jobs() == twice.to_jobs()
+
+
+def test_population_seed_stream_pinning_is_orderless():
+    """population() and devices()/links() must agree no matter which
+    materialization happens first — each pulls a fresh seed-derived
+    stream, so interleaving cannot skew the draws."""
+    a = FleetSpec(n=9, seed=13, link_model="constant")
+    pop_first = a.population()
+    devs_after = a.devices()
+    b = FleetSpec(n=9, seed=13, link_model="constant")
+    devs_first = b.devices()
+    pop_after = b.population()
+    np.testing.assert_array_equal(pop_first.tflops, pop_after.tflops)
+    np.testing.assert_array_equal(pop_first.rate_mbps, pop_after.rate_mbps)
+    assert [d.tflops for d in devs_after] == [d.tflops for d in devs_first]
+    np.testing.assert_array_equal(pop_first.tflops,
+                                  [d.tflops for d in devs_first])
 
 
 # ---------------------------------------------------------------------------
@@ -259,6 +340,16 @@ def pop_cfg():
     return tiny("bert-base", n_layers=4, d_model=64)
 
 
+def test_population_clock_mode_parity_representative(pop_cfg):
+    """Tier-1 anchor: pareto sampling + stragglers over plane transport —
+    the cell touching the most machinery.  The full fleet_cfg x transport
+    grid carries ``slow`` below."""
+    test_population_clock_mode_parity(
+        pop_cfg, FleetConfig(sampling="pareto", rate=0.5,
+                             straggler_prob=0.3), "plane")
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("fleet_cfg", [
     FleetConfig(sampling="uniform", rate=0.5),
     FleetConfig(sampling="pareto", rate=0.5, straggler_prob=0.3),

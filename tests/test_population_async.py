@@ -65,6 +65,14 @@ GRID = [
 ]
 
 
+def test_async_kernel_bit_exact_representative():
+    """Tier-1 anchor: one row per axis family — the live-plane "bw"
+    re-keying under staleness aggregation with chunked slots, plus the
+    zero-byte payload handling.  The exhaustive GRID carries ``slow``."""
+    test_async_kernel_bit_exact_grid("bw", "staleness", 3, 2, 3, 2, 3, True)
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("zero_bytes", [False, True],
                          ids=["payloads", "zero-byte-rows"])
 @pytest.mark.parametrize("policy,agg,k,inflight,slots,chunk,rounds", GRID)
@@ -131,6 +139,13 @@ def test_async_kernel_rejects_bad_inputs():
             up_rate_mbps=rates[:-1], down_rate_mbps=rates)
 
 
+def test_population_clock_async_parity_representative():
+    """Tier-1 anchor: the paper's scheduler under staleness aggregation.
+    The scheduler x policy grid carries ``slow`` below."""
+    test_population_clock_async_parity("ours", "staleness")
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("scheduler", ["ours", "bw", "wf"])
 @pytest.mark.parametrize("policy", ["buffered", "staleness"])
 def test_population_clock_async_parity(scheduler, policy):

@@ -1,0 +1,301 @@
+"""Real-math training on sampled cohorts: the cross-engine parity harness.
+
+The ``PopulationClock`` + ``PopulationTrainer`` pair (timing kernels
+driving the jitted client-forward / server-step / client-backward /
+aggregation math) must reproduce the per-object ``Simulator`` run
+BIT-FOR-BIT under matching seeds: every loss event float, every history
+row, every global adapter leaf, and the makespan.  Below
+``population_threshold`` the Simulator is the oracle; at/above it the
+trainer switches to the anchored cohort-merge path, which has no
+per-object twin — there the contract is finite decreasing loss on real
+adapters plus the cohort-resident memory story.
+
+Representative rows from each parity axis run in tier-1; the exhaustive
+grid carries ``slow`` (the population-smoke CI job runs the default
+selection of this file).
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.data import make_emotion_dataset
+from repro.fed.config import (AggConfig, EngineConfig, FedRunConfig,
+                              FleetConfig, NetConfig,
+                              validate_population_training)
+from repro.fed.fleet import FleetSpec
+from repro.fed.population_training import PopulationTrainer, train_population
+from repro.fed.simulator import Simulator, run_federated_training
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny("bert-base", n_layers=4, d_model=128).with_(vocab_size=4096,
+                                                           max_position=64)
+    train = make_emotion_dataset(900, seq_len=32, vocab_size=4096, seed=0)
+    test = make_emotion_dataset(240, seq_len=32, vocab_size=4096, seed=1)
+    return cfg, train, test
+
+
+SPEC = dict(n=6, seed=3, link_model="constant")
+
+
+def _run_cfg(**kw):
+    """Shared run skeleton; ``net=custom`` pins the Simulator's link plane
+    to the FleetSpec stream the population path uses."""
+    base = dict(batch_size=8, seq_len=32, lr=3e-3,
+                net=NetConfig(link_model="custom"))
+    base.update(kw)
+    return FedRunConfig(**base)
+
+
+def _hist(sim_like):
+    """History rows with nan-normalized mean_loss (nan != nan would fail
+    an otherwise bit-identical comparison; the Simulator records nan when
+    an async commit lands on an empty wave)."""
+    return [(r.round, r.sim_time_s,
+             None if math.isnan(r.mean_loss) else r.mean_loss,
+             r.accuracy, r.f1)
+            for r in sim_like.history]
+
+
+def _assert_parity(sim, tr):
+    assert tr.loss_events == sim.loss_events
+    assert _hist(tr) == _hist(sim)
+    same = jax.tree.map(lambda a, b: bool(np.asarray(a == b).all()),
+                        sim._global_full, tr.store.global_full)
+    assert all(jax.tree.leaves(same))
+    assert tr.clock_result.makespan == sim.sim_clock
+
+
+def _both(setup, mkrun):
+    """One Simulator run and one PopulationClock+trainer run under the
+    same seeds: the Simulator gets the FleetSpec (auto-links via
+    ``link_model=custom``), the trainer its lazy population twin."""
+    cfg, train, test = setup
+    spec = FleetSpec(**SPEC)
+    sim = Simulator(cfg, fleet=spec, train=train, test=test, run=mkrun())
+    sim.run_training()
+    tr = train_population(cfg, spec.population(), mkrun(), train, test)
+    return sim, tr
+
+
+# ---------------------------------------------------------------------------
+# sync parity: sampling x cohort_impl x {flat, hierarchical}
+# ---------------------------------------------------------------------------
+
+def _sync_run(sampling, impl, cells):
+    return _run_cfg(
+        rounds=4, eval_every=2,
+        engine=EngineConfig(mode="event", scheduler="ours", slots=2,
+                            cohort_chunk=2, cohort_impl=impl),
+        agg=AggConfig(policy="sync", interval=2),
+        fleet=FleetConfig(sampling=sampling, rate=0.6, edge_cells=cells))
+
+
+SYNC_GRID = [(s, i, c)
+             for s in ("uniform", "pareto")
+             for i in ("vmap", "ragged")
+             for c in (1, 2)]
+_REPRESENTATIVE = ("pareto", "vmap", 1)
+
+
+def _sync_ids(cell):
+    s, i, c = cell
+    return f"{s}-{i}-{'hier' if c > 1 else 'flat'}"
+
+
+def test_sync_parity_representative(setup):
+    """Tier-1 anchor: pareto-sampled cohorts, vmap batched server step,
+    flat commits — bit-identical across both engines."""
+    sampling, impl, cells = _REPRESENTATIVE
+    sim, tr = _both(setup, lambda: _sync_run(sampling, impl, cells))
+    _assert_parity(sim, tr)
+    assert len(tr.loss_events) > 0
+    assert all(math.isfinite(ls) for _, _, _, ls in tr.loss_events)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("cell",
+                         [c for c in SYNC_GRID if c != _REPRESENTATIVE],
+                         ids=_sync_ids)
+def test_sync_parity_grid(setup, cell):
+    """The exhaustive sync grid: every remaining sampling x cohort_impl x
+    topology cell."""
+    sampling, impl, cells = cell
+    sim, tr = _both(setup, lambda: _sync_run(sampling, impl, cells))
+    _assert_parity(sim, tr)
+
+
+# ---------------------------------------------------------------------------
+# async parity: buffered / staleness (full participation, flat — the only
+# cells the async validation matrix admits)
+# ---------------------------------------------------------------------------
+
+def _async_run(policy, impl):
+    return _run_cfg(
+        rounds=3, eval_every=2,
+        engine=EngineConfig(mode="event", scheduler="ours", slots=2,
+                            cohort_chunk=2, cohort_impl=impl),
+        agg=AggConfig(policy=policy, interval=1,
+                      buffer_k=3 if policy == "buffered" else None,
+                      max_inflight=2,
+                      staleness_alpha=0.5 if policy == "staleness" else None),
+        fleet=FleetConfig(sampling="full"))
+
+
+def test_async_parity_representative(setup):
+    """Tier-1 anchor for the async lineage: buffered k-of-U commits with
+    real delta merges and version-race discards."""
+    sim, tr = _both(setup, lambda: _async_run("buffered", "vmap"))
+    _assert_parity(sim, tr)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy,impl", [("buffered", "ragged"),
+                                         ("staleness", "vmap"),
+                                         ("staleness", "ragged")])
+def test_async_parity_grid(setup, policy, impl):
+    """Staleness-discounted merges and the ragged server step, same
+    bit-exactness bar."""
+    sim, tr = _both(setup, lambda: _async_run(policy, impl))
+    _assert_parity(sim, tr)
+
+
+# ---------------------------------------------------------------------------
+# anchored mode (>= population_threshold): no per-object twin; the
+# contract is real training — finite, decreasing loss on real adapters
+# ---------------------------------------------------------------------------
+
+def test_anchored_mode_trains(setup):
+    """At/above the threshold only sampled clients hold materialized
+    state: the anchored merge must still train (finite decreasing loss,
+    adapters move) and the resident footprint stays a cohort, not a
+    fleet."""
+    cfg, train, test = setup
+    spec = FleetSpec(n=12, seed=3, link_model="constant")
+    run = _run_cfg(
+        rounds=6, eval_every=100,
+        engine=EngineConfig(mode="event", scheduler="ours", slots=2,
+                            cohort_chunk=2),
+        agg=AggConfig(policy="sync", interval=1),
+        fleet=FleetConfig(sampling="pareto", rate=0.3,
+                          population_threshold=1))
+    tr = train_population(cfg, spec.population(), run, train, test)
+    assert not tr.exact
+    losses = [ls for _, _, _, ls in tr.loss_events]
+    assert losses and all(math.isfinite(x) for x in losses)
+    # real training: the tail of the loss stream sits below the head
+    k = max(1, len(losses) // 3)
+    assert np.mean(losses[-k:]) < np.mean(losses[:k])
+    moved = jax.tree.map(lambda a, b: bool(np.asarray(a != b).any()),
+                         tr.store.global_full,
+                         tr.model.init_lora(jax.random.PRNGKey(run.seed + 1)))
+    assert any(jax.tree.leaves(moved))
+    # cohort-resident state only: never more slots than the largest cohort
+    assert len(tr.store.touched()) <= max(tr.clock_result.cohort_sizes)
+
+
+@pytest.mark.slow
+def test_population_scale_trains():
+    """The headline scale row: a 10^4-client Pareto-sampled fleet trains
+    real LoRA adapters through the vectorized clock end-to-end."""
+    cfg = tiny("bert-base", n_layers=4, d_model=64).with_(vocab_size=4096,
+                                                          max_position=64)
+    n = 10_000
+    train = make_emotion_dataset(8 * n, seq_len=16, vocab_size=4096, seed=0)
+    fleet = FleetSpec(n=n, seed=0, link_model="constant").population()
+    run = FedRunConfig(
+        rounds=5, batch_size=8, seq_len=16, lr=1e-2, eval_every=100,
+        engine=EngineConfig(mode="event", scheduler="ours", slots=4,
+                            cohort_chunk=8),
+        agg=AggConfig(policy="sync", interval=1),
+        # threshold below the ~30-client cohort so the per-round kernels
+        # dispatch vectorized too (mode switching keys on cohort size)
+        fleet=FleetConfig(sampling="pareto", rate=0.003,
+                          population_threshold=20))
+    tr = train_population(cfg, fleet, run, train)
+    assert set(tr.clock_result.modes) == {"vectorized"}
+    losses = [ls for _, _, _, ls in tr.loss_events]
+    assert losses and all(math.isfinite(x) for x in losses)
+    k = max(1, len(losses) // 3)
+    assert np.mean(losses[-k:]) < np.mean(losses[:k])
+    # resident slots stay a cohort (~30 clients), not 10^4
+    assert len(tr.store.touched()) < 200
+
+
+# ---------------------------------------------------------------------------
+# threshold routing + validation rows
+# ---------------------------------------------------------------------------
+
+def test_run_federated_training_routes_on_threshold(setup):
+    """fleet.size >= population_threshold now routes through the clock
+    instead of refusing; below it the per-object Simulator runs — and the
+    two entry points agree bit-for-bit below threshold."""
+    cfg, train, test = setup
+    spec = FleetSpec(**SPEC)
+    mk = lambda: _sync_run(*_REPRESENTATIVE)  # noqa: E731
+    sim = run_federated_training(cfg, spec, mk(), train, test)
+    assert isinstance(sim, Simulator)
+    big = _run_cfg(rounds=2, eval_every=100,
+                   engine=EngineConfig(mode="event", scheduler="ours",
+                                       slots=2, cohort_chunk=2),
+                   agg=AggConfig(policy="sync", interval=1),
+                   fleet=FleetConfig(sampling="uniform", rate=0.5,
+                                     population_threshold=2))
+    tr = run_federated_training(cfg, spec, big, train, test)
+    assert isinstance(tr, PopulationTrainer)
+    assert not tr.exact
+    assert tr.loss_events
+
+
+def test_validation_rejects_unreplicable_streams():
+    """Knobs whose per-object rng streams the trainer cannot replicate
+    (or that have no population-path implementation) are refused up
+    front, not silently diverged from."""
+    ok = FedRunConfig(rounds=1, engine=EngineConfig(mode="event",
+                                                    scheduler="ours"))
+    validate_population_training(ok, 8)
+    bad = [
+        FedRunConfig(rounds=1, scheme="sfl",
+                     engine=EngineConfig(mode="event", scheduler="ours")),
+        FedRunConfig(rounds=1, engine=EngineConfig(mode="analytic")),
+        FedRunConfig(rounds=1,
+                     engine=EngineConfig(mode="event", scheduler="ours"),
+                     fleet=FleetConfig(straggler_prob=0.3)),
+        FedRunConfig(rounds=1,
+                     engine=EngineConfig(mode="event", scheduler="ours"),
+                     net=NetConfig(quantize="int8")),
+        FedRunConfig(rounds=1,
+                     engine=EngineConfig(mode="event", scheduler="ours"),
+                     agg=AggConfig(transport="plane")),
+        FedRunConfig(rounds=1,
+                     engine=EngineConfig(mode="event", scheduler="ours"),
+                     snapshot_every=0.5, snapshot_dir="x"),
+    ]
+    for rc in bad:
+        with pytest.raises(ValueError):
+            validate_population_training(rc, 8)
+
+
+def test_trainer_cohort_ledger_prices_resident_bytes(setup):
+    """obs on: the ledger carries cohort-resident spans and the metrics
+    registry sees the commit counters — with the timeline unperturbed."""
+    from repro.obs import MemoryLedger, MetricsRegistry, Observability
+    cfg, train, test = setup
+    spec = FleetSpec(**SPEC)
+    run = _sync_run(*_REPRESENTATIVE)
+    off = train_population(cfg, spec.population(), run, train, test)
+    obs = Observability(
+        metrics=MetricsRegistry(),
+        ledger=MemoryLedger(np.full(spec.n, 100.0), np.ones(spec.n),
+                            np.ones(spec.n), 50.0))
+    on = train_population(cfg, spec.population(), _sync_run(*_REPRESENTATIVE),
+                          train, test, obs=obs)
+    assert on.loss_events == off.loss_events
+    assert on.clock_result.makespan == off.clock_result.makespan
+    assert obs.metrics.counter_value("commits") > 0
+    # cohort-resident adapter+opt state shows up as server-track pressure
+    assert obs.ledger.server_peak() > 50.0
